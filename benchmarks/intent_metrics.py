@@ -1,0 +1,62 @@
+"""Shared intent-benchmark machinery: run a corpus through an orchestrator
+and aggregate the paper's four metrics (success, checks/task, completion
+time, tokens/task)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import CORPUS, DeterministicInterpreter, Orchestrator, satisfies
+
+
+def run_corpus(interpreter=None, entries=None, stabilization_s: float = 0.0
+               ) -> List[Dict]:
+    """Returns one record per intent: domain/complexity/success/checks/
+    time/tokens. Success uses the benchmark (gold-assertion) criterion,
+    exactly like the paper's validator."""
+    orch = Orchestrator(interpreter=interpreter,
+                        stabilization_s=stabilization_s)
+    gold_parser = DeterministicInterpreter()
+    out = []
+    for e in (entries or CORPUS):
+        t0 = time.time()
+        r = orch.submit(e.text)
+        wall = time.time() - t0
+        if r.success:
+            gold = gold_parser.interpret(e.text, orch.fabric,
+                                         orch.components).intent
+            ok, _ = satisfies(gold, r.policy.config, orch.fabric,
+                              orch.components)
+            outcome = "enforce" if ok else "fail-open-detected"
+        else:
+            outcome = "fail-closed"
+        success = outcome == ("enforce" if e.expect == "enforce"
+                              else "fail-closed")
+        out.append({
+            "domain": e.domain,
+            "complexity": e.complexity,
+            "success": success,
+            "checks": r.report.n_checks,
+            "time_s": wall,
+            "tokens": r.prompt_tokens + r.completion_tokens,
+        })
+    return out
+
+
+def aggregate(records: Sequence[Dict], key: Optional[str] = None) -> Dict:
+    def agg(rs):
+        n = max(len(rs), 1)
+        return {
+            "n": len(rs),
+            "success_rate": 100.0 * sum(r["success"] for r in rs) / n,
+            "avg_checks": sum(r["checks"] for r in rs) / n,
+            "avg_time_s": sum(r["time_s"] for r in rs) / n,
+            "avg_tokens": sum(r["tokens"] for r in rs) / n,
+        }
+
+    if key is None:
+        return {"overall": agg(records)}
+    groups: Dict[str, list] = {}
+    for r in records:
+        groups.setdefault(r[key], []).append(r)
+    return {k: agg(v) for k, v in sorted(groups.items())}

@@ -1,0 +1,56 @@
+"""§Perf hillclimbing helper: run one tagged dry-run variant and print the
+three roofline terms next to a reference record.
+
+    PYTHONPATH=src python -m benchmarks.perf --arch mamba2-370m \
+        --shape train_4k --tag A1_no_tp \
+        --plan '{"tp_axis": null, "batch_axes": ["data","model"], "fsdp_axes": ["data","model"]}'
+
+Records land in experiments/perf/<arch>__<shape>__16x16__<tag>.json.
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+
+def run(tag: str, arch: str, shape: str, *, multi_pod: bool = False,
+        out="experiments/perf", **kw):
+    from repro.launch.dryrun import run_cell
+    plan_overrides = kw.pop("plan_overrides", None)
+    rec = run_cell(arch, shape, multi_pod, Path(out),
+                   plan_overrides=plan_overrides, tag=tag, **kw)
+    if rec.get("status") == "ok":
+        rf = rec["roofline"]
+        print(f"[{tag}] compute={rf['compute_s']:.4f}s "
+              f"memory={rf['memory_s']:.4f}s "
+              f"collective={rf['collective_s']:.4f}s "
+              f"bottleneck={rf['bottleneck']} rf={rf['roofline_fraction']:.3f} "
+              f"peak={rec['memory']['peak_bytes']/2**30:.1f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plan", default=None, help="JSON plan overrides")
+    ap.add_argument("--kw", default=None, help="JSON lower_cell kwargs")
+    args = ap.parse_args()
+    kw = json.loads(args.kw) if args.kw else {}
+    if args.plan:
+        plan = json.loads(args.plan)
+        for k, v in list(plan.items()):
+            if isinstance(v, list):
+                plan[k] = tuple(v)
+        kw["plan_overrides"] = plan
+    run(args.tag, args.arch, args.shape, multi_pod=args.multi_pod, **kw)
+
+
+if __name__ == "__main__":
+    main()

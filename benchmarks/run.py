@@ -1,0 +1,214 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows. Each benchmark mirrors a paper
+artifact (see DESIGN.md §7 for the index):
+
+  table7_*            — GPT-4o overall performance table (paper Table 7)
+  fig7_*              — interpreter-backend comparison (paper Fig. 7)
+  fig9_<domain>_*     — per-domain metrics (paper Figs. 8/9)
+  fig11_<cplx>_*      — per-complexity metrics (paper Figs. 10/11)
+  failmode_*          — §6.3 failure-mode detection rates
+  reconfig_*          — downtime / TTFT / TPOT around an online plan swap
+                        (calibration-band metrics)
+  roofline summary    — printed per (arch x shape) from the dry-run records
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+ROWS = []
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    ROWS.append((name, value, derived))
+    print(f"{name},{value},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_table7_overall() -> None:
+    from benchmarks.intent_metrics import aggregate, run_corpus
+    records = run_corpus()
+    a = aggregate(records)["overall"]
+    emit("table7_tasks", a["n"])
+    emit("table7_accuracy_pct", round(a["success_rate"], 1),
+         "paper GPT-4o: 95.6")
+    emit("table7_avg_checks_per_task", round(a["avg_checks"], 2),
+         "paper: 3.7")
+    emit("table7_avg_time_s", round(a["avg_time_s"], 4),
+         "paper: 20.97 (incl. real K8s/ONOS+LLM API latency)")
+    emit("table7_avg_tokens", round(a["avg_tokens"], 0), "paper: 15133")
+
+
+def bench_fig7_backend_comparison() -> None:
+    from benchmarks.intent_metrics import aggregate, run_corpus
+    from repro.core import DeterministicInterpreter, FaultyInterpreter
+    backends = [
+        ("det-parser", DeterministicInterpreter()),
+        ("degraded-10pct", FaultyInterpreter(name="degraded-10", rate=0.10)),
+        ("degraded-25pct", FaultyInterpreter(name="degraded-25", rate=0.25)),
+    ]
+    for name, be in backends:
+        a = aggregate(run_corpus(interpreter=be))["overall"]
+        emit(f"fig7_{name}_accuracy_pct", round(a["success_rate"], 1),
+             "paper: gpt4o=95.6 claude=86.7 deepseek=77.8")
+        emit(f"fig7_{name}_avg_time_s", round(a["avg_time_s"], 4))
+        emit(f"fig7_{name}_avg_tokens", round(a["avg_tokens"], 0))
+
+
+def bench_fig9_domains() -> None:
+    from benchmarks.intent_metrics import aggregate, run_corpus
+    records = run_corpus()
+    for dom, a in aggregate(records, key="domain").items():
+        emit(f"fig9_{dom}_accuracy_pct", round(a["success_rate"], 1),
+             "paper: computing=100 networking=90.3 hybrid=96.7")
+        emit(f"fig9_{dom}_avg_checks", round(a["avg_checks"], 2),
+             "paper: computing=1.8 networking=3.7 hybrid=5.5")
+        emit(f"fig9_{dom}_avg_time_s", round(a["avg_time_s"], 4))
+        emit(f"fig9_{dom}_avg_tokens", round(a["avg_tokens"], 0))
+
+
+def bench_fig11_complexity() -> None:
+    from benchmarks.intent_metrics import aggregate, run_corpus
+    records = run_corpus()
+    for cplx, a in aggregate(records, key="complexity").items():
+        emit(f"fig11_{cplx}_accuracy_pct", round(a["success_rate"], 1))
+        emit(f"fig11_{cplx}_avg_checks", round(a["avg_checks"], 2),
+             "paper: simple=1.1 complex=5.6")
+        emit(f"fig11_{cplx}_avg_time_s", round(a["avg_time_s"], 4))
+
+
+def bench_failure_modes() -> None:
+    """Each §6.3 failure mode injected at rate 1.0: how often the pipeline
+    detects it (fail-closed or gold-assertion catch)."""
+    from benchmarks.intent_metrics import run_corpus
+    from repro.core import FaultyInterpreter
+    for mode in ("first_clause", "empty_path", "hallucinated_label",
+                 "partial_topology"):
+        be = FaultyInterpreter(name=f"fault-{mode}", rate=1.0, modes=(mode,))
+        records = run_corpus(interpreter=be)
+        emit(f"failmode_{mode}_success_pct",
+             round(100.0 * sum(r["success"] for r in records) / len(records), 1),
+             "success = fault harmless or caught fail-closed")
+
+
+def bench_reconfig_serving() -> None:
+    """Online reconfiguration on a live engine: downtime + TTFT/TPOT before
+    vs after the swap (calibration-band metrics)."""
+    import dataclasses as dc
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.core import ReconfigEngine
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = dc.replace(get_reduced_config("qwen2_moe_a2_7b"),
+                     param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, n_slots=4, s_max=48)
+    rng = np.random.default_rng(0)
+
+    def load(n, base):
+        for rid in range(n):
+            eng.submit(Request(
+                base + rid,
+                rng.integers(2, cfg.vocab_size, size=8).astype(np.int32),
+                max_new_tokens=8))
+
+    load(8, 0)
+    eng.run()
+    before = eng.metrics()
+
+    rc = ReconfigEngine(eng)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    report = rc.reconfigure(new_shardings={
+        "params": jax.tree.map(lambda _: repl, eng.params),
+        "cache": jax.tree.map(lambda _: repl, eng.cache)})
+
+    eng.done.clear()
+    load(8, 100)
+    eng.run()
+    after = eng.metrics()
+
+    emit("reconfig_prepare_s", round(report.prepare_s, 4),
+         "background compile (serving continues)")
+    emit("reconfig_downtime_s", round(report.downtime_s, 4),
+         "blocking swap window")
+    emit("reconfig_migrated_MiB", round(report.migrate_bytes / 2**20, 2))
+    emit("reconfig_ttft_before_s", round(before["ttft_mean_s"], 4))
+    emit("reconfig_ttft_after_s", round(after["ttft_mean_s"], 4))
+    emit("reconfig_tpot_before_s", round(before["tpot_mean_s"], 4))
+    emit("reconfig_tpot_after_s", round(after["tpot_mean_s"], 4))
+
+
+def bench_roofline_table() -> None:
+    """Summarize the dry-run records (single-pod mesh) — §Roofline."""
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        emit("roofline_records", 0, "run repro.launch.dryrun --all first")
+        return
+    n = 0
+    for f in sorted(d.glob("*__16x16.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        n += 1
+        rf = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}_bottleneck",
+             rf["bottleneck"].replace("_s", ""),
+             f"rf={rf['roofline_fraction']:.3f} "
+             f"useful={rf['useful_flops_ratio']:.2f}")
+    emit("roofline_records", n)
+
+
+def bench_kernel_latency() -> None:
+    """Interpret-mode kernel sanity timings (not TPU perf — correctness
+    plumbing only)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(ops.flash_attention(q, k, v, causal=True))
+    emit("kernel_flash_interpret_us_per_call",
+         round((time.time() - t0) / 3 * 1e6, 0), "interpret mode on CPU")
+
+
+BENCHES = [
+    bench_table7_overall,
+    bench_fig7_backend_comparison,
+    bench_fig9_domains,
+    bench_fig11_complexity,
+    bench_failure_modes,
+    bench_reconfig_serving,
+    bench_kernel_latency,
+    bench_roofline_table,
+]
+
+
+def main() -> None:
+    print("name,value,derived")
+    for b in BENCHES:
+        t0 = time.time()
+        b()
+        emit(f"_bench_{b.__name__}_wall_s", round(time.time() - t0, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.tables [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load(d: Path):
+    recs = {}
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table(recs, mesh: str) -> str:
+    rows = ["| arch | shape | compile_s | peak GiB | fits 16GiB | HLO TFLOP/dev | HLO GB/dev | wire GB/dev (ici/dcn) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or r.get("status") != "ok":
+            continue
+        c = r["collectives"]
+        rows.append(
+            f"| {arch} | {shape} | {r['compile_s']} | "
+            f"{fmt_bytes(r['memory']['peak_bytes'])} | "
+            f"{'Y' if r['memory']['fits'] else 'N'} | "
+            f"{r['cost']['hlo_flops_per_device']/1e12:.2f} | "
+            f"{r['cost']['hlo_bytes_per_device']/1e9:.1f} | "
+            f"{c.get('ici_bytes', c['wire_bytes_per_device'])/1e9:.2f}"
+            f"/{c.get('dcn_bytes', 0)/1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | bottleneck | MODEL_FLOPS | useful ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['bottleneck'].replace('_s','')} | "
+            f"{rf['model_flops']:.2e} | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", default="roofline",
+                    choices=("roofline", "dryrun"))
+    args = ap.parse_args()
+    recs = load(Path(args.dir))
+    if args.kind == "roofline":
+        print(roofline_table(recs, args.mesh))
+    else:
+        print(dryrun_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

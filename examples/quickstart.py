@@ -1,0 +1,45 @@
+"""Quickstart: natural-language privacy intent -> enforced fabric config.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's full control loop on the two-pod fabric model: interpret,
+compile (placement + routing), fail-closed validation, apply; then shows a
+deliberately unenforceable intent being rejected.
+"""
+import json
+
+from repro.core import Orchestrator
+
+orch = Orchestrator()
+
+INTENTS = [
+    "Ensure all personal health data remains within the European Union.",
+    "Traffic from host 2 to host 4 must traverse switch s8 and avoid "
+    "huawei switches.",
+    "Place phi workloads on eu nodes and ensure their traffic avoids "
+    "untrusted switches.",
+    # unenforceable: no financial workload exists -> must fail closed
+    "Prohibit financial database service deployment in the cloud zone.",
+]
+
+for text in INTENTS:
+    print("=" * 72)
+    print("INTENT:", text)
+    r = orch.submit(text)
+    print("  domain      :", r.policy.intent.domain,
+          "/", r.policy.intent.complexity)
+    print("  validator   :", r.report.summary())
+    for c in r.report.checks:
+        print(f"    [{'ok' if c.passed else 'XX'}] {c.name}: {c.detail[:80]}")
+    print("  applied     :", r.applied)
+    print("  tokens      :", r.prompt_tokens + r.completion_tokens,
+          " latency: %.1f ms" % (r.total_s * 1e3))
+    if r.applied and r.policy.manifests:
+        print("  manifest[0] :", json.dumps(r.policy.manifests[0])[:110])
+    if r.applied and r.policy.flow_rules:
+        print("  flow_rule[0]:", json.dumps(r.policy.flow_rules[0])[:110])
+
+print("=" * 72)
+print("final placement:", orch.state.placement)
+print("installed flows:", len(orch.state.flow_rules), "rules over",
+      len(orch.state.flows), "paths")

@@ -1,0 +1,113 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one .npz of flattened leaves + a JSON manifest (treedef, shapes,
+dtypes, step). `load_checkpoint` places leaves under *target* shardings, so
+restore works onto a different mesh / plan than the one that saved — the
+elastic-scaling path (lose a pod, restore onto the survivor mesh and keep
+going). Writes are atomic (tmp + rename) and retained with a configurable
+history for failure rollback.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: PyTree,
+                    *, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    names, leaves, _ = _flatten_with_paths(tree)
+
+    def to_np(leaf):
+        arr = np.asarray(leaf)
+        # np.savez cannot round-trip ml_dtypes (bfloat16 etc.) — store as
+        # fp32 and cast back on restore
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            arr = np.asarray(jax.numpy.asarray(leaf).astype("float32"))
+        return arr
+
+    arrays = {f"leaf_{i}": to_np(leaf) for i, leaf in enumerate(leaves)}
+
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    np.savez(tmp / "leaves.npz", **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "names": names,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        # already saved (restart raced) — keep existing
+        for f in tmp.iterdir():
+            f.unlink()
+        tmp.rmdir()
+        return final
+    os.rename(tmp, final)
+
+    # retention
+    ckpts = sorted(p for p in ckpt_dir.iterdir() if p.name.startswith("step_"))
+    for old in ckpts[:-keep]:
+        for f in old.iterdir():
+            f.unlink()
+        old.rmdir()
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+             if p.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str | Path, like: PyTree, *,
+                    step: Optional[int] = None,
+                    shardings: Optional[PyTree] = None
+                    ) -> Tuple[int, PyTree]:
+    """Restore into the structure of `like`; leaves placed under `shardings`
+    (elastic restore: any mesh works)."""
+    ckpt_dir = Path(ckpt_dir)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    data = np.load(d / "leaves.npz")
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    names_like, leaves_like, treedef = _flatten_with_paths(like)
+    by_name = dict(zip(manifest["names"],
+                       [data[f"leaf_{i}"] for i in range(len(manifest["names"]))]))
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves_like))
+
+    out = []
+    for name, leaf, sh in zip(names_like, leaves_like, shard_leaves):
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        target_dtype = jax.numpy.asarray(leaf).dtype
+        arr = jax.numpy.asarray(by_name[name]).astype(target_dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return step, jax.tree_util.tree_unflatten(treedef, out)

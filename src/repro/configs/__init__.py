@@ -1,0 +1,83 @@
+"""Architecture config registry.
+
+Each assigned architecture lives in its own module exposing ``CONFIG``
+(the exact published configuration) and ``reduced()`` (a tiny same-family
+config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    EncDecConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPE_CELLS,
+    ShapeCell,
+    SSMConfig,
+    get_shape_cell,
+)
+
+ARCH_IDS: List[str] = [
+    "whisper_large_v3",
+    "minicpm3_4b",
+    "nemotron_4_340b",
+    "minitron_4b",
+    "deepseek_coder_33b",
+    "qwen2_vl_2b",
+    "qwen2_moe_a2_7b",
+    "moonshot_v1_16b_a3b",
+    "jamba_v0_1_52b",
+    "mamba2_370m",
+]
+
+# canonical dashed ids (CLI) -> module names
+_ALIASES: Dict[str, str] = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({
+    "whisper-large-v3": "whisper_large_v3",
+    "minicpm3-4b": "minicpm3_4b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "minitron-4b": "minitron_4b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "mamba2-370m": "mamba2_370m",
+})
+
+
+def _module(arch: str):
+    key = _ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown architecture {arch!r}; known: {sorted(_ALIASES)}")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: importlib.import_module(f"repro.configs.{a}").CONFIG for a in ARCH_IDS}
+
+
+def applicable_cells(cfg: ModelConfig) -> List[ShapeCell]:
+    """Shape cells that actually run for this architecture.
+
+    ``long_500k`` requires sub-quadratic sequence mixing and is only run for
+    SSM/hybrid families (see DESIGN.md §4); it is recorded as a skip for the
+    pure full-attention architectures.
+    """
+    cells = []
+    for c in SHAPE_CELLS:
+        if c.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            continue
+        cells.append(c)
+    return cells

@@ -1,0 +1,31 @@
+"""The paper's primary contribution: LLM-driven intent-based privacy-aware
+orchestration, realized for a multi-pod JAX fabric.
+
+Pipeline: natural-language intent
+  -> interpreter (knowledge plane, LLM-shaped backend)
+  -> compiler (placement + routing -> ShardingPlans + flow paths)
+  -> validator (fail-closed atomic checks incl. compiled-HLO collectives)
+  -> orchestrator (six-step apply loop)
+  -> reconfig (online plan swap for live serving).
+"""
+from repro.core.compiler import CompiledPolicy, compile_intent  # noqa: F401
+from repro.core.corpus import CORPUS, CorpusEntry  # noqa: F401
+from repro.core.intents import (  # noqa: F401
+    Component,
+    Configuration,
+    DEFAULT_WORKLOAD,
+    Flow,
+    Intent,
+    PlacementConstraint,
+    RoutingConstraint,
+    satisfies,
+)
+from repro.core.interpreter import (  # noqa: F401
+    DeterministicInterpreter,
+    FaultyInterpreter,
+    InterpretResult,
+)
+from repro.core.labels import Fabric, Site, build_fabric  # noqa: F401
+from repro.core.orchestrator import FabricState, OrchestrationResult, Orchestrator  # noqa: F401
+from repro.core.reconfig import DowntimeReport, ReconfigEngine  # noqa: F401
+from repro.core.validator import ValidationReport, validate  # noqa: F401

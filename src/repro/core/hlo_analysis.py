@@ -1,0 +1,210 @@
+"""Post-compile HLO analysis: collective extraction + mesh-axis attribution.
+
+This is the shared substrate of two consumers:
+
+  * the ROOFLINE harness — sums per-device wire bytes of every collective
+    in the compiled module (cost_analysis does not report collectives);
+  * the INTENT VALIDATOR (repro.core.validator) — the paper's
+    "post-deployment compliance check" realized at the XLA level: every
+    collective's replica groups are mapped back to mesh axes, so routing
+    constraints ("PHI tensors' traffic must not cross the pod axis") are
+    checked against the *compiled artifact*, which covers every step the
+    executable will ever run (stronger than the paper's runtime sampling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*(?:\},\{[^}]*)*)\}")
+
+
+def _shape_bytes(dtype: str, dims_str: str) -> int:
+    n = 1
+    if dims_str.strip():
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    result_bytes: int            # total bytes of the result shape(s)
+    operand_bytes: int           # total bytes of operand shape(s)
+    group_size: int              # devices per replica group (0 if unknown)
+    groups: Optional[np.ndarray]  # (num_groups, group_size) device ids
+    pairs: Optional[List[Tuple[int, int]]]  # collective-permute
+    line: str
+
+    def wire_bytes_per_device(self) -> float:
+        """Ring-model bytes each device moves over links for this op."""
+        n = max(self.group_size, 1)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if self.kind == "all-gather":
+            return self.result_bytes * frac   # (n-1) shards of out/n each
+        if self.kind == "reduce-scatter":
+            return self.operand_bytes * frac
+        if self.kind == "all-reduce":
+            return 2.0 * self.operand_bytes * frac
+        if self.kind in ("all-to-all", "ragged-all-to-all"):
+            return self.operand_bytes * frac
+        if self.kind in ("collective-permute", "collective-broadcast"):
+            return float(self.operand_bytes)
+        return float(self.operand_bytes)
+
+
+def _parse_groups_explicit(s: str) -> np.ndarray:
+    groups = []
+    for grp in re.findall(r"\{([0-9,\s]*)\}", s):
+        ids = [int(t) for t in grp.replace(" ", "").split(",") if t]
+        if ids:
+            groups.append(ids)
+    width = max(len(g) for g in groups) if groups else 0
+    return np.asarray([g + [-1] * (width - len(g)) for g in groups], dtype=np.int64)
+
+
+def _parse_groups_iota(m: re.Match) -> np.ndarray:
+    g, s = int(m.group(1)), int(m.group(2))
+    src = [int(t) for t in m.group(3).split(",")]
+    arr = np.arange(int(np.prod(src)), dtype=np.int64).reshape(src)
+    if m.group(4):
+        perm = [int(t) for t in m.group(4).split(",")]
+        arr = arr.transpose(perm)
+    return arr.reshape(g, s)
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out: List[Collective] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            # match as the op name: " = <shape> <kind>(" or "<kind>-start("
+            if f" {k}(" in stripped or f" {k}-start(" in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        if stripped.startswith("ROOT"):
+            stripped = stripped[4:].strip()
+        # split into result part and operand part at the op name
+        idx = stripped.find(f" {kind}")
+        result_part = stripped[:idx]
+        operand_part = stripped[idx:]
+        res_shapes = _SHAPE_RE.findall(result_part)
+        op_shapes = _SHAPE_RE.findall(operand_part.split("),", 1)[0]
+                                      if ")," in operand_part else operand_part)
+        result_bytes = sum(_shape_bytes(d, s) for d, s in res_shapes)
+        operand_bytes = sum(_shape_bytes(d, s) for d, s in op_shapes) or result_bytes
+
+        groups = None
+        m = _GROUPS_IOTA_RE.search(stripped)
+        if m:
+            groups = _parse_groups_iota(m)
+        else:
+            m2 = _GROUPS_EXPLICIT_RE.search(stripped)
+            if m2:
+                groups = _parse_groups_explicit(m2.group(0)[len("replica_groups="):])
+
+        pairs = None
+        mp = _PAIRS_RE.search(stripped)
+        if mp:
+            nums = [int(t) for t in re.findall(r"\d+", mp.group(1))]
+            pairs = list(zip(nums[0::2], nums[1::2]))
+
+        gsize = int(groups.shape[1]) if groups is not None and groups.ndim == 2 else (
+            2 if pairs else 0)
+        out.append(Collective(kind, result_bytes, operand_bytes, gsize,
+                              groups, pairs, stripped[:400]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mesh-axis attribution
+# ---------------------------------------------------------------------------
+
+
+def axes_crossed(
+    groups: Optional[np.ndarray],
+    pairs: Optional[List[Tuple[int, int]]],
+    mesh_shape: Sequence[int],
+    axis_names: Sequence[str],
+) -> Tuple[str, ...]:
+    """Mesh axes along which this collective moves data."""
+    shape = tuple(mesh_shape)
+    crossed: set = set()
+
+    def coords(ids: np.ndarray) -> np.ndarray:
+        return np.stack(np.unravel_index(ids, shape), axis=-1)  # (..., naxes)
+
+    if groups is not None:
+        for grp in groups:
+            ids = grp[grp >= 0]
+            if len(ids) < 2:
+                continue
+            c = coords(ids)
+            for ax in range(len(shape)):
+                if len(np.unique(c[:, ax])) > 1:
+                    crossed.add(axis_names[ax])
+    if pairs:
+        arr = np.asarray(pairs, dtype=np.int64)
+        src, dst = coords(arr[:, 0]), coords(arr[:, 1])
+        for ax in range(len(shape)):
+            if np.any(src[:, ax] != dst[:, ax]):
+                crossed.add(axis_names[ax])
+    return tuple(sorted(crossed))
+
+
+def collective_summary(
+    hlo_text: str,
+    mesh_shape: Sequence[int],
+    axis_names: Sequence[str],
+) -> Dict:
+    """Aggregate: per-kind counts/bytes and per-axis wire bytes."""
+    colls = parse_collectives(hlo_text)
+    by_kind: Dict[str, Dict[str, float]] = {}
+    by_axis: Dict[str, float] = {a: 0.0 for a in axis_names}
+    total_wire = 0.0
+    for c in colls:
+        e = by_kind.setdefault(c.kind, {"count": 0, "wire_bytes": 0.0,
+                                        "result_bytes": 0})
+        wb = c.wire_bytes_per_device()
+        e["count"] += 1
+        e["wire_bytes"] += wb
+        e["result_bytes"] += c.result_bytes
+        total_wire += wb
+        axes = axes_crossed(c.groups, c.pairs, mesh_shape, axis_names)
+        for a in axes:
+            by_axis[a] += wb / max(len(axes), 1)
+    return {
+        "n_collectives": len(colls),
+        "by_kind": by_kind,
+        "wire_bytes_by_axis": by_axis,
+        "total_wire_bytes_per_device": total_wire,
+        "collectives": colls,
+    }

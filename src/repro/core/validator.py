@@ -1,0 +1,133 @@
+"""Automated validation pipeline (paper §5.5): atomic pass/fail checks over
+the post-deployment state, executed without human intervention.
+
+Check classes:
+  * placement checks — every matched component sits on a site satisfying
+    the constraint (λ_N lookup);
+  * label-existence checks — referenced labels exist in the inventory
+    (catches hallucinated identifiers, failure mode 3);
+  * routing checks — realized paths avoid forbidden vertices / include
+    waypoints; a constraint that matched no flow is a detected no-op
+    policy (failure mode 2) and FAILS;
+  * HLO checks — for plans carrying `forbidden_collective_axes`, the
+    compiled executable's collectives must not cross those mesh axes
+    (parsed from the SPMD module; stronger than runtime sampling since
+    compile-time proof covers every step).
+
+An intent is successful only if ALL its checks pass (fail-closed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import hlo_cost
+from repro.core.compiler import CompiledPolicy
+from repro.core.hlo_analysis import axes_crossed
+from repro.core.intents import (
+    Component,
+    Configuration,
+    Intent,
+    placement_satisfied,
+    routing_satisfied,
+)
+from repro.core.labels import Fabric
+
+
+@dataclasses.dataclass
+class Check:
+    name: str
+    passed: bool
+    detail: str
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    intent_text: str
+    checks: List[Check]
+    elapsed_s: float
+
+    @property
+    def passed(self) -> bool:
+        return bool(self.checks) and all(c.passed for c in self.checks)
+
+    @property
+    def n_checks(self) -> int:
+        return len(self.checks)
+
+    def summary(self) -> str:
+        flag = "PASS" if self.passed else "FAIL"
+        return f"[{flag}] {len(self.checks)} checks, {self.elapsed_s*1e3:.1f} ms"
+
+
+def validate(policy: CompiledPolicy, fabric: Fabric,
+             components: Sequence[Component],
+             hlo_modules: Optional[Dict[str, str]] = None,
+             mesh_shape: Optional[Tuple[int, ...]] = None,
+             axis_names: Optional[Tuple[str, ...]] = None) -> ValidationReport:
+    t0 = time.time()
+    intent = policy.intent
+    config = policy.config
+    checks: List[Check] = []
+    inventory = fabric.label_inventory()
+
+    # compiler-detected errors fail closed
+    for err in policy.errors:
+        checks.append(Check("compiler/fail-closed", False, err))
+
+    # ---- placement checks ----
+    for i, pc in enumerate(intent.placement):
+        # hallucination cross-check applies to REQUIRED labels only: a
+        # forbid on an absent label is trivially satisfied, not an error
+        for k, v in pc.require:
+            known = inventory.get(k, frozenset())
+            ok = (not known) or (v in known)
+            checks.append(Check(
+                f"placement[{i}]/label-exists({k}={v})", ok,
+                "label present in inventory" if ok
+                else f"label {k}={v} does not exist on any node"))
+        ok, msg = placement_satisfied(pc, config, fabric, components)
+        checks.append(Check(f"placement[{i}]/state", ok, msg))
+
+    # ---- routing checks ----
+    for i, rc in enumerate(intent.routing):
+        if rc.waypoints or rc.forbid_vertex or rc.forbidden_axes \
+                or rc.flow.src != "*" or rc.flow.dst != "*":
+            ok, msg = routing_satisfied(rc, config, fabric)
+            checks.append(Check(f"routing[{i}]/paths", ok, msg))
+        # HLO-level collective-axis compliance
+        if rc.forbidden_axes and hlo_modules is not None:
+            key = dict(rc.selector).get("data-type", "*")
+            for mod_name, hlo in hlo_modules.items():
+                if key != "*" and key not in mod_name:
+                    continue
+                ok, msg = check_hlo_axes(hlo, rc.forbidden_axes,
+                                         mesh_shape or (2, 16, 16),
+                                         axis_names or ("pod", "data", "model"))
+                checks.append(Check(
+                    f"routing[{i}]/hlo-collectives[{mod_name}]", ok, msg))
+
+    if not checks:
+        checks.append(Check("no-constraints", False,
+                            "intent produced no enforceable constraints"))
+    return ValidationReport(intent.text, checks, time.time() - t0)
+
+
+def check_hlo_axes(hlo_text: str, forbidden_axes: Sequence[str],
+                   mesh_shape: Sequence[int], axis_names: Sequence[str]
+                   ) -> Tuple[bool, str]:
+    """No collective in the compiled module may cross a forbidden axis."""
+    model = hlo_cost.HloCostModel(hlo_text)
+    totals = model.cost()
+    offenders = []
+    for coll, _mult in totals.collectives:
+        axes = axes_crossed(coll.groups, coll.pairs, mesh_shape, axis_names)
+        bad = set(axes) & set(forbidden_axes)
+        if bad:
+            offenders.append((coll.kind, sorted(bad)))
+    if offenders:
+        kinds = ", ".join(f"{k} crosses {a}" for k, a in offenders[:5])
+        return False, f"{len(offenders)} collectives cross forbidden axes: {kinds}"
+    return True, (f"{len(totals.collectives)} collectives checked, none cross "
+                  f"{list(forbidden_axes)}")

@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (causal, GQA-aware).
+
+Grid: (B * Hq, n_q_blocks, n_k_blocks) — the k-block axis is the minormost
+grid dim, so TPU executes it sequentially per (head, q-block) and the
+online-softmax state (m, l, acc) lives in VMEM scratch across k steps.
+
+BlockSpecs keep the VMEM working set at
+  q_block x D  +  k_block x D x 2  +  q_block x k_block (logits)
+≈ (128x128 + 2x256x128 + 128x256) x 4B ≈ 0.5 MiB — far under the ~16 MiB
+VMEM budget, with all matmul dims multiples of 128 for the MXU.
+
+Causal skipping: blocks strictly above the diagonal short-circuit via
+pl.when on the block indices (the classic flash-attention 2x win).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_Q_BLOCK = 128
+DEFAULT_K_BLOCK = 256
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, q_block: int, k_block: int,
+                  seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_block
+    k_start = ki * k_block
+
+    # causal: skip blocks strictly above the diagonal
+    run = (k_start <= q_start + q_block - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale           # (qb, D)
+        k = k_ref[0].astype(jnp.float32)                   # (kb, D)
+        v = v_ref[0].astype(jnp.float32)                   # (kb, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (qb, kb)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, k_block), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, k_block), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_block: int = DEFAULT_Q_BLOCK,
+    k_block: int = DEFAULT_K_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    Sq_p = (Sq + q_block - 1) // q_block * q_block
+    Sk_p = (Sk + k_block - 1) // k_block * k_block
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+
+    # (B*H, S, D) layout — one grid row per (batch, head)
+    qh = jnp.moveaxis(qp, 2, 1).reshape(B * Hq, Sq_p, D)
+    kh = jnp.moveaxis(kp, 2, 1).reshape(B * Hkv, Sk_p, D)
+    vh = jnp.moveaxis(vp, 2, 1).reshape(B * Hkv, Sk_p, D)
+
+    grid = (B * Hq, Sq_p // q_block, Sk_p // k_block)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        q_block=q_block, k_block=k_block, seq_len=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, k_block, D),
+                         lambda h, qi, ki, G=G: (h // G, ki, 0)),
+            pl.BlockSpec((1, k_block, D),
+                         lambda h, qi, ki, G=G: (h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),   # running max m
+            pltpu.VMEM((q_block, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((q_block, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out.reshape(B, Hq, Sq_p, D)[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)                       # (B, Sq, Hq, D)

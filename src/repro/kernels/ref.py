@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel (and the long-context jnp path).
+
+`flash_attention_ref` is used two ways:
+  * as the allclose oracle for the Pallas flash kernel;
+  * as the *production jnp path* for 32k+ prefill under pjit — the chunked
+    online-softmax scan never materializes the (S, S) logits, which is what
+    lets prefill_32k fit HBM without the kernel (the kernel then wins on
+    VMEM locality, not on asymptotic memory).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash attention (online softmax, chunked over q and k)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Returns (B, Sq, Hq, D). fp32 accumulation, never materializes SqxSk."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    # pad to chunk multiples
+    Sq_p = (Sq + q_chunk - 1) // q_chunk * q_chunk
+    Sk_p = (Sk + k_chunk - 1) // k_chunk * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    nq, nk = Sq_p // q_chunk, Sk_p // k_chunk
+
+    # (B, nq, qc, Hkv, G, D) view
+    qh = qp.reshape(B, nq, q_chunk, Hkv, G, D)
+    kh = kp.reshape(B, nk, k_chunk, Hkv, D)
+    vh = vp.reshape(B, nk, k_chunk, Hkv, D)
+
+    def q_block(qi, q_blk):
+        # q_blk: (B, qc, Hkv, G, D). Keep operands in their storage dtype and
+        # accumulate in fp32 via preferred_element_type — converting k/v to
+        # fp32 per step would get hoisted out of the scan by XLA and
+        # materialize the whole K in fp32.
+        def k_step(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kh, ki, axis=1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vh, ki, axis=1, keepdims=False)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            q_pos = qi * q_chunk + jnp.arange(q_chunk)
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            mask = k_pos[None, :] < Sk                      # kv padding
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        if causal:
+            # only k blocks up to the diagonal contribute — static bound, so
+            # the causal 2x flop saving is real (and visible to the roofline)
+            hi = min(nk, ((qi + 1) * q_chunk + k_chunk - 1) // k_chunk)
+        else:
+            hi = nk
+
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, ki: (k_step(c, ki)[0], None), (m0, l0, a0),
+            jnp.arange(hi))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, Hkv, G, qc, D) -> (B, qc, Hkv, G, D)
+        return jnp.moveaxis(out, 3, 1)
+
+    outs = []
+    for qi in range(nq):
+        outs.append(q_block(qi, qh[:, qi]))
+    out = jnp.stack(outs, axis=1)                            # (B, nq, qc, Hkv, G, D)
+    out = out.reshape(B, Sq_p, Hq, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan oracle — re-export of the model reference
+# ---------------------------------------------------------------------------
+
+from repro.models.ssm import ssd_scan_ref  # noqa: E402,F401
+
+
+# ---------------------------------------------------------------------------
+# MoE top-k gating oracle
+# ---------------------------------------------------------------------------
+
+
+def moe_topk_ref(logits: jax.Array, k: int, *, norm_topk: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """(T, E) fp32 logits -> (weights (T, k) fp32, idx (T, k) int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    if norm_topk:
+        weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, idx.astype(jnp.int32)

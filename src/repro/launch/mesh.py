@@ -1,0 +1,51 @@
+"""Production mesh construction.
+
+`make_production_mesh` is a FUNCTION so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Hardware model (TPU v5e-like):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI, 16 GiB HBM.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+
+# roofline hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link
+HBM_BYTES = 16 * 1024 ** 3        # capacity
+DCN_BW = 12.5e9                   # B/s per host, cross-pod (assumed)
+
+SINGLE_POD = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = int(np.prod(shape))
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — "
+            "dryrun.py must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(shape: Sequence[int] = (1, 1),
+                   axes: Sequence[str] = ("data", "model")) -> jax.sharding.Mesh:
+    """Tiny mesh over the real local devices (tests / examples)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(tuple(shape)), tuple(axes))

@@ -1,0 +1,7 @@
+"""Model zoo: 10 assigned architectures behind one functional API.
+
+`build_model(config)` returns a `Model` with `init_params`, `train_loss`,
+`prefill`, `decode_step`, `init_cache` — all pure functions suitable for
+`jax.jit` / `pjit` with sharding plans from `repro.sharding`.
+"""
+from repro.models.api import Model, build_model  # noqa: F401

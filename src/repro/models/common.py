@@ -1,0 +1,176 @@
+"""Shared model primitives: norms, activations, rotary embeddings, init."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+VOCAB_PAD_MULTIPLE = 256   # = 16 (model axis) x 16; keeps vocab dims shardable
+
+
+def padded_vocab(vocab_size: int) -> int:
+    m = VOCAB_PAD_MULTIPLE
+    return (vocab_size + m - 1) // m * m
+
+
+def vocab_mask(vocab_size: int, padded: int) -> jnp.ndarray:
+    """(padded,) fp32 additive mask: 0 for real ids, -1e30 for padding."""
+    return jnp.where(jnp.arange(padded) < vocab_size, 0.0, -1e30).astype(jnp.float32)
+
+
+def dtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.activ_dtype)
+
+
+def param_dtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 accumulation, cast back to input dtype)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, dim: int) -> dict:
+    pd = param_dtype_of(cfg)
+    p = {"scale": jnp.ones((dim,), dtype=pd)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype=pd)
+    return p
+
+
+def gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Mamba2 RMSNormGated: rmsnorm(x * silu(z)) * scale."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(rot_dim: int, theta: float) -> jax.Array:
+    """(rot_dim/2,) inverse frequencies, fp32."""
+    exponents = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (theta ** exponents)
+
+
+def rope_cos_sin(
+    positions: jax.Array,  # (..., S) int32
+    rot_dim: int,
+    theta: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin of shape positions.shape + (rot_dim/2,), fp32."""
+    inv = rope_freqs(rot_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def mrope_cos_sin(
+    positions: jax.Array,  # (3, B, S) int32 — temporal/height/width streams
+    rot_dim: int,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: frequency index i uses the position stream of its
+    section. Returns cos/sin of shape (B, S, rot_dim/2)."""
+    assert sum(sections) == rot_dim // 2, (sections, rot_dim)
+    inv = rope_freqs(rot_dim, theta)  # (rot_dim/2,)
+    # section id for each frequency index
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])  # (rot_dim/2,)
+    # gather per-frequency positions: (B, S, rot_dim/2)
+    pos_sel = jnp.take(positions, sec_ids, axis=0)          # (rot/2, B, S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                  # (B, S, rot/2)
+    angles = pos_sel.astype(jnp.float32) * inv
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D) with rotary applied to the leading `2*cos.shape[-1]`
+    dims of D. cos/sin: (B, S, rot/2) or (S, rot/2)."""
+    rot = cos.shape[-1] * 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:  # (S, rot/2) -> broadcast over batch
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, rot/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings, (length, dim) fp32."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    args = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype, scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (log-mel + conv) is a STUB per the assignment: inputs are
+precomputed frame embeddings (B, F, d_model). Encoder adds sinusoidal
+positions; decoder uses learned positions, causal self-attention with a KV
+cache and cross-attention whose K/V are computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as ffn
+from repro.models.common import (
+    apply_norm,
+    embed_init,
+    init_norm,
+    padded_vocab,
+    param_dtype_of,
+    sinusoidal_positions,
+)
+from repro.sharding.ctx import constrain
+
+PyTree = Any
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, max_seq: Optional[int] = None) -> PyTree:
+    assert cfg.encdec is not None
+    pd = param_dtype_of(cfg)
+    max_seq = max_seq or min(cfg.max_seq_len, 32_768)
+    k_embed, k_pos, k_enc, k_dec = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        ks = jax.random.split(k, 2)
+        return {
+            "attn_norm": init_norm(cfg, cfg.d_model),
+            "attn": attn.init_gqa(cfg, ks[0]),
+            "mlp_norm": init_norm(cfg, cfg.d_model),
+            "mlp": ffn.init_mlp(cfg, ks[1]),
+        }
+
+    def dec_layer(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "self_norm": init_norm(cfg, cfg.d_model),
+            "self_attn": attn.init_gqa(cfg, ks[0]),
+            "cross_norm": init_norm(cfg, cfg.d_model),
+            "cross_attn": attn.init_cross_attn(cfg, ks[1]),
+            "mlp_norm": init_norm(cfg, cfg.d_model),
+            "mlp": ffn.init_mlp(cfg, ks[2]),
+        }
+
+    enc_keys = jax.random.split(k_enc, cfg.encdec.num_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": embed_init(k_embed, (padded_vocab(cfg.vocab_size), cfg.d_model), pd),
+        "pos_embed": embed_init(k_pos, (max_seq, cfg.d_model), pd),
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+        "dec_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params: PyTree, frames: jax.Array, *,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, F, d) stub frame embeddings -> encoder output (B, F, d)."""
+    B, F, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.activ_dtype))
+    x = x + sinusoidal_positions(F, d).astype(x.dtype)[None]
+
+    def body(x, lp):
+        h = apply_norm(cfg, lp["attn_norm"], x)
+        out, _ = attn.gqa_attention(cfg, lp["attn"], h,
+                                    positions=jnp.arange(F, dtype=jnp.int32),
+                                    mode="train", causal=False)
+        x = x + out
+        h = apply_norm(cfg, lp["mlp_norm"], x)
+        x = x + ffn.mlp(cfg, lp["mlp"], h)
+        return constrain(x, "batch", "sp", None), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_sublayer(cfg, lp, x, *, positions, mode, self_cache, cross_cache,
+                  enc_out, pos):
+    h = apply_norm(cfg, lp["self_norm"], x)
+    out, new_self = attn.gqa_attention(
+        cfg, lp["self_attn"], h, positions=positions, mode=mode,
+        cache=self_cache, pos=pos)
+    x = x + out
+    h = apply_norm(cfg, lp["cross_norm"], x)
+    out, new_cross = attn.cross_attention(
+        cfg, lp["cross_attn"], h, enc_out=enc_out, cache=cross_cache)
+    x = x + out
+    h = apply_norm(cfg, lp["mlp_norm"], x)
+    x = x + ffn.mlp(cfg, lp["mlp"], h)
+    return x, new_self, new_cross
+
+
+def decode_stack(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jax.Array,
+    *,
+    mode: str,
+    enc_out: Optional[jax.Array] = None,
+    cache: Optional[PyTree] = None,
+    pos: Optional[jax.Array] = None,
+    remat: bool = True,
+) -> Tuple[jax.Array, Optional[PyTree]]:
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.activ_dtype))
+    if mode == "decode":
+        p = jnp.asarray(pos, dtype=jnp.int32)
+        if p.ndim == 0:
+            pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], p, 1, axis=0)[None]
+            positions = jnp.full((B, 1), p, dtype=jnp.int32)
+        else:
+            pe = jnp.take(params["pos_embed"], p, axis=0)[:, None]   # (B,1,d)
+            positions = p[:, None]
+        x = x + pe.astype(x.dtype)
+    else:
+        x = x + params["pos_embed"][:S][None].astype(x.dtype)
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, step_in):
+        lp, lc = step_in
+        sc = lc["self"] if lc is not None else None
+        cc = lc["cross"] if lc is not None else None
+        x, new_self, new_cross = _dec_sublayer(
+            cfg, lp, x, positions=positions, mode=mode,
+            self_cache=sc, cross_cache=cc, enc_out=enc_out, pos=pos)
+        return constrain(x, "batch", "sp" if mode == "train" else None, None), {"self": new_self, "cross": new_cross}
+
+    if remat and mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+
+    xs = (params["dec_layers"], cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = apply_norm(cfg, params["dec_norm"], x)
+    if mode == "train":
+        new_cache = None
+    return x, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, enc_len: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    L = cfg.num_layers
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "self": {"k": jnp.zeros((L, batch, s_max, hkv, hd), dtype),
+                 "v": jnp.zeros((L, batch, s_max, hkv, hd), dtype)},
+        "cross": {"k": jnp.zeros((L, batch, enc_len, hkv, hd), dtype),
+                  "v": jnp.zeros((L, batch, enc_len, hkv, hd), dtype)},
+    }
+
+
+def logits_fn(cfg: ModelConfig, params: PyTree, hidden: jax.Array) -> jax.Array:
+    return hidden @ params["embed"].T  # whisper ties embeddings
+
+
+def train_loss(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
+               *, loss_chunk: Optional[int] = None, **_) -> Tuple[jax.Array, Dict]:
+    from repro.models.lm import cross_entropy  # shared CE
+
+    frames, tokens = batch["frames"], batch["tokens"]
+    enc_out = encode(cfg, params, frames)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    hidden, _ = decode_stack(cfg, params, inp, mode="train", enc_out=enc_out)
+    ce = cross_entropy(cfg, params, hidden, tgt, mask=batch.get("loss_mask"),
+                       chunk=loss_chunk)
+    return ce, {"ce": ce, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
+            **_) -> Tuple[jax.Array, PyTree]:
+    frames, tokens = batch["frames"], batch["tokens"]
+    enc_out = encode(cfg, params, frames, remat=False)
+    hidden, cache = decode_stack(cfg, params, tokens, mode="prefill",
+                                 enc_out=enc_out, remat=False)
+    logits = logits_fn(cfg, params, hidden[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+                cache: PyTree, pos: jax.Array) -> Tuple[jax.Array, PyTree]:
+    hidden, new_cache = decode_stack(cfg, params, tokens, mode="decode",
+                                     cache=cache, pos=pos, remat=False)
+    logits = logits_fn(cfg, params, hidden[:, 0:1, :])[:, 0, :]
+    return logits, new_cache

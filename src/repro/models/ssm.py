@@ -1,0 +1,285 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Training/prefill use the chunked SSD algorithm (intra-chunk quadratic term
++ inter-chunk state recurrence); decode uses the O(1) recurrent update.
+The chunked scan's hot loop has a Pallas kernel (`repro.kernels.ssd_scan`);
+this module holds the pure-jnp formulation used for sharded lowering and as
+the kernel oracle.
+
+Projections are SPLIT (w_z/w_x/w_B/w_C/w_dt instead of one fused in_proj)
+so tensor parallelism shards x/z/dt on SSD-head boundaries while the small
+group-shared B/C/conv tensors stay replicated — a TPU adaptation: clean
+head-aligned TP beats a fused projection whose sharded output dimension
+would straddle the z|x|B|C|dt segment boundaries.
+
+State pytree per layer:
+  {"conv_x": (B, K-1, d_in), "conv_B": (B, K-1, G*N), "conv_C": (B, K-1, G*N),
+   "ssm": (B, H, P, N) fp32}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import dense_init, gated_rmsnorm, param_dtype_of
+
+State = Dict[str, jax.Array]
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    """(d_inner, n_heads, head_dim, d_state, conv_dim)."""
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, s.head_dim, s.d_state, conv_dim
+
+
+def init_ssm(cfg: ModelConfig, key: jax.Array) -> dict:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in, H, P, N, _ = ssm_dims(cfg)
+    gn = s.n_groups * N
+    pd = param_dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": dense_init(ks[0], (d, d_in), pd),
+        "w_x": dense_init(ks[1], (d, d_in), pd),
+        "w_B": dense_init(ks[2], (d, gn), pd),
+        "w_C": dense_init(ks[3], (d, gn), pd),
+        "w_dt": dense_init(ks[4], (d, H), pd),
+        "conv_x_w": dense_init(ks[5], (s.d_conv, d_in), pd, scale=s.d_conv ** -0.5),
+        "conv_x_b": jnp.zeros((d_in,), dtype=pd),
+        "conv_B_w": dense_init(ks[6], (s.d_conv, gn), pd, scale=s.d_conv ** -0.5),
+        "conv_B_b": jnp.zeros((gn,), dtype=pd),
+        "conv_C_w": dense_init(ks[6], (s.d_conv, gn), pd, scale=s.d_conv ** -0.5),
+        "conv_C_b": jnp.zeros((gn,), dtype=pd),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype=pd),
+        "out_proj": dense_init(ks[3], (d_in, d), pd, scale=d_in ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (pure jnp reference; Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < t <= i} x[..., t].
+
+    Lower-triangular; -inf above the diagonal.
+    """
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)  — post-softplus, fp32
+    A: jax.Array,      # (H,)       — negative, fp32
+    B_mat: jax.Array,  # (B, S, G, N)
+    C_mat: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    S_orig = S
+    if S % chunk:
+        # zero-pad to a chunk multiple: dt=0 => decay 1 and zero state
+        # contribution, so padding is exact for both y[:S] and final_state.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    xc = x.reshape(Bb, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(f32)
+    Bc = B_mat.reshape(Bb, nc, chunk, G, N).astype(f32)
+    Cc = C_mat.reshape(Bb, nc, chunk, G, N).astype(f32)
+    Bc = jnp.repeat(Bc, rep, axis=3)  # (B, nc, L, H, N)
+    Cc = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A  # (B, nc, L, H)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # NB: all einsums below are 2-operand contractions (batch dims b,c,h;
+    # one contracted dim) so XLA lowers each to a single dot_general and
+    # never materializes 6-D (b,c,l,h,p,n) intermediates.
+    dtx = xc * dtc[..., None]                                 # (B, nc, L, H, P)
+
+    # --- intra-chunk (diagonal blocks) ---
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))          # (B, nc, H, L, L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)        # (B, nc, H, L, L)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * L, dtx)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)    # (B, nc, L, H)
+    states = jnp.einsum("bclhn,bclhp->bchpn", Bc * decay_states[..., None], dtx)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                # (B, nc, H)
+    h0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((Bb, H, P, N), dtype=f32))
+
+    def step(h, inp):
+        decay_c, state_c = inp                               # (B,H), (B,H,P,N)
+        h_new = h * decay_c[..., None, None] + state_c
+        return h_new, h
+
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                # (nc, B, H)
+    states_t = jnp.moveaxis(states, 1, 0)                    # (nc, B, H, P, N)
+    h_final, h_prev = jax.lax.scan(step, h0, (decay_t, states_t))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # (B, nc, H, P, N)
+
+    # --- inter-chunk contribution ---
+    state_decay = jnp.exp(dA_cum)                            # (B, nc, L, H)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", Cc * state_decay[..., None], h_prev)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step_ref(
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    B_vec: jax.Array,  # (B, G, N)
+    C_vec: jax.Array,  # (B, G, N)
+    h: jax.Array,      # (B, H, P, N) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrent SSD step. Returns (y (B,H,P), h_new)."""
+    G = B_vec.shape[1]
+    rep = x.shape[1] // G
+    Bh = jnp.repeat(B_vec, rep, axis=1).astype(jnp.float32)   # (B, H, N)
+    Ch = jnp.repeat(C_vec, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A)                                     # (B, H)
+    h_new = h * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dtf, x.astype(jnp.float32), Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array,
+                 history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. seq: (B, S, C); w: (K, C). history: (B, K-1, C)."""
+    K = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), dtype=seq.dtype)
+    else:
+        pad = history.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)                 # (B, S+K-1, C)
+    out = sum(full[:, i : i + seq.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _conv_history(seq: jax.Array, K: int) -> jax.Array:
+    """Last K-1 raw inputs (pre-activation) for the decode conv state."""
+    B, S, C = seq.shape
+    if S >= K - 1:
+        return seq[:, S - (K - 1):, :]
+    zero = jnp.zeros((B, K - 1 - S, C), dtype=seq.dtype)
+    return jnp.concatenate([zero, seq], axis=1)
+
+
+def ssm_block(
+    cfg: ModelConfig,
+    p: dict,
+    xin: jax.Array,                  # (B, S, d)
+    *,
+    mode: str = "train",
+    state: Optional[State] = None,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[State]]:
+    s = cfg.ssm or SSMConfig()
+    Bb, S, d = xin.shape
+    d_in, H, P, N, _ = ssm_dims(cfg)
+    G = s.n_groups
+    K = s.d_conv
+
+    z = xin @ p["w_z"]
+    x_raw = xin @ p["w_x"]
+    B_raw = xin @ p["w_B"]
+    C_raw = xin @ p["w_C"]
+    dt_raw = xin @ p["w_dt"]                                   # (B, S, H)
+
+    if mode == "decode":
+        assert state is not None and S == 1
+        x_act = _causal_conv(x_raw, p["conv_x_w"], p["conv_x_b"], state["conv_x"])
+        B_act = _causal_conv(B_raw, p["conv_B_w"], p["conv_B_b"], state["conv_B"])
+        C_act = _causal_conv(C_raw, p["conv_C_w"], p["conv_C_b"], state["conv_C"])
+        new_conv = {
+            "conv_x": jnp.concatenate([state["conv_x"][:, 1:], x_raw.astype(state["conv_x"].dtype)], axis=1),
+            "conv_B": jnp.concatenate([state["conv_B"][:, 1:], B_raw.astype(state["conv_B"].dtype)], axis=1),
+            "conv_C": jnp.concatenate([state["conv_C"][:, 1:], C_raw.astype(state["conv_C"].dtype)], axis=1),
+        }
+    else:
+        x_act = _causal_conv(x_raw, p["conv_x_w"], p["conv_x_b"])
+        B_act = _causal_conv(B_raw, p["conv_B_w"], p["conv_B_b"])
+        C_act = _causal_conv(C_raw, p["conv_C_w"], p["conv_C_b"])
+        new_conv = {
+            "conv_x": _conv_history(x_raw, K),
+            "conv_B": _conv_history(B_raw, K),
+            "conv_C": _conv_history(C_raw, K),
+        }
+
+    x = x_act.reshape(Bb, S, H, P)
+    B_mat = B_act.reshape(Bb, S, G, N)
+    C_mat = C_act.reshape(Bb, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                   # (H,) negative
+
+    if mode == "decode":
+        h = state["ssm"]
+        y_core, h_new = ssd_step_ref(x[:, 0], dt[:, 0], A, B_mat[:, 0], C_mat[:, 0], h)
+        y_core = y_core[:, None]                                # (B, 1, H, P)
+        new_state: Optional[State] = dict(new_conv, ssm=h_new)
+    else:
+        init_h = state["ssm"] if state is not None else None
+        if use_kernel:
+            from repro.kernels import ops as kops
+            y_core, h_new = kops.ssd_scan(x, dt, A, B_mat, C_mat, chunk=s.chunk_size)
+        else:
+            y_core, h_new = ssd_scan_ref(x, dt, A, B_mat, C_mat,
+                                         chunk=s.chunk_size, init_state=init_h)
+        new_state = dict(new_conv, ssm=h_new) if mode == "prefill" else None
+
+    y = y_core + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bb, S, d_in).astype(xin.dtype)
+    y = gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> State:
+    s = cfg.ssm or SSMConfig()
+    d_in, H, P, N, _ = ssm_dims(cfg)
+    gn = s.n_groups * N
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), dtype=dtype),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, gn), dtype=dtype),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, gn), dtype=dtype),
+        "ssm": jnp.zeros((batch, H, P, N), dtype=jnp.float32),
+    }

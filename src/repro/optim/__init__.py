@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, adamw  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compress import compress_grads_int8, decompress_grads_int8  # noqa: F401

@@ -1,0 +1,87 @@
+"""AdamW with global-norm clipping and optional reduced-precision state.
+
+Pure-pytree implementation (no optax dependency). Optimizer state mirrors
+the parameter tree, so a parameter `ShardingPlan` applies verbatim to m/v —
+states are fully sharded alongside FSDP params (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[str] = None   # None -> fp32; "bfloat16" halves memory
+
+    def _sdtype(self):
+        return jnp.dtype(self.state_dtype) if self.state_dtype else jnp.float32
+
+    def init(self, params: PyTree) -> PyTree:
+        sd = self._sdtype()
+        zeros = lambda p: jnp.zeros(p.shape, dtype=sd)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(
+        self,
+        grads: PyTree,
+        state: PyTree,
+        params: PyTree,
+    ) -> Tuple[PyTree, PyTree]:
+        """Returns (new_params, new_state)."""
+        count = state["count"] + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        if self.clip_norm is not None:
+            leaves = jax.tree.leaves(grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in leaves))
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        else:
+            scale = jnp.float32(1.0)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+        sd = self._sdtype()
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            step = mhat * jax.lax.rsqrt(vhat + self.eps * self.eps)
+            # decoupled weight decay (skip 1-D params: norms, biases)
+            wd = self.weight_decay if p.ndim > 1 else 0.0
+            new_p = p.astype(jnp.float32) - lr * (step + wd * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m32.astype(sd), v32.astype(sd)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def adamw(**kw) -> AdamW:
+    return AdamW(**kw)

@@ -1,0 +1,45 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+Beyond-paper distributed-optimization trick: gradients crossing the slow
+`pod` (DCN) axis are quantized to int8 with a per-tensor fp32 scale before
+the cross-pod mean, and the quantization residual is carried to the next
+step (error feedback keeps the scheme unbiased over time).
+
+Used by `launch/train.py --grad-compress`; the cross-pod reduction then
+moves 4x fewer bytes over DCN.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def compress_grads_int8(grads: PyTree, residual: PyTree) -> Tuple[PyTree, PyTree, PyTree]:
+    """Quantize (grads + residual) to int8. Returns (q, scales, new_residual)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat, flat_r)]
+    q = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    new_res = treedef.unflatten([o[2] for o in out])
+    return q, scales, new_res
+
+
+def decompress_grads_int8(q: PyTree, scales: PyTree, dtype=jnp.float32) -> PyTree:
+    return jax.tree.map(lambda qq, s: (qq.astype(jnp.float32) * s).astype(dtype), q, scales)
+
+
+def init_residual(grads_shape: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)

@@ -1,0 +1,1 @@
+from repro.runtime.trainer import TrainRunner  # noqa: F401

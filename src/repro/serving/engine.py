@@ -1,0 +1,179 @@
+"""Continuous-batching serving engine with per-request TTFT/TPOT metrics.
+
+Slot-based decode batching: a fixed (B, S_max) KV pool; requests prefill
+into a free slot and decode step-locked with the rest of the batch (the
+standard TPU serving shape — static shapes, no re-compilation per request).
+
+Privacy intents attach *labels* to requests (e.g. data-type=phi); the
+orchestration layer maps labeled requests to engines whose ShardingPlan
+carries the matching device constraints, and the validator checks the
+engine's compiled HLO against the routing constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S_prompt,) int32
+    max_new_tokens: int = 16
+    labels: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # metrics
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot(self) -> float:
+        n = max(len(self.tokens_out) - 1, 1)
+        return (self.t_done - self.t_first) / n
+
+
+class ServingEngine:
+    """Single-model engine; decode batch of `n_slots` sequences."""
+
+    def __init__(self, model: Model, params: PyTree, *, n_slots: int = 4,
+                 s_max: int = 128, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.greedy = greedy
+        self.vocab = model.cfg.vocab_size
+
+        self.cache = model.init_cache(n_slots, s_max)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int32)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.steps = 0
+        # jitted single-sequence prefill + batched decode
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            batch = {"tokens": prompt}
+            if self.model.cfg.pos_type == "mrope":
+                S = prompt.shape[1]
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32)[None, None], (3, 1, S))
+            logits, cache1 = self._prefill(self.params, batch)
+            tok = int(jnp.argmax(logits[0, : self.vocab]))
+            req.tokens_out.append(tok)
+            req.t_first = time.time()
+            # merge the single-sequence cache into the slot pool
+            self.cache = _write_slot(self.cache, cache1, slot,
+                                     prompt.shape[1], self.s_max)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = prompt.shape[1]
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step over all active slots. Returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.n_slots, 1), dtype=np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].tokens_out[-1]
+        # per-slot positions (inactive slots write harmlessly at index 0 —
+        # their slot is re-prefilled before reuse)
+        pos = jnp.asarray(self.slot_pos, dtype=jnp.int32)
+        logits, self.cache = self._decode(self.params, jnp.asarray(tokens),
+                                          self.cache, pos)
+        logits = np.asarray(logits[:, : self.vocab])
+        now = time.time()
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(np.argmax(logits[i]))
+            req.tokens_out.append(tok)
+            self.slot_pos[i] += 1
+            if (len(req.tokens_out) >= req.max_new_tokens
+                    or self.slot_pos[i] >= self.s_max - 1):
+                req.t_done = now
+                self.done.append(req)
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+        self.steps += 1
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.steps < max_steps:
+            self.step()
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        if not self.done:
+            return {"completed": 0}
+        ttfts = [r.ttft for r in self.done]
+        tpots = [r.tpot for r in self.done]
+        return {
+            "completed": len(self.done),
+            "ttft_mean_s": float(np.mean(ttfts)),
+            "ttft_p99_s": float(np.percentile(ttfts, 99)),
+            "tpot_mean_s": float(np.mean(tpots)),
+            "tpot_p99_s": float(np.percentile(tpots, 99)),
+        }
+
+
+def _write_slot(pool: PyTree, single: PyTree, slot: int, prompt_len: int,
+                s_max: int) -> PyTree:
+    """Write a 1-sequence prefill cache into batch slot `slot` of the pool."""
+
+    def one(p, c):
+        # locate batch dim: first dim where pool==n_slots and cache==1
+        for ax in range(min(p.ndim, c.ndim)):
+            if p.shape[ax] != c.shape[ax] and c.shape[ax] == 1:
+                batch_ax = ax
+                break
+        else:
+            return p
+        # seq dims may differ (prompt_len vs s_max): pad cache to pool shape
+        pads = []
+        for ax in range(p.ndim):
+            if ax == batch_ax:
+                pads.append((0, 0))
+            else:
+                pads.append((0, p.shape[ax] - c.shape[ax]))
+        c_pad = jnp.pad(c.astype(p.dtype), pads)
+        idx = [slice(None)] * p.ndim
+        idx[batch_ax] = slice(slot, slot + 1)
+        return p.at[tuple(idx)].set(c_pad)
+
+    return jax.tree.map(one, pool, single)

@@ -1,0 +1,8 @@
+from repro.sharding.plan import (  # noqa: F401
+    ShardingPlan,
+    batch_specs,
+    cache_specs,
+    default_plan,
+    opt_state_specs,
+    param_specs,
+)

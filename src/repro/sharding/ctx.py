@@ -1,0 +1,71 @@
+"""Trace-time activation-sharding context.
+
+Model code is plan-agnostic; launchers enter `activation_sharding(mesh,
+plan)` around tracing so strategic `constrain(x, ...)` calls inside the
+model pin activations (batch dim on the data axes, expert dim on the EP
+axis, ...) without threading mesh/plan through every function signature.
+
+Outside any context, `constrain` is the identity — single-device smoke
+tests and kernels are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: jax.sharding.Mesh, plan: Any):
+    _ACTIVE.append((mesh, plan))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current() -> Optional[Tuple[jax.sharding.Mesh, Any]]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _resolve(plan: Any, logical: Optional[str]):
+    if logical is None:
+        return None
+    if logical == "batch":
+        return plan.batch_axes
+    if logical == "tp":
+        return plan.tp_axis
+    if logical == "ep":
+        return plan.ep_axis
+    if logical == "seq":
+        return plan.seq_axis
+    if logical == "sp":   # sequence-parallel residual stream (train)
+        return plan.tp_axis if getattr(plan, "sequence_parallel", False) else None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def constrain(x: jax.Array, *logical_dims: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical dim names, e.g.
+    constrain(x, "batch", None, None)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, plan = ctx
+    assert len(logical_dims) == x.ndim, (logical_dims, x.shape)
+    spec = P(*[_resolve(plan, d) for d in logical_dims])
+    # skip constraints that do not divide evenly (XLA pads internally for
+    # intermediates, but clean division is required for good layouts)
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, entry in zip(x.shape, spec):
+        axes = entry if isinstance(entry, tuple) else (entry,) if entry else ()
+        size = 1
+        for a in axes:
+            size *= names.get(a, 1)
+        if size > 1 and dim % size:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

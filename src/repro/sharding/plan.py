@@ -1,0 +1,274 @@
+"""Sharding plans: logical-axis → mesh-axis assignment for every array.
+
+A `ShardingPlan` is the *compile target of the intent layer*: the intent
+compiler (repro.core.compiler) produces/acts on plans, and the launchers
+turn plans into concrete `PartitionSpec` trees for params, optimizer state,
+caches and batches.
+
+Baseline layout (paper-faithful conservative default):
+  * batch           -> ("pod", "data") as available  (DP)
+  * params          -> FSDP over "data" on one large dim + TP over "model"
+  * attention heads -> "model" (XLA pads non-divisible head counts)
+  * d_ff            -> "model"
+  * experts         -> "model" (EP)
+  * vocab           -> "model"
+  * decode KV seq   -> "data" only when batch==1 (long-context cells)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    batch_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Tuple[str, ...] = ("data",)     # param-storage sharding (ZeRO)
+    tp_axis: Optional[str] = "model"           # tensor parallel
+    ep_axis: Optional[str] = "model"           # expert parallel
+    # KV-cache sequence sharding (flash-decoding / context parallel):
+    # a mesh axis name or tuple of names
+    seq_axis: Any = None
+    # Megatron-style sequence parallelism for the residual stream: the
+    # between-layer carry is sharded on (batch, tp) so saved scan residuals
+    # shrink tp-fold; GSPMD inserts the AG/RS around attention/MLP.
+    sequence_parallel: bool = False
+    shard_attn_heads: bool = True
+    shard_vocab: bool = True
+    # restricted device placement (intent layer): mesh-axis coordinates this
+    # plan's arrays are confined to, e.g. (("pod", 0),) pins to pod 0.
+    device_constraints: Tuple[Tuple[str, int], ...] = ()
+    # collective policy hook (intent layer): axes that tagged tensors'
+    # collectives must NOT cross. Enforced/validated by repro.core.validator.
+    forbidden_collective_axes: Tuple[str, ...] = ()
+
+    def with_(self, **kw) -> "ShardingPlan":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def fsdp(self) -> Optional[Tuple[str, ...]]:
+        return self.fsdp_axes or None
+
+    @property
+    def tp(self) -> Optional[str]:
+        return self.tp_axis
+
+
+def default_plan(multi_pod: bool = False) -> ShardingPlan:
+    if multi_pod:
+        return ShardingPlan(batch_axes=("pod", "data"), fsdp_axes=("data",))
+    return ShardingPlan()
+
+
+# ---------------------------------------------------------------------------
+# param specs
+# ---------------------------------------------------------------------------
+
+
+def _gqa_specs(plan: ShardingPlan) -> dict:
+    tp = plan.tp if plan.shard_attn_heads else None
+    f = plan.fsdp
+    return {
+        "wq": P(f, tp), "wk": P(f, tp), "wv": P(f, tp), "wo": P(tp, f),
+    }
+
+
+def _mla_specs(cfg: ModelConfig, plan: ShardingPlan) -> dict:
+    tp = plan.tp if plan.shard_attn_heads else None
+    f = plan.fsdp
+    return {
+        "w_dq": P(f, None),
+        "q_norm": {"scale": P(None)},
+        "w_uq": P(None, tp),
+        "w_dkv": P(f, None),
+        "kv_norm": {"scale": P(None)},
+        "w_uk": P(None, tp),
+        "w_uv": P(None, tp),
+        "wo": P(tp, f),
+    }
+
+
+def _norm_specs(cfg: ModelConfig) -> dict:
+    s = {"scale": P(None)}
+    if cfg.norm_type == "layernorm":
+        s["bias"] = P(None)
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, plan: ShardingPlan) -> dict:
+    f, tp = plan.fsdp, plan.tp
+    s = {"w_up": P(f, tp), "w_down": P(tp, f)}
+    if cfg.mlp_act == "silu":
+        s["w_gate"] = P(f, tp)
+    return s
+
+
+def _moe_specs(cfg: ModelConfig, plan: ShardingPlan) -> dict:
+    ep, f = plan.ep_axis, plan.fsdp
+    s = {
+        "router": P(f, None),
+        "w_up": P(ep, f, None),
+        "w_down": P(ep, None, f),
+    }
+    if cfg.mlp_act == "silu":
+        s["w_gate"] = P(ep, f, None)
+    if cfg.moe and cfg.moe.num_shared_experts:
+        s["shared"] = _mlp_specs(cfg, plan)
+    return s
+
+
+def _ssm_specs(cfg: ModelConfig, plan: ShardingPlan) -> dict:
+    f, tp = plan.fsdp, plan.tp
+    return {
+        "w_z": P(f, tp), "w_x": P(f, tp), "w_B": P(f, None), "w_C": P(f, None),
+        "w_dt": P(f, tp),
+        "conv_x_w": P(None, tp), "conv_x_b": P(tp),
+        "conv_B_w": P(None, None), "conv_B_b": P(None),
+        "conv_C_w": P(None, None), "conv_C_b": P(None),
+        "dt_bias": P(tp), "A_log": P(tp), "D": P(tp),
+        "norm_scale": P(tp),
+        "out_proj": P(tp, f),
+    }
+
+
+def _sublayer_specs(cfg: ModelConfig, plan: ShardingPlan, mixer: str, f: str) -> dict:
+    s: dict = {"mixer_norm": _norm_specs(cfg)}
+    if mixer == "attn":
+        s["mixer"] = _gqa_specs(plan)
+    elif mixer == "mla":
+        s["mixer"] = _mla_specs(cfg, plan)
+    else:
+        s["mixer"] = _ssm_specs(cfg, plan)
+    if f != "none":
+        s["ffn_norm"] = _norm_specs(cfg)
+        s["ffn"] = _moe_specs(cfg, plan) if f == "moe" else _mlp_specs(cfg, plan)
+    return s
+
+
+def _prepend(spec_tree: PyTree, axis=None) -> PyTree:
+    """Add a leading (scan/layer) dim to every PartitionSpec."""
+    return jax.tree.map(
+        lambda s: P(axis, *s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ModelConfig, plan: ShardingPlan) -> PyTree:
+    """PartitionSpec tree matching `Model.init_params` output structure."""
+    from repro.models.lm import layer_kinds  # avoid cycle
+
+    f, tp = plan.fsdp, plan.tp
+    vocab_tp = tp if plan.shard_vocab else None
+
+    if cfg.encdec is not None:
+        enc_layer = {
+            "attn_norm": _norm_specs(cfg), "attn": _gqa_specs(plan),
+            "mlp_norm": _norm_specs(cfg), "mlp": _mlp_specs(cfg, plan),
+        }
+        dec_layer = {
+            "self_norm": _norm_specs(cfg), "self_attn": _gqa_specs(plan),
+            "cross_norm": _norm_specs(cfg), "cross_attn": _gqa_specs(plan),
+            "mlp_norm": _norm_specs(cfg), "mlp": _mlp_specs(cfg, plan),
+        }
+        return {
+            "embed": P(vocab_tp, f),
+            "pos_embed": P(None, None),
+            "enc_layers": _prepend(enc_layer),
+            "enc_norm": _norm_specs(cfg),
+            "dec_layers": _prepend(dec_layer),
+            "dec_norm": _norm_specs(cfg),
+        }
+
+    kinds = layer_kinds(cfg)
+    if cfg.hybrid_period:
+        layer = {f"pos{off}": _sublayer_specs(cfg, plan, *kinds[off])
+                 for off in range(len(kinds))}
+    else:
+        layer = _sublayer_specs(cfg, plan, *kinds[0])
+
+    specs = {
+        "embed": P(vocab_tp, f),
+        "layers": _prepend(layer),
+        "final_norm": _norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(f, vocab_tp)
+    return specs
+
+
+def opt_state_specs(pspecs: PyTree) -> PyTree:
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "count": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache + batch specs
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, plan: ShardingPlan, *, batch: int) -> PyTree:
+    """PartitionSpec tree matching `Model.init_cache` output structure.
+
+    Decode caches shard the SEQUENCE dim (flash-decoding / context-parallel
+    style) rather than the few-KV-head dim: KV-head counts (2..8) don't
+    divide the 16-wide model axis, while 32k+ contexts always do. Distributed
+    softmax (max/sum all-reduce) is inserted by GSPMD automatically.
+    """
+    from repro.models.lm import layer_kinds
+
+    b_ax = plan.batch_axes if batch > 1 else None
+    seq = plan.seq_axis
+
+    def gqa_cache(seq_ax=seq):
+        return {"k": P(None, b_ax, seq_ax, None, None),
+                "v": P(None, b_ax, seq_ax, None, None)}
+
+    def mla_cache():
+        return {"ckv": P(None, b_ax, seq, None),
+                "kpe": P(None, b_ax, seq, None)}
+
+    def ssm_cache():
+        return {"conv_x": P(None, b_ax, None, plan.tp),
+                "conv_B": P(None, b_ax, None, None),
+                "conv_C": P(None, b_ax, None, None),
+                "ssm": P(None, b_ax, plan.tp, None, None)}
+
+    if cfg.encdec is not None:
+        # cross K/V seq = encoder frames (1500 — not shardable); replicate seq
+        return {"self": gqa_cache(), "cross": gqa_cache(seq_ax=None)}
+
+    kinds = layer_kinds(cfg)
+    if cfg.hybrid_period:
+        out = {}
+        for off, (mixer, _) in enumerate(kinds):
+            if mixer == "attn":
+                out[f"pos{off}"] = gqa_cache()
+            elif mixer == "mla":
+                out[f"pos{off}"] = mla_cache()
+            else:
+                out[f"pos{off}"] = ssm_cache()
+        return out
+    mixer = kinds[0][0]
+    return {"attn": gqa_cache, "mla": mla_cache, "ssm": ssm_cache}[mixer]()
+
+
+def batch_specs(cfg: ModelConfig, plan: ShardingPlan, cell: ShapeCell) -> dict:
+    """Input-batch PartitionSpecs per shape cell kind."""
+    b_ax = plan.batch_axes if cell.global_batch > 1 else None
+    specs = {"tokens": P(b_ax, None)}
+    if cell.kind == "train":
+        specs["loss_mask"] = P(b_ax, None)
+    if cfg.encdec is not None:
+        specs["frames"] = P(b_ax, None, None)
+    if cfg.pos_type == "mrope":
+        specs["positions"] = P(None, b_ax, None)
+    return specs

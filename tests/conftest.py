@@ -1,0 +1,13 @@
+"""Shared fixtures. NB: no XLA_FLAGS here — tests run on the single real CPU
+device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,82 @@
+"""HLO cost model + collective attribution tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import axes_crossed, parse_collectives
+from repro.core.hlo_cost import HloCostModel
+from repro.core.validator import check_hlo_axes
+
+
+def _scan_module(n_layers, width=256):
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x.sum()
+    ws = jax.ShapeDtypeStruct((n_layers, width, width), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, width), jnp.float32)
+    return jax.jit(f).lower(ws, x).compile().as_text()
+
+
+def test_cost_model_multiplies_while_trip_count():
+    f1 = HloCostModel(_scan_module(1)).cost().flops
+    f8 = HloCostModel(_scan_module(8)).cost().flops
+    assert 7.5 < f8 / f1 < 8.5, (f1, f8)
+
+
+def test_cost_model_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    flops = HloCostModel(txt).cost().flops
+    assert abs(flops - 2 * 64 * 128 * 32) / (2 * 64 * 128 * 32) < 0.05
+
+
+SYNTH_HLO = """
+HloModule synth
+
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%p0), channel_id=1, replica_groups={{0,1},{2,3}}, use_global_device_ids=true, to_apply=%add
+  ROOT %ag = f32[64,64]{1,0} all-gather(%ar), channel_id=2, replica_groups={{0,2},{1,3}}, dimensions={0}, use_global_device_ids=true
+}
+"""
+
+
+def test_parse_collectives_and_axes():
+    colls = parse_collectives(SYNTH_HLO)
+    assert {c.kind for c in colls} == {"all-reduce", "all-gather"}
+    ar = next(c for c in colls if c.kind == "all-reduce")
+    ag = next(c for c in colls if c.kind == "all-gather")
+    # mesh (2, 2) with axes (pod, model): device = pod*2 + model
+    assert axes_crossed(ar.groups, None, (2, 2), ("pod", "model")) == ("model",)
+    assert axes_crossed(ag.groups, None, (2, 2), ("pod", "model")) == ("pod",)
+
+
+def test_check_hlo_axes_fail_closed():
+    ok, msg = check_hlo_axes(SYNTH_HLO, ["pod"], (2, 2), ("pod", "model"))
+    assert not ok and "pod" in msg
+    ok, msg = check_hlo_axes(SYNTH_HLO, ["data"], (2, 2), ("pod", "data"))
+    # second mesh interpretation: axis named data == old model -> both cross?
+    # groups {0,2}/{1,3} cross dim0 ("pod"); {0,1}/{2,3} cross dim1 ("data")
+    assert not ok
+
+
+def test_iota_replica_groups():
+    txt = ("%ar = f32[8]{0} all-reduce(%x), channel_id=1, "
+           "replica_groups=[2,2]<=[4], use_global_device_ids=true\n")
+    colls = parse_collectives(txt)
+    assert len(colls) == 1
+    np.testing.assert_array_equal(colls[0].groups, [[0, 1], [2, 3]])
+
+
+def test_wire_bytes_model():
+    colls = parse_collectives(SYNTH_HLO)
+    ar = next(c for c in colls if c.kind == "all-reduce")
+    # ring all-reduce: 2 * bytes * (n-1)/n
+    expect = 2 * 64 * 64 * 4 * 0.5
+    assert abs(ar.wire_bytes_per_device() - expect) < 1

@@ -1,0 +1,148 @@
+"""Pallas kernel validation: hypothesis sweeps over shapes/dtypes with
+assert_allclose against the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, moe_topk_ref
+from repro.models.attention import sdpa
+from repro.models.ssm import ssd_scan_ref, ssd_step_ref
+
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@given(
+    B=st.sampled_from([1, 2]),
+    S=st.sampled_from([64, 128, 200, 384]),
+    heads=st.sampled_from([(2, 1), (4, 2), (4, 4), (6, 2)]),
+    D=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_kernel_matches_sdpa(B, S, heads, D, dtype):
+    Hq, Hkv = heads
+    key = jax.random.PRNGKey(B * S + Hq + D)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    gold = sdpa(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), scale=D ** -0.5, causal=True)
+    out = ops.flash_attention(q, k, v, causal=True, q_block=64, k_block=64)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), atol=tol, rtol=tol)
+
+
+@given(
+    S=st.sampled_from([96, 160, 320]),
+    q_chunk=st.sampled_from([32, 64, 128]),
+    k_chunk=st.sampled_from([32, 64]),
+)
+def test_flash_ref_matches_sdpa(S, q_chunk, k_chunk):
+    key = jax.random.PRNGKey(S + q_chunk)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, S, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, 2, 32), jnp.float32)
+    gold = sdpa(q, k, v, scale=32 ** -0.5, causal=True)
+    out = flash_attention_ref(q, k, v, causal=True,
+                              q_chunk=q_chunk, k_chunk=k_chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               atol=5e-6, rtol=5e-6)
+
+
+def test_flash_kernel_noncausal():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.float32)
+    gold = sdpa(q, k, v, scale=32 ** -0.5, causal=False)
+    out = ops.flash_attention(q, k, v, causal=False, q_block=64, k_block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=5e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(key, B, S, H, P, G, N):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    return x, dt, A, Bm, Cm
+
+
+@given(
+    S=st.sampled_from([32, 96, 128]),
+    chunk=st.sampled_from([16, 32]),
+    HG=st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+    PN=st.sampled_from([(8, 16), (16, 32)]),
+)
+def test_ssd_kernel_matches_ref(S, chunk, HG, PN):
+    H, G = HG
+    P, N = PN
+    x, dt, A, Bm, Cm = _ssd_inputs(jax.random.PRNGKey(S + H + P), 2, S, H, P, G, N)
+    y_ref, h_ref = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    y_ker, h_ker = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_ker), np.asarray(h_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_ref_matches_stepwise_recurrence():
+    """The chunked algorithm must equal the naive per-token recurrence."""
+    B, S, H, P, G, N = 1, 24, 2, 8, 1, 16
+    x, dt, A, Bm, Cm = _ssd_inputs(jax.random.PRNGKey(7), B, S, H, P, G, N)
+    y_chunk, h_chunk = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=8)
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        y_t, h = ssd_step_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_padding_exactness():
+    """Non-multiple S: padding must not change y[:S] or the final state."""
+    B, S, H, P, G, N = 2, 37, 2, 8, 1, 16
+    x, dt, A, Bm, Cm = _ssd_inputs(jax.random.PRNGKey(3), B, S, H, P, G, N)
+    y, h = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=16)
+    h_ref = jnp.zeros((B, H, P, N))
+    for t in range(S):
+        _, h_ref = ssd_step_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h_ref)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE top-k gating
+# ---------------------------------------------------------------------------
+
+@given(
+    T=st.sampled_from([8, 100, 256, 300]),
+    E=st.sampled_from([8, 16, 60]),
+    k=st.sampled_from([1, 2, 4]),
+    norm=st.booleans(),
+)
+def test_moe_topk_kernel_matches_ref(T, E, k, norm):
+    logits = jax.random.normal(jax.random.PRNGKey(T + E + k), (T, E))
+    wr, ir = moe_topk_ref(logits, k, norm_topk=norm)
+    wk, ik = ops.moe_topk(logits, k, norm_topk=norm, block=128)
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))

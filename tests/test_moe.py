@@ -1,0 +1,88 @@
+"""MoE layer invariants (hypothesis property tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced_config
+from repro.configs.base import MoEConfig
+from repro.models import mlp
+from repro.models.common import act_fn
+
+settings.register_profile("moe", max_examples=10, deadline=None)
+settings.load_profile("moe")
+
+
+def _moe_cfg(E=8, k=2, d=32, ff=48, shared=0):
+    base = get_reduced_config("qwen2_moe_a2_7b")
+    return dataclasses.replace(
+        base, d_model=d, param_dtype="float32", activ_dtype="float32",
+        moe=MoEConfig(num_experts=E, top_k=k, d_expert=ff,
+                      num_shared_experts=shared, d_shared=ff,
+                      norm_topk_prob=True))
+
+
+def _dense_reference(cfg, p, x):
+    """Per-token dense evaluation of the same experts — the dropless oracle."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    act = act_fn(cfg.mlp_act)
+    out = jnp.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        acc = jnp.zeros((d,))
+        for j in range(m.top_k):
+            e = int(idx[t, j])
+            h = act(xt[t] @ p["w_gate"][e]) * (xt[t] @ p["w_up"][e])
+            acc = acc + w[t, j] * (h @ p["w_down"][e])
+        out = out.at[t].set(acc)
+    if m.num_shared_experts:
+        out = out + mlp.mlp(cfg, p["shared"], xt)
+    return out.reshape(B, S, d)
+
+
+@given(E=st.sampled_from([4, 8]), k=st.sampled_from([1, 2]),
+       shared=st.sampled_from([0, 1]))
+def test_small_group_moe_is_exact(E, k, shared):
+    cfg = _moe_cfg(E=E, k=k, shared=shared)
+    p = mlp.init_moe(cfg, jax.random.PRNGKey(E + k))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model))
+    out, aux = mlp.moe_ffn(cfg, p, x)
+    ref = _dense_reference(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    assert jnp.isfinite(aux)
+
+
+def test_expert_padding_never_routed():
+    """Padded experts (idx >= num_experts) must receive zero weight."""
+    cfg = _moe_cfg(E=5, k=2)   # padded to 16
+    p = mlp.init_moe(cfg, jax.random.PRNGKey(0))
+    assert p["w_up"].shape[0] == mlp.padded_experts(5) == 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    out, _ = mlp.moe_ffn(cfg, p, x)
+    # zero the pad experts' weights -> output must be identical
+    p2 = dict(p)
+    for key in ("w_up", "w_gate", "w_down"):
+        p2[key] = p[key].at[5:].set(0.0)
+    out2, _ = mlp.moe_ffn(cfg, p2, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+
+
+def test_group_padding_tokens_dropped():
+    """T not a multiple of the group size: padded tokens must not affect
+    real outputs."""
+    cfg = _moe_cfg(E=4, k=2)
+    p = mlp.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 7, cfg.d_model))
+    out, _ = mlp.moe_ffn(cfg, p, x)
+    ref = _dense_reference(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)

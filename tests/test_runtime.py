@@ -1,0 +1,131 @@
+"""Fault tolerance: checkpoint/restart, failure recovery, stragglers,
+deterministic data restart, optimizer behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.configs import get_reduced_config
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.runtime import TrainRunner
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_reduced_config("minitron_4b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = AdamW(lr=warmup_cosine(1e-3, 5, 100))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    ds = SyntheticLM(cfg.vocab_size, 32, 4, seed=0)
+    return model, params, opt_state, step, ds
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny_setup):
+    _, params, opt_state, _, _ = tiny_setup
+    save_checkpoint(tmp_path, 3, {"params": params, "opt": opt_state})
+    step, restored = load_checkpoint(tmp_path, {"params": params,
+                                                "opt": opt_state})
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention(tmp_path, tiny_setup):
+    _, params, _, _, _ = tiny_setup
+    for s in range(6):
+        save_checkpoint(tmp_path, s, {"p": params}, keep=2)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+    assert steps == [4, 5]
+    assert latest_step(tmp_path) == 5
+
+
+def test_loss_decreases(tmp_path, tiny_setup):
+    _, params, opt_state, step_fn, ds = tiny_setup
+    runner = TrainRunner(step_fn=step_fn, params=params, opt_state=opt_state,
+                         dataset=ds, ckpt_dir=tmp_path, ckpt_every=50)
+    out = runner.run(30)
+    first = np.mean(runner.losses[:5])
+    last = np.mean(runner.losses[-5:])
+    assert last < first, f"loss did not decrease: {first} -> {last}"
+
+
+def test_failure_recovery_resumes_from_checkpoint(tmp_path, tiny_setup):
+    _, params, opt_state, step_fn, ds = tiny_setup
+    runner = TrainRunner(step_fn=step_fn, params=params, opt_state=opt_state,
+                         dataset=ds, ckpt_dir=tmp_path, ckpt_every=5)
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        runner.run(20, fail_at=13)
+    assert latest_step(tmp_path) == 10          # last periodic checkpoint
+    out = runner.recover_and_run(20)
+    assert out["steps"] == 20
+    assert out["restarts"] == 1
+
+
+def test_straggler_detection(tmp_path, tiny_setup):
+    _, params, opt_state, step_fn, ds = tiny_setup
+    flagged = []
+    runner = TrainRunner(step_fn=step_fn, params=params, opt_state=opt_state,
+                         dataset=ds, ckpt_dir=tmp_path, ckpt_every=100,
+                         mitigation_hook=lambda rep: flagged.append(rep))
+    runner.run(12, slow_steps={8: 1.5})
+    assert any(r.step == 8 for r in runner.monitor.flagged)
+    assert flagged and flagged[0].slowdown > 2.0
+
+
+def test_data_pipeline_deterministic_restart():
+    ds = SyntheticLM(vocab_size=256, seq_len=16, global_batch=4, seed=1)
+    b1 = ds.batch_at(7)
+    b2 = ds.batch_at(7)   # "restarted" stream
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # mask excludes BOS targets
+    assert float(b1["loss_mask"].min()) in (0.0, 1.0)
+    assert b1["tokens"].shape == (4, 17)
+
+
+def test_adamw_optimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.ones((4,)) * 5.0}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+def test_grad_compression_error_feedback():
+    from repro.optim.compress import (compress_grads_int8,
+                                      decompress_grads_int8, init_residual)
+    g = {"w": jnp.linspace(-1, 1, 1000)}
+    res = init_residual(g)
+    acc = jnp.zeros_like(g["w"])
+    true = jnp.zeros_like(g["w"])
+    for _ in range(20):
+        q, scales, res = compress_grads_int8(g, res)
+        acc = acc + decompress_grads_int8(q, scales)["w"]
+        true = true + g["w"]
+    # error feedback keeps the long-run mean unbiased
+    err = float(jnp.max(jnp.abs(acc - true))) / 20
+    assert err < 1e-2
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path, tiny_setup):
+    """Checkpoint saved under one layout restores under explicit shardings
+    (single-device here, but exercising the device_put path)."""
+    _, params, opt_state, _, _ = tiny_setup
+    save_checkpoint(tmp_path, 1, {"params": params})
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        {"params": params})
+    step, restored = load_checkpoint(tmp_path, {"params": params}, shardings=sh)
+    leaf = jax.tree.leaves(restored["params"])[0]
+    assert leaf.sharding.mesh.axis_names == ("data",)

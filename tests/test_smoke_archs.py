@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs; plus exact decode-vs-prefill
+consistency (fp32) for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import build_model
+from repro.models.common import padded_vocab
+
+
+def _batch(cfg, key, B=2, S=17):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, 16, cfg.d_model))
+    if cfg.pos_type == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch, rng):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(rng, max_seq=64)
+    loss, metrics = jax.jit(model.train_loss)(params, _batch(cfg, rng))
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch} loss not finite"
+    assert jnp.isfinite(metrics["ce"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_gradients_finite(arch, rng):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(rng, max_seq=64)
+    grads = jax.jit(jax.grad(
+        lambda p: model.train_loss(p, _batch(cfg, rng))[0]))(params)
+    bad = [p for p, g in
+           jax.tree_util.tree_flatten_with_path(grads)[0]
+           if not bool(jnp.all(jnp.isfinite(g)))]
+    assert not bad, f"{arch}: non-finite grads at {bad[:3]}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill_exactly(arch, rng):
+    cfg = dataclasses.replace(get_reduced_config(arch),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(rng, max_seq=64)
+    B, S = 2, 17
+    batch_full = _batch(cfg, rng, B, S)
+    batch_pre = {k: (v[:, :, :-1] if k == "positions" else
+                     v[:, :-1] if k == "tokens" else v)
+                 for k, v in batch_full.items()}
+    logits_full, _ = jax.jit(model.prefill)(params, batch_full)
+    _, cache = jax.jit(model.prefill)(params, batch_pre)
+
+    enc_len = 16 if cfg.family == "encdec" else None
+    pool = model.init_cache(B, 32, dtype=jnp.float32, enc_len=enc_len)
+
+    def merge(z, c):
+        if c.shape == z.shape:
+            return c.astype(z.dtype)
+        ax = [i for i, (a, b) in enumerate(zip(z.shape, c.shape)) if a != b][0]
+        sl = [slice(None)] * z.ndim
+        sl[ax] = slice(0, c.shape[ax])
+        return z.at[tuple(sl)].set(c.astype(z.dtype))
+
+    cache_full = jax.tree.map(merge, pool, cache)
+    logits_dec, _ = jax.jit(model.decode_step)(
+        params, batch_full["tokens"][:, -1:], cache_full, jnp.int32(S - 1))
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec)))
+    assert err < 2e-3, f"{arch}: decode/prefill mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) configs carry the exact published shapes."""
+    cfg = get_config(arch)
+    expected = {
+        "whisper_large_v3": (32, 1280, 20, 20, 5120, 51_866),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400, 73_448),
+        "nemotron_4_340b": (96, 18_432, 96, 8, 73_728, 256_000),
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256_000),
+        "deepseek_coder_33b": (62, 7168, 56, 8, 19_200, 32_256),
+        "qwen2_vl_2b": (28, 1536, 12, 2, 8960, 151_936),
+        "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151_936),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163_840),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 14_336, 65_536),
+        "mamba2_370m": (48, 1024, 0, 0, 0, 50_280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_configs():
+    q = get_config("qwen2_moe_a2_7b").moe
+    assert (q.num_experts, q.top_k, q.num_shared_experts) == (60, 4, 4)
+    m = get_config("moonshot_v1_16b_a3b").moe
+    assert (m.num_experts, m.top_k) == (64, 6)
+    j = get_config("jamba_v0_1_52b")
+    assert (j.moe.num_experts, j.moe.top_k) == (16, 2)
+    assert j.hybrid_period == 8 and j.hybrid_attn_offsets == (4,)
+    s = get_config("mamba2_370m").ssm
+    assert s.d_state == 128
+
+
+def test_vocab_padding_excluded_from_loss(rng):
+    """Padded vocab rows must not leak probability mass into the CE."""
+    cfg = get_reduced_config("minitron_4b")
+    assert padded_vocab(cfg.vocab_size) == 256  # reduced vocab already padded
+    cfg249 = dataclasses.replace(cfg, vocab_size=249)  # force padding
+    model = build_model(cfg249)
+    params = model.init_params(rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 17), 0, 249)}
+    loss, _ = jax.jit(model.train_loss)(params, batch)
+    # uniform-ish CE must be close to log(249), not log(256-padded)
+    assert abs(float(loss) - jnp.log(249)) < 0.5
