@@ -1,0 +1,15 @@
+PY ?= python
+
+.PHONY: test ci example bench-reconfig
+
+test:
+	$(PY) -m pytest -x -q
+
+example:
+	PYTHONPATH=src $(PY) examples/serve_intents.py
+
+bench-reconfig:
+	PYTHONPATH=src:. $(PY) benchmarks/reconfig_serving.py
+
+ci:
+	bash scripts/ci.sh

@@ -97,57 +97,13 @@ def bench_failure_modes() -> None:
 
 
 def bench_reconfig_serving() -> None:
-    """Online reconfiguration on a live engine: downtime + TTFT/TPOT before
-    vs after the swap (calibration-band metrics)."""
-    import dataclasses as dc
-
-    import jax
-    import numpy as np
-
-    from repro.configs import get_reduced_config
-    from repro.core import ReconfigEngine
-    from repro.models import build_model
-    from repro.serving import Request, ServingEngine
-
-    cfg = dc.replace(get_reduced_config("qwen2_moe_a2_7b"),
-                     param_dtype="float32", activ_dtype="float32")
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, n_slots=4, s_max=48)
-    rng = np.random.default_rng(0)
-
-    def load(n, base):
-        for rid in range(n):
-            eng.submit(Request(
-                base + rid,
-                rng.integers(2, cfg.vocab_size, size=8).astype(np.int32),
-                max_new_tokens=8))
-
-    load(8, 0)
-    eng.run()
-    before = eng.metrics()
-
-    rc = ReconfigEngine(eng)
-    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
-    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-    report = rc.reconfigure(new_shardings={
-        "params": jax.tree.map(lambda _: repl, eng.params),
-        "cache": jax.tree.map(lambda _: repl, eng.cache)})
-
-    eng.done.clear()
-    load(8, 100)
-    eng.run()
-    after = eng.metrics()
-
-    emit("reconfig_prepare_s", round(report.prepare_s, 4),
-         "background compile (serving continues)")
-    emit("reconfig_downtime_s", round(report.downtime_s, 4),
-         "blocking swap window")
-    emit("reconfig_migrated_MiB", round(report.migrate_bytes / 2**20, 2))
-    emit("reconfig_ttft_before_s", round(before["ttft_mean_s"], 4))
-    emit("reconfig_ttft_after_s", round(after["ttft_mean_s"], 4))
-    emit("reconfig_tpot_before_s", round(before["tpot_mean_s"], 4))
-    emit("reconfig_tpot_after_s", round(after["tpot_mean_s"], 4))
+    """Online reconfiguration through the ServingCluster runtime: downtime +
+    TTFT/TPOT before vs after the swap (calibration-band metrics)."""
+    try:
+        from benchmarks.reconfig_serving import bench_reconfig_cluster
+    except ImportError:   # invoked as `python benchmarks/run.py`
+        from reconfig_serving import bench_reconfig_cluster
+    bench_reconfig_cluster(emit=emit)
 
 
 def bench_roofline_table() -> None:

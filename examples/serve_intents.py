@@ -3,12 +3,17 @@ on the serving fabric, evaluated on downtime / TTFT / TPOT).
 
     PYTHONPATH=src python examples/serve_intents.py
 
-1. start a continuous-batching engine for a small MoE model;
-2. serve a first wave of mixed phi/general requests;
-3. submit the privacy intent "Phi traffic must remain inside the pod" —
-   the orchestrator compiles + validates it fail-closed;
-4. hot-swap the engine onto the restricted plan (ReconfigEngine) and keep
-   serving; report downtime and before/after TTFT/TPOT.
+Public-API flow only (no private engine attributes, no plan fishing):
+
+1. register a continuous-batching engine with a `ServingCluster`;
+2. serve a first wave of mixed phi/general requests through the cluster;
+3. submit the privacy intent "Phi traffic must remain inside the pod" with
+   ``apply_to=cluster`` — the orchestrator compiles + validates it
+   fail-closed, then the cluster AOT-compiles the new executables in the
+   PREPARE phase and hot-swaps every affected engine (blocking window
+   contains migration only, never compilation);
+4. keep serving phi traffic under the restricted plan; the DowntimeReport
+   finalizes its after-swap metrics automatically.
 """
 import dataclasses
 
@@ -16,14 +21,15 @@ import jax
 import numpy as np
 
 from repro.configs import get_reduced_config
-from repro.core import Orchestrator, ReconfigEngine
+from repro.core import Orchestrator
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, RoutingError, ServingCluster, ServingEngine
+from repro.sharding import default_plan
 
 
-def load(engine, cfg, rng, n, base, labels):
+def load(cluster, cfg, rng, n, base, labels):
     for rid in range(n):
-        engine.submit(Request(
+        cluster.submit(Request(
             base + rid,
             rng.integers(2, cfg.vocab_size, size=8).astype(np.int32),
             max_new_tokens=8, labels=labels))
@@ -35,47 +41,59 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, n_slots=4, s_max=48)
+
+    cluster = ServingCluster()
+    cluster.register("edge0", engine, plan=default_plan())
     rng = np.random.default_rng(0)
 
     print("== wave 1: mixed tenants, default plan ==")
-    load(engine, cfg, rng, 4, 0, {"data-type": "phi"})
-    load(engine, cfg, rng, 4, 10, {"data-type": "general"})
-    engine.run()
-    before = engine.metrics()
+    load(cluster, cfg, rng, 4, 0, {"data-type": "phi"})
+    load(cluster, cfg, rng, 4, 10, {"data-type": "general"})
+    cluster.run()
+    before = cluster.metrics("edge0")
     print("  ", before)
 
-    print("== intent arrives ==")
+    print("== intent arrives: validate + reconfigure through the cluster ==")
     orch = Orchestrator()
     res = orch.submit("Phi traffic must remain inside the pod and avoid "
-                      "untrusted switches.")
+                      "untrusted switches.", apply_to=cluster)
     print("   validator:", res.report.summary())
     assert res.success
-    plan = next(v for k, v in orch.state.plans.items() if "phi" in k)
-    print("   restricted plan:", plan)
-
-    print("== hot swap (compile-ahead + blocking migrate) ==")
-    rc = ReconfigEngine(engine)
-    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
-    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-    report = rc.reconfigure(new_shardings={
-        "params": jax.tree.map(lambda _: repl, engine.params),
-        "cache": jax.tree.map(lambda _: repl, engine.cache)})
+    report = res.reports["edge0"]
+    print("   restricted plan:", cluster.engine("edge0").plan)
+    print("   route constraints:", cluster.route_constraints())
     print("  ", report.summary())
+    assert report.compiled_in_prepare > 0, "PREPARE must AOT-compile"
 
     print("== wave 2: serving continues under the restricted plan ==")
-    engine.done.clear()
-    load(engine, cfg, rng, 8, 100, {"data-type": "phi"})
-    engine.run()
-    rc.finalize_metrics(report)
-    after = engine.metrics()
+    load(cluster, cfg, rng, 8, 100, {"data-type": "phi"})
+    cluster.run()   # auto-finalizes report.metrics_after (post-swap window)
+    after = report.metrics_after
     print("  ", after)
 
+    print("== fail-closed routing ==")
+    try:
+        strict = ServingCluster()
+        strict.register("noncompliant", ServingEngine(
+            model, params, n_slots=2, s_max=48))
+        strict.set_route_constraint(
+            "phi", cluster.route_constraints()["phi"])
+        strict.submit(Request(999, rng.integers(2, cfg.vocab_size, size=8)
+                              .astype(np.int32), labels={"data-type": "phi"}))
+    except RoutingError as e:
+        print("   rejected as expected:", e)
+    else:
+        raise SystemExit("FAIL-OPEN: a non-compliant engine accepted phi "
+                         "traffic — the routing guarantee has regressed")
+
     print("== summary ==")
+    print(f"  prepare (AOT x{report.compiled_in_prepare})"
+          f" : {report.prepare_s*1e3:.1f} ms  (serving continues)")
     print(f"  downtime           : {report.downtime_s*1e3:.1f} ms")
-    print(f"  TTFT before/after  : {before['ttft_mean_s']:.3f} / "
-          f"{after['ttft_mean_s']:.3f} s")
-    print(f"  TPOT before/after  : {before['tpot_mean_s']:.3f} / "
-          f"{after['tpot_mean_s']:.3f} s")
+    print(f"  TTFT before/after  : {report.metrics_before['ttft_mean_s']:.3f}"
+          f" / {after['ttft_mean_s']:.3f} s")
+    print(f"  TPOT before/after  : {report.metrics_before['tpot_mean_s']:.3f}"
+          f" / {after['tpot_mean_s']:.3f} s")
 
 
 if __name__ == "__main__":

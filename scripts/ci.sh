@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification + the intent-driven reconfiguration path.
+# Run from the repo root:  bash scripts/ci.sh   (or: make ci)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: test suite =="
+python -m pytest -x -q
+
+echo "== reconfiguration path: serve_intents example (reduced config) =="
+PYTHONPATH=src python examples/serve_intents.py
+
+echo "CI OK"

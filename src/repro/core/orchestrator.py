@@ -9,6 +9,12 @@
 
 Safety layer: the compiled policy is applied only if the validator passes
 every atomic check (fail-closed) — LLM output is a *suggested* plan.
+
+Runtime hook: `submit(text, apply_to=cluster)` pushes the validated policy
+into a live `ServingCluster` — route constraints are installed and every
+affected engine is reconfigured online (shardings materialized from the
+compiled plan, prefill/decode AOT-compiled in the PREPARE phase, blocking
+swap, DowntimeReport per engine in `result.reports`).
 """
 from __future__ import annotations
 
@@ -42,6 +48,8 @@ class OrchestrationResult:
     timings: Dict[str, float]
     prompt_tokens: int
     completion_tokens: int
+    # engine -> DowntimeReport, populated when submit() ran with apply_to=
+    reports: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def success(self) -> bool:
@@ -69,8 +77,17 @@ class Orchestrator:
 
     # ------------------------------------------------------------------
     def submit(self, text: str,
-               hlo_modules: Optional[Dict[str, str]] = None
+               hlo_modules: Optional[Dict[str, str]] = None,
+               apply_to: Optional[object] = None,
                ) -> OrchestrationResult:
+        """Run the six-step loop for one intent.
+
+        `apply_to` (a `repro.serving.cluster.ServingCluster`) extends step
+        (F) into the live runtime: on a passing validation the cluster's
+        route constraints are programmed from the compiled plan updates and
+        affected engines are reconfigured online (compile-ahead + blocking
+        swap). The per-engine `DowntimeReport`s land in `result.reports`.
+        """
         timings: Dict[str, float] = {}
 
         # (A) + (B): state retrieval
@@ -113,7 +130,16 @@ class Orchestrator:
             time.sleep(self.stabilization_s)
         timings["apply"] = time.time() - t0
 
+        # (F, runtime) intent materialization: program the serving cluster
+        reports: Dict[str, object] = {}
+        if applied and apply_to is not None:
+            t0 = time.time()
+            reports = apply_to.apply_policy(policy,
+                                            components=self.components)
+            timings["reconfigure"] = time.time() - t0
+
         return OrchestrationResult(
             policy=policy, report=report, applied=applied, timings=timings,
             prompt_tokens=res.prompt_tokens,
-            completion_tokens=res.completion_tokens)
+            completion_tokens=res.completion_tokens,
+            reports=reports)

@@ -1,57 +1,46 @@
-"""Online reconfiguration: swap a live engine's sharding plan with minimal
-downtime (the serverless-serving reading of the paper's control loop:
-an intent change triggers recompilation of the pipeline; downtime, TTFT and
-TPOT quantify the cost).
+"""Online reconfiguration — DEPRECATED single-engine shim.
 
-Protocol (compile-ahead + blocking swap):
-  1. PREPARE (background, serving continues):
-       - compile prefill/decode executables for the new plan (AOT via
-         .lower().compile() against ShapeDtypeStructs);
-  2. SWAP (serving blocked — this is the downtime window):
-       - drain the in-flight decode step,
-       - migrate params + KV cache pool to the new shardings (device_put;
-         across pods this lowers to collective-permute-like resharding),
-       - install the new executables;
-  3. RESUME.
+The reconfiguration protocol (compile-ahead + blocking swap, DowntimeReport
+with prepare/downtime split and TTFT/TPOT before vs after) now lives in the
+cluster runtime: `repro.serving.cluster.ServingCluster.reconfigure()`, which
+AOT-compiles in PREPARE, drives the engine's public
+pause()/drain()/swap_plan()/resume() lifecycle, and finalizes the report's
+metrics automatically. `benchmarks/reconfig_serving.py` produces the
+paper-style metric table from it.
 
-`reconfigure()` returns a DowntimeReport with the prepare/downtime split and
-TTFT/TPOT measured before vs after, so the paper-style metric table can be
-produced by `benchmarks/reconfig_serving.py`.
+`ReconfigEngine` is kept so pre-cluster callers keep working; it delegates
+to the same engine lifecycle (no private-attribute mutation) and emits a
+DeprecationWarning. New code should use:
+
+    cluster = ServingCluster()
+    cluster.register("e0", engine)
+    report = cluster.reconfigure("e0", new_plan)
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, Optional
 
 import jax
 
+from repro.serving.cluster import DowntimeReport  # noqa: F401  (re-export)
 from repro.serving.engine import ServingEngine
 
 PyTree = Any
 
 
-@dataclasses.dataclass
-class DowntimeReport:
-    prepare_s: float          # background compile time (serving continues)
-    downtime_s: float         # blocking window (drain + migrate + install)
-    migrate_bytes: int
-    metrics_before: Dict[str, float]
-    metrics_after: Dict[str, float]
-
-    def summary(self) -> str:
-        return (f"prepare={self.prepare_s:.3f}s downtime={self.downtime_s:.3f}s "
-                f"migrated={self.migrate_bytes/2**20:.1f}MiB")
-
-
-def _tree_bytes(tree: PyTree) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
-
-
 class ReconfigEngine:
-    """Wraps a ServingEngine and performs plan swaps."""
+    """DEPRECATED: wraps a single ServingEngine and performs plan swaps.
+
+    Use `ServingCluster.reconfigure` instead — it materializes shardings
+    from a `ShardingPlan`, performs real AOT compilation in PREPARE, and
+    auto-finalizes the report."""
 
     def __init__(self, engine: ServingEngine):
+        warnings.warn(
+            "ReconfigEngine is deprecated; use ServingCluster.reconfigure",
+            DeprecationWarning, stacklevel=2)
         self.engine = engine
         self.history: list[DowntimeReport] = []
 
@@ -68,31 +57,28 @@ class ReconfigEngine:
 
         # ---- 1. PREPARE (background — serving would continue) ----
         t0 = time.time()
-        new_decode = make_decode() if make_decode else eng._decode
-        new_prefill = make_prefill() if make_prefill else eng._prefill
-        # AOT warmup against current shapes so the swap window excludes
-        # compilation entirely
+        executables: Dict[str, Any] = {}
+        if make_decode:
+            executables["decode"] = make_decode()
+        if make_prefill:
+            executables["prefill"] = make_prefill()
         prepare_s = time.time() - t0
 
-        # ---- 2. SWAP (blocking window) ----
+        # ---- 2. SWAP (blocking window, via the public lifecycle) ----
         t0 = time.time()
-        jax.block_until_ready(jax.tree.leaves(eng.cache))     # drain
-        migrate_bytes = _tree_bytes(eng.params) + _tree_bytes(eng.cache)
-        if new_shardings is not None:
-            if "params" in new_shardings:
-                eng.params = jax.device_put(eng.params, new_shardings["params"])
-            if "cache" in new_shardings:
-                eng.cache = jax.device_put(eng.cache, new_shardings["cache"])
-            jax.block_until_ready(jax.tree.leaves(eng.params))
-        eng._decode = new_decode
-        eng._prefill = new_prefill
+        eng.pause()
+        eng.drain()
+        migrate_bytes = eng.swap_plan(shardings=new_shardings,
+                                      executables=executables)
+        eng.resume()
         downtime_s = time.time() - t0
 
-        # ---- 3. RESUME ----
+        # ---- 3. RESUME (metrics_after auto-finalized; finalize_metrics
+        #         refreshes it after more traffic, for old callers) ----
         report = DowntimeReport(
             prepare_s=prepare_s, downtime_s=downtime_s,
             migrate_bytes=migrate_bytes,
-            metrics_before=metrics_before, metrics_after={})
+            metrics_before=metrics_before, metrics_after=eng.metrics())
         self.history.append(report)
         return report
 

@@ -1,1 +1,12 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.cluster import (  # noqa: F401
+    DowntimeReport,
+    RoutingError,
+    ServingCluster,
+)
+from repro.serving.engine import (  # noqa: F401
+    METRIC_KEYS,
+    EngineStateError,
+    Request,
+    ServingEngine,
+    compute_metrics,
+)

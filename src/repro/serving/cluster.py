@@ -1,0 +1,374 @@
+"""`ServingCluster`: the intent-driven serving control plane.
+
+This is the runtime the orchestrator programs (ROADMAP north-star layer):
+
+  * engines register with tenancy labels and a `ShardingPlan`;
+  * labeled `Request`s are routed only to engines whose plan satisfies the
+    route constraint compiled from the matching intent (phi -> pod-local
+    engines); routing is FAIL-CLOSED — with no compliant engine the request
+    is rejected, never silently served on a non-compliant one;
+  * `reconfigure()` swaps a live engine onto a new plan with the
+    compile-ahead + blocking-swap protocol:
+
+      PREPARE (serving continues): materialize shardings from the plan
+          (`plan_to_shardings`) and AOT-compile prefill/decode executables;
+      SWAP (the downtime window):  pause -> drain -> migrate params + KV
+          pool -> install executables — no compilation in this window;
+      RESUME.
+
+    The returned `DowntimeReport` is finalized automatically: metrics_after
+    snapshots at resume and is refreshed with the post-swap completion
+    window by the next `run()`/`step()` that retires requests.
+
+Typical flow (three lines of control plane):
+
+    cluster.register("edge0", engine, plan=default_plan())
+    orch.submit("Phi traffic must remain inside the pod.", apply_to=cluster)
+    cluster.run()          # keep serving; routing now enforces the intent
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.serving.engine import (
+    Request,
+    ServingEngine,
+    compute_metrics,
+)
+from repro.sharding.plan import (
+    ShardingPlan,
+    plan_satisfies,
+    plan_to_shardings,
+)
+
+PyTree = Any
+
+
+class RoutingError(RuntimeError):
+    """No registered engine satisfies the request's route constraint."""
+
+
+@dataclasses.dataclass
+class DowntimeReport:
+    """Cost of one online reconfiguration (paper metrics: downtime + the
+    TTFT/TPOT band before vs after the swap)."""
+
+    prepare_s: float          # background compile time (serving continues)
+    downtime_s: float         # blocking window (drain + migrate + install)
+    migrate_bytes: int
+    metrics_before: Dict[str, float]
+    metrics_after: Dict[str, float]
+    engine: str = ""
+    compiled_in_prepare: int = 0   # executables AOT-compiled ahead of swap
+
+    def summary(self) -> str:
+        return (f"engine={self.engine or '?'} "
+                f"prepare={self.prepare_s:.3f}s (aot x{self.compiled_in_prepare}) "
+                f"downtime={self.downtime_s*1e3:.1f}ms "
+                f"migrated={self.migrate_bytes/2**20:.1f}MiB")
+
+
+@dataclasses.dataclass
+class _EngineEntry:
+    name: str
+    engine: ServingEngine
+    pending_report: Optional[DowntimeReport] = None
+    swap_t: float = 0.0
+
+    # plan and labels read the live engine — one source of truth, so
+    # updates after registration are visible to the router
+    @property
+    def plan(self) -> ShardingPlan:
+        return self.engine.plan
+
+    @property
+    def labels(self) -> Dict[str, str]:
+        return self.engine.labels
+
+    def serves(self, labels: Dict[str, str]) -> bool:
+        """Tenancy check: an engine label that contradicts a request label
+        disqualifies; absent engine labels mean 'serves all'."""
+        for k, v in labels.items():
+            if k in self.labels and self.labels[k] != v:
+                return False
+        return True
+
+
+def _default_mesh() -> jax.sharding.Mesh:
+    """1-device mesh carrying the full production axis names, so plan specs
+    (which reference pod/data/model) always resolve."""
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1, 1),
+        ("pod", "data", "model"))
+
+
+class ServingCluster:
+    """Multi-engine serving runtime with label-based, fail-closed routing
+    and online per-engine reconfiguration."""
+
+    ROUTE_KEY = "data-type"   # the label routing constraints key on
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
+        self.mesh = mesh or _default_mesh()
+        self._entries: Dict[str, _EngineEntry] = {}
+        self._routes: Dict[str, ShardingPlan] = {}   # label value -> required
+        self.history: List[DowntimeReport] = []
+        self.rejected: List[Request] = []
+
+    # ------------------------------------------------------------------
+    # registration / introspection
+    # ------------------------------------------------------------------
+    def register(self, name: str, engine: ServingEngine, *,
+                 plan: Optional[ShardingPlan] = None,
+                 labels: Optional[Dict[str, str]] = None) -> None:
+        if name in self._entries:
+            raise ValueError(f"engine {name!r} already registered")
+        if plan is not None:
+            engine.plan = plan
+        if labels:
+            engine.labels.update(labels)
+        self._entries[name] = _EngineEntry(name, engine)
+
+    def engine(self, name: str) -> ServingEngine:
+        return self._entries[name].engine
+
+    def engines(self) -> List[str]:
+        return list(self._entries)
+
+    def route_constraints(self) -> Dict[str, ShardingPlan]:
+        return dict(self._routes)
+
+    def set_route_constraint(self, value: str,
+                             required: ShardingPlan) -> None:
+        """Require that requests labeled ``data-type=value`` be served only
+        by engines whose plan satisfies `required` (see `plan_satisfies`)."""
+        self._routes[value] = required
+
+    # ------------------------------------------------------------------
+    # routing (fail-closed)
+    # ------------------------------------------------------------------
+    def eligible(self, req: Request) -> List[str]:
+        route_val = req.labels.get(self.ROUTE_KEY)
+        required = self._routes.get(route_val) if route_val else None
+        out = []
+        for e in self._entries.values():
+            if not e.serves(req.labels):
+                continue
+            if required is not None and not plan_satisfies(e.plan, required):
+                continue
+            out.append(e.name)
+        return out
+
+    def route(self, req: Request) -> str:
+        names = self.eligible(req)
+        if not names:
+            self.rejected.append(req)
+            raise RoutingError(
+                f"no compliant engine for request {req.rid} "
+                f"(labels={req.labels}, constraint="
+                f"{self._routes.get(req.labels.get(self.ROUTE_KEY))!r}) — "
+                "failing closed")
+        # balance over compliant engines, preferring ones actively serving;
+        # a paused engine still queues (documented lifecycle) but only when
+        # no running engine qualifies
+        running = [n for n in names if not self._entries[n].engine.paused]
+        return min(running or names,
+                   key=lambda n: self._entries[n].engine.load)
+
+    def submit(self, req: Request) -> str:
+        """Route + enqueue; returns the chosen engine name."""
+        name = self.route(req)
+        self._entries[name].engine.submit(req)
+        return name
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step across all running engines. Returns #active."""
+        n = 0
+        for e in self._entries.values():
+            if not e.engine.paused:
+                n += e.engine.step()
+        return n
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Serve until every *running* engine's queue and slots are empty.
+
+        Work queued on a paused engine stays queued (nothing is dropped)
+        and is served by the `run()` after that engine's `resume()`."""
+        for _ in range(max_steps):
+            busy = any(
+                e.engine.queue or any(r is not None
+                                      for r in e.engine.slot_req)
+                for e in self._entries.values() if not e.engine.paused)
+            if not busy:
+                break
+            self.step()
+        self._refresh_reports()
+
+    def metrics(self, name: Optional[str] = None) -> Dict[str, float]:
+        if name is not None:
+            return self._entries[name].engine.metrics()
+        done: List[Request] = []
+        for e in self._entries.values():
+            done.extend(e.engine.done)
+        return compute_metrics(done)
+
+    # ------------------------------------------------------------------
+    # online reconfiguration (compile-ahead + blocking swap)
+    # ------------------------------------------------------------------
+    def reconfigure(self, name: str, plan: ShardingPlan, *,
+                    shardings: Optional[Dict[str, Any]] = None,
+                    prefill_lengths: Sequence[int] = (),
+                    ) -> DowntimeReport:
+        entry = self._entries[name]
+        eng = entry.engine
+        # a still-pending previous report gets its honest final window now
+        # (possibly empty — completed=0/NaN — if no traffic ran under it),
+        # rather than being silently dropped by the overwrite below
+        if entry.pending_report is not None:
+            entry.pending_report.metrics_after = compute_metrics(
+                [r for r in eng.done if r.t_done >= entry.swap_t])
+            entry.pending_report = None
+        # window since the previous swap (everything, on the first one), so
+        # repeated reconfigurations compare like-for-like traffic windows
+        metrics_before = compute_metrics(
+            [r for r in eng.done if r.t_done >= entry.swap_t])
+
+        # ---- 1. PREPARE (background — serving continues) ----
+        t0 = time.time()
+        if shardings is None:
+            shardings = plan_to_shardings(
+                eng.model.cfg, plan, self.mesh, n_slots=eng.n_slots)
+        executables, n_compiled = eng.aot_executables(
+            shardings, prefill_lengths=prefill_lengths)
+        prepare_s = time.time() - t0
+
+        # ---- 2. SWAP (blocking window — no compilation here) ----
+        t0 = time.time()
+        eng.pause()
+        try:
+            eng.drain()
+            migrate_bytes = eng.swap_plan(plan, shardings=shardings,
+                                          executables=executables)
+        finally:
+            # a failed swap must never strand the engine paused — traffic
+            # routed to it would otherwise sit queued with no error
+            eng.resume()
+        downtime_s = time.time() - t0
+
+        # ---- 3. RESUME + auto-finalized report ----
+        report = DowntimeReport(
+            prepare_s=prepare_s, downtime_s=downtime_s,
+            migrate_bytes=migrate_bytes,
+            metrics_before=metrics_before,
+            # auto-finalized to the empty post-swap window (full key set);
+            # _refresh_reports replaces it with real post-swap traffic
+            metrics_after=compute_metrics([]),
+            engine=name, compiled_in_prepare=n_compiled)
+        entry.pending_report = report
+        entry.swap_t = time.time()
+        self.history.append(report)
+        return report
+
+    def _refresh_reports(self) -> None:
+        """Re-finalize pending reports once post-swap completions exist, so
+        metrics_after reflects traffic served *under the new plan*. Runs
+        when `run()` drains (not per step, so the window isn't cut short
+        while requests are still in flight)."""
+        for e in self._entries.values():
+            if e.pending_report is None:
+                continue
+            window = [r for r in e.engine.done if r.t_done >= e.swap_t]
+            if window:
+                e.pending_report.metrics_after = compute_metrics(window)
+                e.pending_report = None
+
+    # ------------------------------------------------------------------
+    # intent application (called by Orchestrator.submit(apply_to=...))
+    # ------------------------------------------------------------------
+    def apply_policy(self, policy, components: Sequence = ()
+                     ) -> Dict[str, DowntimeReport]:
+        """Program the cluster from a validated `CompiledPolicy`:
+
+        1. translate the policy's plan updates into per-label route
+           constraints (`flows/<data-type>` entries and component plans
+           merge on the component's data-type label);
+        2. reconfigure every engine that could serve a constrained label
+           but whose current plan does not satisfy the constraint.
+
+        Returns {engine name: DowntimeReport} for engines that were swapped.
+        """
+        by_name = {c.name: c for c in components}
+        merged: Dict[str, Dict[str, set]] = {}
+        for key, p in policy.plan_updates.items():
+            if key.startswith("flows/"):
+                value = key[len("flows/"):]
+            else:
+                comp = by_name.get(key)
+                value = comp.labels.get(self.ROUTE_KEY) if comp else None
+            if not value or value == "*":
+                continue
+            m = merged.setdefault(value, {"axes": set(), "pins": set()})
+            m["axes"].update(p.forbidden_collective_axes)
+            if p.device_constraints:
+                m["pins"].add(tuple(p.device_constraints))
+
+        for value, m in merged.items():
+            # a single consistent pin becomes a placement requirement;
+            # conflicting pins (components load-balanced over several pods)
+            # degrade to confinement on the pinned axes — still fail-closed:
+            # an engine must be pinned *somewhere* on those axes to qualify
+            pins = next(iter(m["pins"])) if len(m["pins"]) == 1 else ()
+            axes = set(m["axes"])
+            if len(m["pins"]) > 1:
+                axes |= {axis for pin in m["pins"] for axis, _ in pin}
+            if not pins and not axes:
+                continue      # nothing enforceable — never install a
+                              # vacuous constraint every engine satisfies
+            self.set_route_constraint(value, ShardingPlan(
+                device_constraints=pins,
+                forbidden_collective_axes=tuple(sorted(axes))))
+
+        # one swap per engine: merge ALL unsatisfied constraints into a
+        # single target plan (per-constraint swaps would let a later pin
+        # overwrite an earlier one and churn the engine through repeated
+        # migrations). Pins that conflict across constraints are dropped in
+        # favor of forbidding the axis — the engine then satisfies neither
+        # pinned constraint and those labels fail closed at routing time,
+        # which is the correct outcome for one engine asked to be in two
+        # places at once.
+        reports: Dict[str, DowntimeReport] = {}
+        for e in list(self._entries.values()):
+            axes = set(e.plan.forbidden_collective_axes)
+            pins: Dict[str, int] = dict(e.plan.device_constraints)
+            conflicts: set = set()
+            needs_swap = False
+            for value, required in self._routes.items():
+                if not e.serves({self.ROUTE_KEY: value}):
+                    continue
+                if plan_satisfies(e.plan, required):
+                    continue
+                needs_swap = True
+                axes.update(required.forbidden_collective_axes)
+                for axis, coord in required.device_constraints:
+                    if axis in pins and pins[axis] != coord:
+                        conflicts.add(axis)
+                    else:
+                        pins[axis] = coord
+            if not needs_swap:
+                continue
+            for axis in conflicts:
+                pins.pop(axis, None)
+                axes.add(axis)
+            new_plan = e.plan.with_(
+                device_constraints=tuple(sorted(pins.items())),
+                forbidden_collective_axes=tuple(sorted(axes)))
+            reports[e.name] = self.reconfigure(e.name, new_plan)
+        return reports

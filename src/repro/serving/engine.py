@@ -1,27 +1,51 @@
-"""Continuous-batching serving engine with per-request TTFT/TPOT metrics.
+"""Continuous-batching serving engine with per-request TTFT/TPOT metrics
+and an explicit reconfiguration lifecycle.
 
 Slot-based decode batching: a fixed (B, S_max) KV pool; requests prefill
 into a free slot and decode step-locked with the rest of the batch (the
 standard TPU serving shape — static shapes, no re-compilation per request).
 
 Privacy intents attach *labels* to requests (e.g. data-type=phi); the
-orchestration layer maps labeled requests to engines whose ShardingPlan
-carries the matching device constraints, and the validator checks the
-engine's compiled HLO against the routing constraints.
+`ServingCluster` (repro.serving.cluster) maps labeled requests to engines
+whose `ShardingPlan` carries the matching device constraints, and the
+validator checks the engine's compiled HLO against the routing constraints.
+
+Lifecycle (the public swap protocol — no private-attribute mutation):
+
+    engine.pause()                    # stop stepping; submissions still queue
+    engine.drain()                    # block until in-flight device work done
+    engine.swap_plan(plan,            # migrate params/cache, install
+                     shardings=...,   #   AOT executables compiled ahead of
+                     executables=...) #   time (the swap window never compiles)
+    engine.resume()
+
+AOT executables come from `aot_executables()`: decode is fully static
+(n_slots, 1) so one executable covers it; prefill is compiled per prompt
+length (the engine records lengths it has seen so a reconfiguration can
+pre-compile exactly the live traffic shapes).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.sharding.plan import ShardingPlan, default_plan
 
 PyTree = Any
+
+METRIC_KEYS = ("completed", "ttft_mean_s", "ttft_p99_s",
+               "tpot_mean_s", "tpot_p99_s")
+
+
+class EngineStateError(RuntimeError):
+    """Raised when a lifecycle method is called in the wrong state."""
 
 
 @dataclasses.dataclass
@@ -46,17 +70,50 @@ class Request:
         return (self.t_done - self.t_first) / n
 
 
+def compute_metrics(done: Sequence[Request]) -> Dict[str, float]:
+    """TTFT/TPOT summary over a set of completed requests.
+
+    Always emits the full `METRIC_KEYS` set — NaN for undefined statistics —
+    so callers can index unconditionally (an empty window is a value, not a
+    missing key).
+    """
+    out: Dict[str, float] = {
+        "completed": len(done),
+        "ttft_mean_s": math.nan, "ttft_p99_s": math.nan,
+        "tpot_mean_s": math.nan, "tpot_p99_s": math.nan,
+    }
+    if done:
+        ttfts = [r.ttft for r in done]
+        tpots = [r.tpot for r in done]
+        out.update(
+            ttft_mean_s=float(np.mean(ttfts)),
+            ttft_p99_s=float(np.percentile(ttfts, 99)),
+            tpot_mean_s=float(np.mean(tpots)),
+            tpot_p99_s=float(np.percentile(tpots, 99)),
+        )
+    return out
+
+
 class ServingEngine:
     """Single-model engine; decode batch of `n_slots` sequences."""
 
+    # cap on the prompt-length fallback set `aot_executables` compiles for:
+    # a long-lived engine sees unboundedly many distinct lengths, but only
+    # the most recent ones predict live traffic
+    MAX_AOT_PREFILL = 8
+
     def __init__(self, model: Model, params: PyTree, *, n_slots: int = 4,
-                 s_max: int = 128, greedy: bool = True):
+                 s_max: int = 128, greedy: bool = True,
+                 plan: Optional[ShardingPlan] = None,
+                 labels: Optional[Dict[str, str]] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.s_max = s_max
         self.greedy = greedy
         self.vocab = model.cfg.vocab_size
+        self.plan = plan or default_plan()
+        self.labels = dict(labels or {})
 
         self.cache = model.init_cache(n_slots, s_max)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -64,13 +121,127 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.steps = 0
-        # jitted single-sequence prefill + batched decode
+        self.paused = False
+        self.seen_prompt_lengths: Dict[int, int] = {}   # length -> last seq
+        self._submit_seq = 0
+        # jitted single-sequence prefill + batched decode (JIT fallbacks);
+        # AOT executables, when installed via swap_plan, take precedence
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._prefill_exec: Dict[int, Callable] = {}
+        self._decode_exec: Optional[Callable] = None
 
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def pause(self) -> None:
+        """Stop stepping. Submissions still queue; nothing is dropped."""
+        self.paused = True
+
+    def drain(self) -> int:
+        """Block until all in-flight device work has retired.
+
+        Returns the number of requests still resident in slots (they resume
+        decoding after `resume()` — drain is a device-level barrier, not an
+        eviction)."""
+        jax.block_until_ready(jax.tree.leaves(self.cache))
+        jax.block_until_ready(jax.tree.leaves(self.params))
+        return sum(r is not None for r in self.slot_req)
+
+    def swap_plan(self, plan: Optional[ShardingPlan] = None, *,
+                  shardings: Optional[Dict[str, Any]] = None,
+                  executables: Optional[Dict[str, Any]] = None) -> int:
+        """Install a new plan: migrate params/cache onto `shardings` and
+        swap in pre-compiled `executables`. Must be called paused — this is
+        the blocking window and it performs NO compilation.
+
+        `shardings`:   {"params": sharding tree, "cache": sharding tree}
+        `executables`: {"prefill": callable | {prompt_len: AOT executable},
+                        "decode": callable | AOT executable}
+                       (a plain callable replaces the JIT fallback; an AOT
+                       dict/executable is installed ahead of the fallback)
+
+        Returns the number of bytes migrated."""
+        if not self.paused:
+            raise EngineStateError("swap_plan requires a paused engine "
+                                   "(call pause(); drain() first)")
+        migrated = 0
+        if shardings is not None:
+            migrated = _tree_bytes(self.params) + _tree_bytes(self.cache)
+            if "params" in shardings:
+                self.params = jax.device_put(self.params, shardings["params"])
+            if "cache" in shardings:
+                self.cache = jax.device_put(self.cache, shardings["cache"])
+            jax.block_until_ready(jax.tree.leaves(self.params))
+            jax.block_until_ready(jax.tree.leaves(self.cache))
+            # executables compiled for the old layout are stale
+            self._prefill_exec = {}
+            self._decode_exec = None
+        if executables:
+            pf = executables.get("prefill")
+            if isinstance(pf, dict):
+                self._prefill_exec = dict(pf)
+            elif pf is not None:
+                self._prefill = pf
+                self._prefill_exec = {}
+            de = executables.get("decode")
+            if isinstance(de, jax.stages.Compiled):
+                self._decode_exec = de
+            elif de is not None:          # a jit-wrapped callable: replace
+                self._decode = de         # the fallback outright
+                self._decode_exec = None
+        if plan is not None:
+            self.plan = plan
+        return migrated
+
+    def resume(self) -> None:
+        self.paused = False
+
+    # ------------------------------------------------------------------
+    # AOT compilation (PREPARE phase — runs while serving continues)
+    # ------------------------------------------------------------------
+    def aot_executables(self, shardings: Dict[str, Any],
+                        prefill_lengths: Sequence[int] = ()
+                        ) -> Tuple[Dict[str, Any], int]:
+        """Ahead-of-time compile decode (and prefill per prompt length)
+        against the target `shardings`, via .lower().compile().
+
+        Returns (executables, n_compiled) in the shape `swap_plan` accepts,
+        so the blocking swap window installs finished executables only."""
+        sds = jax.ShapeDtypeStruct
+        p_sds = jax.tree.map(lambda x, s: sds(x.shape, x.dtype, sharding=s),
+                             self.params, shardings["params"])
+        c_sds = jax.tree.map(lambda x, s: sds(x.shape, x.dtype, sharding=s),
+                             self.cache, shardings["cache"])
+        tok_sds = sds((self.n_slots, 1), jnp.int32)
+        pos_sds = sds((self.n_slots,), jnp.int32)
+        decode = jax.jit(self.model.decode_step, donate_argnums=(2,)) \
+            .lower(p_sds, tok_sds, c_sds, pos_sds).compile()
+        n_compiled = 1
+        prefill: Dict[int, Callable] = {}
+        if prefill_lengths:
+            lengths = sorted(set(prefill_lengths))
+        else:
+            # most recently seen distinct lengths, capped (see MAX_AOT_PREFILL)
+            recent = sorted(self.seen_prompt_lengths,
+                            key=self.seen_prompt_lengths.get)
+            lengths = sorted(recent[-self.MAX_AOT_PREFILL:])
+        for S in lengths:
+            b_sds = {"tokens": sds((1, S), jnp.int32)}
+            if self.model.cfg.pos_type == "mrope":
+                b_sds["positions"] = sds((3, 1, S), jnp.int32)
+            prefill[S] = jax.jit(self.model.prefill) \
+                .lower(p_sds, b_sds).compile()
+            n_compiled += 1
+        return {"prefill": prefill, "decode": decode}, n_compiled
+
+    # ------------------------------------------------------------------
+    # serving
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.t_submit = time.time()
+        self._submit_seq += 1
+        self.seen_prompt_lengths[len(req.prompt)] = self._submit_seq
         self.queue.append(req)
 
     def _free_slot(self) -> Optional[int]:
@@ -78,6 +249,11 @@ class ServingEngine:
             if r is None:
                 return i
         return None
+
+    @property
+    def load(self) -> int:
+        """Queued + resident requests (the router's balance key)."""
+        return len(self.queue) + sum(r is not None for r in self.slot_req)
 
     def _admit(self) -> None:
         while self.queue:
@@ -91,7 +267,8 @@ class ServingEngine:
                 S = prompt.shape[1]
                 batch["positions"] = jnp.broadcast_to(
                     jnp.arange(S, dtype=jnp.int32)[None, None], (3, 1, S))
-            logits, cache1 = self._prefill(self.params, batch)
+            prefill = self._prefill_exec.get(prompt.shape[1], self._prefill)
+            logits, cache1 = prefill(self.params, batch)
             tok = int(jnp.argmax(logits[0, : self.vocab]))
             req.tokens_out.append(tok)
             req.t_first = time.time()
@@ -104,6 +281,8 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One decode step over all active slots. Returns #active."""
+        if self.paused:
+            raise EngineStateError("engine is paused (resume() to serve)")
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -114,8 +293,9 @@ class ServingEngine:
         # per-slot positions (inactive slots write harmlessly at index 0 —
         # their slot is re-prefilled before reuse)
         pos = jnp.asarray(self.slot_pos, dtype=jnp.int32)
-        logits, self.cache = self._decode(self.params, jnp.asarray(tokens),
-                                          self.cache, pos)
+        decode = self._decode_exec or self._decode
+        logits, self.cache = decode(self.params, jnp.asarray(tokens),
+                                    self.cache, pos)
         logits = np.asarray(logits[:, : self.vocab])
         now = time.time()
         for i in active:
@@ -139,17 +319,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def metrics(self) -> Dict[str, float]:
-        if not self.done:
-            return {"completed": 0}
-        ttfts = [r.ttft for r in self.done]
-        tpots = [r.tpot for r in self.done]
-        return {
-            "completed": len(self.done),
-            "ttft_mean_s": float(np.mean(ttfts)),
-            "ttft_p99_s": float(np.percentile(ttfts, 99)),
-            "tpot_mean_s": float(np.mean(tpots)),
-            "tpot_p99_s": float(np.percentile(tpots, 99)),
-        }
+        """Full `METRIC_KEYS` summary over everything completed so far."""
+        return compute_metrics(self.done)
+
+
+def _tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
 def _write_slot(pool: PyTree, single: PyTree, slot: int, prompt_len: int,

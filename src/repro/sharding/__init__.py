@@ -5,4 +5,8 @@ from repro.sharding.plan import (  # noqa: F401
     default_plan,
     opt_state_specs,
     param_specs,
+    plan_satisfies,
+    plan_to_shardings,
+    prune_spec,
+    restrict_mesh,
 )

@@ -261,6 +261,95 @@ def cache_specs(cfg: ModelConfig, plan: ShardingPlan, *, batch: int) -> PyTree:
     return {"attn": gqa_cache, "mla": mla_cache, "ssm": ssm_cache}[mixer]()
 
 
+# ---------------------------------------------------------------------------
+# plan -> concrete shardings (the intent layer's materialization step)
+# ---------------------------------------------------------------------------
+
+
+def prune_spec(spec: "jax.sharding.PartitionSpec",
+               axis_names: Tuple[str, ...]) -> "jax.sharding.PartitionSpec":
+    """Drop mesh-axis references a mesh does not carry (reduced runs build
+    smaller meshes than the full production topology)."""
+    parts = []
+    for entry in spec:
+        if entry is None:
+            parts.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in axis_names)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(entry if entry in axis_names else None)
+    return P(*parts)
+
+
+def restrict_mesh(mesh: "jax.sharding.Mesh",
+                  device_constraints: Tuple[Tuple[str, int], ...]
+                  ) -> "jax.sharding.Mesh":
+    """Slice a mesh down to the coordinates a plan is confined to.
+
+    Logical coordinates fold onto the available hardware by modulo, so a
+    plan pinned to ``("pod", 1)`` still resolves on a single-pod (or
+    single-device) reduced mesh.
+    """
+    if not device_constraints:
+        return mesh
+    devs = mesh.devices
+    idx: list = [slice(None)] * devs.ndim
+    for axis, coord in device_constraints:
+        if axis in mesh.axis_names:
+            ax = mesh.axis_names.index(axis)
+            c = coord % devs.shape[ax]
+            idx[ax] = slice(c, c + 1)
+    return jax.sharding.Mesh(devs[tuple(idx)], mesh.axis_names)
+
+
+def plan_to_shardings(cfg: ModelConfig, plan: ShardingPlan,
+                      mesh: "jax.sharding.Mesh", *, n_slots: int) -> dict:
+    """Materialize a ShardingPlan into NamedSharding trees for a serving
+    engine's params and KV-cache pool.
+
+    This is the bridge the orchestrator uses: a validated intent compiles to
+    a (restricted) plan, and this function turns that plan into the concrete
+    device assignment honoring ``device_constraints`` (via `restrict_mesh`).
+    """
+    sub = restrict_mesh(mesh, plan.device_constraints)
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+
+    def to_sharding(spec: P) -> jax.sharding.NamedSharding:
+        return jax.sharding.NamedSharding(sub, prune_spec(spec, sub.axis_names))
+
+    return {
+        "params": jax.tree.map(to_sharding, param_specs(cfg, plan),
+                               is_leaf=is_p),
+        "cache": jax.tree.map(to_sharding,
+                              cache_specs(cfg, plan, batch=n_slots),
+                              is_leaf=is_p),
+    }
+
+
+def plan_satisfies(plan: ShardingPlan, required: ShardingPlan) -> bool:
+    """Does `plan` meet the placement/routing requirements of `required`?
+
+    Used by the cluster router (fail-closed): a labeled request may only be
+    served by an engine whose plan satisfies the constraint plan compiled
+    from the matching intent.
+
+    * every required forbidden collective axis must either be forbidden by
+      `plan` or pinned by a device constraint (a single coordinate on an
+      axis means no collective can cross it);
+    * every required device pin must be pinned identically by `plan`.
+    """
+    pinned = dict(plan.device_constraints)
+    for axis in required.forbidden_collective_axes:
+        if (axis not in plan.forbidden_collective_axes
+                and axis not in pinned):
+            return False
+    for axis, coord in required.device_constraints:
+        if pinned.get(axis) != coord:
+            return False
+    return True
+
+
 def batch_specs(cfg: ModelConfig, plan: ShardingPlan, cell: ShapeCell) -> dict:
     """Input-batch PartitionSpecs per shape cell kind."""
     b_ax = plan.batch_axes if cell.global_batch > 1 else None

@@ -1,0 +1,107 @@
+"""Fallback property-testing shim: use real `hypothesis` when installed,
+otherwise a tiny deterministic-random stand-in so the tier-1 suite still
+*collects and runs* in minimal containers (install requirements-dev.txt to
+get full shrinking/coverage).
+
+Only the surface this repo's tests use is implemented: `given` (kwargs),
+`settings.register_profile/load_profile(max_examples=, deadline=)`,
+`st.sampled_from`, `st.booleans`, `st.integers(lo, hi)`, `st.data()` and
+`@st.composite`. Draws come from a per-test seeded `random.Random`, so runs
+are reproducible; each test executes `max_examples` sampled cases.
+"""
+from __future__ import annotations
+
+try:                                     # pragma: no cover - passthrough
+    from hypothesis import given, settings, strategies  # noqa: F401
+    st = strategies
+except ImportError:
+    import functools
+    import inspect
+    import random as _random
+    from types import SimpleNamespace
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataObject:
+        """The `st.data()` interactive-draw handle."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.draw(self._rng)
+
+    def _sampled_from(seq):
+        options = list(seq)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _integers(min_value=0, max_value=(1 << 31) - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _data():
+        return _Strategy(lambda rng: _DataObject(rng))
+
+    def _composite(fn):
+        @functools.wraps(fn)
+        def make(*args, **kw):
+            return _Strategy(
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kw))
+        return make
+
+    st = SimpleNamespace(sampled_from=_sampled_from, booleans=_booleans,
+                         integers=_integers, data=_data,
+                         composite=_composite)
+    strategies = st
+
+    class settings:  # noqa: N801 - mirrors the hypothesis API name
+        _profiles = {"default": {"max_examples": 20}}
+        _active = "default"
+
+        def __init__(self, **kw):
+            self._kw = kw
+
+        def __call__(self, fn):          # used as a decorator
+            fn._hc_settings = self._kw
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = name
+
+        @classmethod
+        def current(cls):
+            return cls._profiles.get(cls._active, {})
+
+    def given(**strategies_kw):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                conf = dict(settings.current())
+                conf.update(getattr(fn, "_hc_settings", {}))
+                n = int(conf.get("max_examples", 20))
+                rng = _random.Random(fn.__qualname__)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng)
+                             for k, s in strategies_kw.items()}
+                    fn(*args, **drawn, **kw)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies_kw])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

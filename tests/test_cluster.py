@@ -1,0 +1,242 @@
+"""ServingCluster runtime tests: label-based fail-closed routing, the
+pause/drain/swap/resume lifecycle, and the end-to-end intent ->
+validate -> reconfigure -> serve round-trip."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import Orchestrator
+from repro.models import build_model
+from repro.serving import (
+    METRIC_KEYS,
+    EngineStateError,
+    Request,
+    RoutingError,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.sharding import ShardingPlan, default_plan, plan_satisfies
+
+
+@pytest.fixture(scope="module")
+def fp32_model():
+    cfg = dataclasses.replace(get_reduced_config("minitron_4b"),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _req(rng, cfg, rid, labels=None, n=6, new=4):
+    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
+                   .astype(np.int32), max_new_tokens=new,
+                   labels=labels or {})
+
+
+PINNED = ShardingPlan(device_constraints=(("pod", 0),),
+                      forbidden_collective_axes=("pod",))
+PHI_CONSTRAINT = ShardingPlan(device_constraints=(("pod", 0),),
+                              forbidden_collective_axes=("pod",))
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_satisfaction_relation():
+    assert plan_satisfies(PINNED, PHI_CONSTRAINT)
+    assert not plan_satisfies(default_plan(), PHI_CONSTRAINT)
+    # a pinned axis counts as non-crossable even if not explicitly forbidden
+    assert plan_satisfies(
+        ShardingPlan(device_constraints=(("pod", 0),)),
+        ShardingPlan(forbidden_collective_axes=("pod",)))
+    # wrong pod pin does not satisfy a pod-0 requirement
+    assert not plan_satisfies(
+        ShardingPlan(device_constraints=(("pod", 1),),
+                     forbidden_collective_axes=("pod",)), PHI_CONSTRAINT)
+
+
+def test_labeled_routing_lands_only_on_compliant_engines(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("pinned", ServingEngine(model, params, n_slots=2,
+                                             s_max=32), plan=PINNED)
+    cluster.register("open", ServingEngine(model, params, n_slots=2,
+                                           s_max=32), plan=default_plan())
+    cluster.set_route_constraint("phi", PHI_CONSTRAINT)
+    rng = np.random.default_rng(0)
+
+    for rid in range(4):
+        cluster.submit(_req(rng, cfg, rid, {"data-type": "phi"}))
+    # phi never lands on the non-compliant engine
+    assert cluster.engine("open").load == 0
+    assert cluster.engine("pinned").load == 4
+    # unconstrained traffic balances onto the idle engine
+    name = cluster.submit(_req(rng, cfg, 10, {"data-type": "general"}))
+    assert name == "open"
+
+
+def test_unroutable_request_fails_closed(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("open", ServingEngine(model, params, n_slots=2,
+                                           s_max=32), plan=default_plan())
+    cluster.set_route_constraint("phi", PHI_CONSTRAINT)
+    rng = np.random.default_rng(1)
+    with pytest.raises(RoutingError):
+        cluster.submit(_req(rng, cfg, 0, {"data-type": "phi"}))
+    assert len(cluster.rejected) == 1
+    # engine labels that contradict the request also disqualify
+    cluster2 = ServingCluster()
+    cluster2.register("general-only", ServingEngine(
+        model, params, n_slots=2, s_max=32,
+        labels={"data-type": "general"}), plan=PINNED)
+    with pytest.raises(RoutingError):
+        cluster2.submit(_req(rng, cfg, 1, {"data-type": "phi"}))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_state_machine(fp32_model):
+    cfg, model, params = fp32_model
+    eng = ServingEngine(model, params, n_slots=2, s_max=32)
+    with pytest.raises(EngineStateError):
+        eng.swap_plan(PINNED)            # swap requires pause
+    eng.pause()
+    with pytest.raises(EngineStateError):
+        eng.step()                       # paused engines don't serve
+    assert eng.drain() == 0
+    eng.swap_plan(PINNED)
+    assert eng.plan is PINNED
+    eng.resume()
+    assert eng.step() == 0               # empty but serving again
+
+
+def test_metrics_always_full_key_set(fp32_model):
+    cfg, model, params = fp32_model
+    eng = ServingEngine(model, params, n_slots=2, s_max=32)
+    m = eng.metrics()
+    assert set(m) == set(METRIC_KEYS)
+    assert m["completed"] == 0 and np.isnan(m["ttft_mean_s"])
+    cluster = ServingCluster()
+    cluster.register("e", eng)
+    assert set(cluster.metrics()) == set(METRIC_KEYS)
+
+
+def test_swap_preserves_tokens_and_swap_window_has_no_compile(fp32_model):
+    """Mid-stream reconfigure onto AOT executables must be token-exact and
+    must not compile inside the pause..resume window."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+               for _ in range(4)]
+
+    # oracle: uninterrupted engine
+    ref = ServingEngine(model, params, n_slots=2, s_max=32)
+    for rid, p in enumerate(prompts):
+        ref.submit(Request(rid, p, max_new_tokens=4))
+    ref.run()
+    expect = {r.rid: r.tokens_out for r in ref.done}
+
+    cluster = ServingCluster()
+    eng = ServingEngine(model, params, n_slots=2, s_max=32)
+    cluster.register("e", eng)
+    for rid, p in enumerate(prompts[:2]):
+        cluster.submit(Request(rid, p, max_new_tokens=4))
+    cluster.step()
+    report = cluster.reconfigure("e", PINNED, prefill_lengths=(6,))
+    for rid, p in enumerate(prompts[2:], start=2):
+        cluster.submit(Request(rid, p, max_new_tokens=4))
+    cluster.run()
+
+    assert report.compiled_in_prepare == 2          # decode + prefill(6)
+    assert report.prepare_s > 0 and report.downtime_s >= 0
+    # AOT happened ahead: the blocking window is far below the compile cost
+    assert report.downtime_s < report.prepare_s
+    assert report.migrate_bytes > 0
+    assert eng.plan is PINNED
+    assert {r.rid: r.tokens_out for r in eng.done} == expect
+
+
+def test_apply_policy_conflicting_pins_stay_fail_closed(fp32_model):
+    """Placement updates that pin phi components to *different* pods must
+    degrade to axis confinement, never to a vacuous always-true constraint;
+    fully empty plan updates must install no constraint at all."""
+    from repro.core import Component
+
+    cfg, model, params = fp32_model
+    comps = (Component("phi-a", {"data-type": "phi"}),
+             Component("phi-b", {"data-type": "phi"}))
+
+    class FakePolicy:
+        plan_updates = {
+            "phi-a": ShardingPlan(device_constraints=(("pod", 0),)),
+            "phi-b": ShardingPlan(device_constraints=(("pod", 1),)),
+        }
+
+    cluster = ServingCluster()
+    cluster.register("open", ServingEngine(model, params, n_slots=2,
+                                           s_max=32), plan=default_plan())
+    reports = cluster.apply_policy(FakePolicy(), components=comps)
+    required = cluster.route_constraints()["phi"]
+    assert required.forbidden_collective_axes == ("pod",)
+    assert not plan_satisfies(default_plan(), required)   # not vacuous
+    assert "open" in reports                              # engine was swapped
+    assert plan_satisfies(cluster.engine("open").plan, required)
+
+    class EmptyPolicy:
+        plan_updates = {"phi-a": ShardingPlan()}
+
+    cluster2 = ServingCluster()
+    cluster2.register("e", ServingEngine(model, params, n_slots=2, s_max=32))
+    cluster2.apply_policy(EmptyPolicy(), components=comps)
+    assert cluster2.route_constraints() == {}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end intent round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_e2e_intent_reconfigure_serve_roundtrip(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("edge0", ServingEngine(model, params, n_slots=2,
+                                            s_max=32))
+    rng = np.random.default_rng(3)
+    for rid in range(2):
+        cluster.submit(_req(rng, cfg, rid, {"data-type": "phi"}, new=3))
+    cluster.run()
+
+    orch = Orchestrator()
+    res = orch.submit("Phi traffic must remain inside the pod.",
+                      apply_to=cluster)
+    assert res.success
+    assert "reconfigure" in res.timings
+    assert "edge0" in res.reports
+    report = res.reports["edge0"]
+    assert report.downtime_s >= 0 and report.prepare_s > 0
+    assert report.compiled_in_prepare > 0
+    assert set(report.metrics_before) == set(METRIC_KEYS)
+    assert report.metrics_before["completed"] == 2
+
+    # the cluster now enforces the phi route constraint
+    phi_req = _req(rng, cfg, 100, {"data-type": "phi"}, new=3)
+    assert cluster.eligible(phi_req) == ["edge0"]
+    assert "phi" in cluster.route_constraints()
+    assert "pod" in cluster.engine("edge0").plan.forbidden_collective_axes
+
+    # keep serving; the report's after-window finalizes automatically
+    cluster.submit(phi_req)
+    cluster.run()
+    assert set(report.metrics_after) == set(METRIC_KEYS)
+    assert report.metrics_after["completed"] == 1
+    assert report.metrics_after["ttft_mean_s"] > 0

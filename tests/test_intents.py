@@ -3,7 +3,7 @@ invariants of the satisfaction relation."""
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     CORPUS,
