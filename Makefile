@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: test ci example bench-reconfig
+.PHONY: test ci example bench-reconfig bench-elastic docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -10,6 +10,12 @@ example:
 
 bench-reconfig:
 	PYTHONPATH=src:. $(PY) benchmarks/reconfig_serving.py
+
+bench-elastic:
+	PYTHONPATH=src:. $(PY) benchmarks/elastic_scaling.py
+
+docs:
+	$(PY) scripts/run_doc_examples.py
 
 ci:
 	bash scripts/ci.sh

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification + the intent-driven reconfiguration path.
+# Tier-1 verification + the intent-driven reconfiguration path + docs.
 # Run from the repo root:  bash scripts/ci.sh   (or: make ci)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -9,5 +9,8 @@ python -m pytest -x -q
 
 echo "== reconfiguration path: serve_intents example (reduced config) =="
 PYTHONPATH=src python examples/serve_intents.py
+
+echo "== docs: execute the embedded examples (they must not rot) =="
+python scripts/run_doc_examples.py
 
 echo "CI OK"

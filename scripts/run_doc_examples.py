@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Execute the ```python code blocks embedded in docs/*.md so the
+documented examples can't rot.
+
+For each markdown file, every fenced ``python`` block is extracted and
+concatenated IN ORDER into one script (the docs are written as a single
+narrative — later blocks may use names defined earlier), then executed in
+a subprocess with ``PYTHONPATH=src``. Blocks fenced as anything other
+than ``python`` (e.g. ``text``) and blocks whose first line contains
+``# doc-only`` are skipped.
+
+    python scripts/run_doc_examples.py            # all docs/*.md
+    python scripts/run_doc_examples.py docs/architecture.md
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```python[ \t]*\n(.*?)^```[ \t]*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def extract_blocks(md_path: pathlib.Path) -> list:
+    blocks = FENCE.findall(md_path.read_text())
+    runnable = []
+    for block in blocks:
+        first = block.lstrip().splitlines()[0] if block.strip() else ""
+        if "# doc-only" in first:
+            continue
+        runnable.append(block)
+    return runnable
+
+
+def run_doc(md_path: pathlib.Path) -> int:
+    blocks = extract_blocks(md_path)
+    if not blocks:
+        print(f"-- {md_path.relative_to(REPO)}: no runnable blocks")
+        return 0
+    header = (f"# auto-extracted from {md_path.name} by "
+              "scripts/run_doc_examples.py\n")
+    source = header + "\n\n".join(blocks) + "\n"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    with tempfile.NamedTemporaryFile(
+            "w", suffix=f"_{md_path.stem}.py", delete=False) as f:
+        f.write(source)
+        script = f.name
+    print(f"== {md_path.relative_to(REPO)}: "
+          f"{len(blocks)} block(s) ==", flush=True)
+    proc = subprocess.run([sys.executable, script], env=env, cwd=str(REPO))
+    if proc.returncode != 0:
+        # keep the extracted script on failure so it can be debugged
+        print(f"FAILED: {md_path.relative_to(REPO)} "
+              f"(extracted script kept at {script})")
+        return proc.returncode
+    os.unlink(script)
+    print(f"OK: {md_path.relative_to(REPO)}")
+    return 0
+
+
+def main(argv: list) -> int:
+    targets = ([pathlib.Path(a).resolve() for a in argv]
+               or sorted((REPO / "docs").glob("*.md")))
+    rc = 0
+    for md in targets:
+        rc = run_doc(md) or rc
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -18,6 +18,7 @@ from repro.core.intents import (  # noqa: F401
     Intent,
     PlacementConstraint,
     RoutingConstraint,
+    ScalingConstraint,
     satisfies,
 )
 from repro.core.interpreter import (  # noqa: F401

@@ -36,6 +36,10 @@ class CompiledPolicy:
     flow_rules: List[Dict]                   # onos-style flow rules
     plan_updates: Dict[str, ShardingPlan]    # component -> restricted plan
     errors: List[str]
+    # data-type label -> (min, max) serving-engine counts; consumed by
+    # repro.serving.autoscaler.Autoscaler.apply_policy (max None = unbounded)
+    scale_bounds: Dict[str, Tuple[int, Optional[int]]] = \
+        dataclasses.field(default_factory=dict)
 
 
 def eligible_pods(fabric: Fabric, c: PlacementConstraint) -> List[int]:
@@ -181,7 +185,44 @@ def compile_intent(
             plan_updates[f"flows/{key}"] = plan.with_(
                 forbidden_collective_axes=tuple(rc.forbidden_axes))
 
+    # ---- scaling (runtime capacity layer) — per-label autoscaler bounds ----
+    scale_bounds: Dict[str, Tuple[int, Optional[int]]] = {}
+    for sc in intent.scaling:
+        matched = [c for c in components if c.matches(sc.sel())]
+        if not matched:
+            errors.append(f"unenforceable: no workload matches {sc.sel()}")
+            continue
+        if sc.max_engines is not None and sc.min_engines > sc.max_engines:
+            errors.append(f"inconsistent scaling bounds for {sc.sel()}: "
+                          f"min {sc.min_engines} > max {sc.max_engines}")
+            continue
+        # bounds attach to the routing label (data-type) of the matched
+        # workload class — the key the cluster routes and scales on
+        values = {sc.sel().get("data-type")
+                  or c.labels.get("data-type") for c in matched}
+        values.discard(None)
+        if not values:
+            # a bound that resolves to no routing label can never be
+            # enforced by the autoscaler — fail closed, don't drop it
+            errors.append(f"unenforceable: scaling selector {sc.sel()} "
+                          "resolves to no data-type routing label")
+            continue
+        for value in sorted(values):
+            # several constraints can land on one label (e.g. a data-type
+            # clause and an app clause whose component carries that
+            # data-type): INTERSECT the bounds — last-wins would silently
+            # drop an earlier clause; an empty intersection is an error
+            lo, hi = scale_bounds.get(value, (0, None))
+            lo = max(lo, sc.min_engines)
+            if sc.max_engines is not None:
+                hi = sc.max_engines if hi is None else min(hi, sc.max_engines)
+            if hi is not None and lo > hi:
+                errors.append(f"conflicting scaling bounds for "
+                              f"data-type={value}: min {lo} > max {hi}")
+                continue
+            scale_bounds[value] = (lo, hi)
+
     config = Configuration(placement=placement, paths=paths)
     return CompiledPolicy(intent=intent, config=config, manifests=manifests,
                           flow_rules=flow_rules, plan_updates=plan_updates,
-                          errors=errors)
+                          errors=errors, scale_bounds=scale_bounds)

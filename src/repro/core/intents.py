@@ -91,12 +91,30 @@ class RoutingConstraint:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScalingConstraint:
+    """Φ_S (runtime extension): the serving fabric must keep between
+    `min_engines` and `max_engines` engines able to serve the workload
+    class matching `selector` ("keep at least two engines for phi
+    traffic"). Compiled into per-label autoscaler bounds
+    (`CompiledPolicy.scale_bounds`) and enforced by
+    `repro.serving.autoscaler.Autoscaler`."""
+
+    selector: Tuple[Tuple[str, str], ...]     # component-label predicate
+    min_engines: int = 0
+    max_engines: Optional[int] = None         # None == unbounded
+
+    def sel(self) -> Dict[str, str]:
+        return dict(self.selector)
+
+
+@dataclasses.dataclass(frozen=True)
 class Intent:
     text: str
     domain: str                   # computing | networking | hybrid
     complexity: str               # simple | complex
     placement: Tuple[PlacementConstraint, ...] = ()
     routing: Tuple[RoutingConstraint, ...] = ()
+    scaling: Tuple[ScalingConstraint, ...] = ()
     # intents referencing labels absent from the fabric are *unenforceable*
     # and must fail closed (paper Table 6, row 1)
     expect_unenforceable: bool = False

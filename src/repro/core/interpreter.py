@@ -37,6 +37,7 @@ from repro.core.intents import (
     Intent,
     PlacementConstraint,
     RoutingConstraint,
+    ScalingConstraint,
 )
 from repro.core.labels import Fabric, REGIONS
 
@@ -76,6 +77,20 @@ ONTOLOGY_ZONE = {
 
 PROVIDERS = ("aws", "azure", "alibaba-cloud", "gcp")
 VENDORS = ("huawei", "cisco", "juniper", "arista")
+
+# capacity nouns + number words for scaling clauses ("keep at least two
+# serving engines for phi traffic")
+SCALING_NOUNS = ("engine", "engines", "replica", "replicas",
+                 "instance", "instances")
+WORD_NUMS = {"one": 1, "two": 2, "three": 3, "four": 4, "five": 5,
+             "six": 6, "seven": 7, "eight": 8, "nine": 9, "ten": 10}
+# trailing \b keeps teen words from misparsing to their prefix
+# ("fourteen" must not match as "four")
+_NUM = r"(\d+|" + "|".join(WORD_NUMS) + r")\b"
+
+
+def _to_int(tok: str) -> int:
+    return WORD_NUMS[tok] if tok in WORD_NUMS else int(tok)
 
 
 @dataclasses.dataclass
@@ -158,6 +173,7 @@ class DeterministicInterpreter:
 
         placement: List[PlacementConstraint] = []
         routing: List[RoutingConstraint] = []
+        scaling: List[ScalingConstraint] = []
 
         # --- clause splitting (the paper's countermeasure to first-clause
         # capture: decompose multi-clause sentences) ---
@@ -166,14 +182,20 @@ class DeterministicInterpreter:
             clauses = [low]
 
         for clause in clauses:
+            # a clause can carry capacity AND placement/routing predicates
+            # ("at least two patient instances in the cloud zone") — parse
+            # all three grammars; each only emits when its own predicates
+            # are present, so a pure capacity clause adds nothing else
+            scaling += self._scaling_clauses(clause)
             placement += self._placement_clauses(clause)
             routing += self._routing_clauses(clause)
 
         # fold whole-sentence context for clauses the splitter separated from
         # their subjects
-        if not placement and not routing:
+        if not placement and not routing and not scaling:
             placement += self._placement_clauses(low)
             routing += self._routing_clauses(low)
+            scaling += self._scaling_clauses(low)
 
         routing = self._merge_orphan_routing(routing, low)
 
@@ -181,6 +203,7 @@ class DeterministicInterpreter:
             "domain": domain,
             "placement": [dataclasses.asdict(p) for p in placement],
             "routing": [dataclasses.asdict(r) for r in routing],
+            "scaling": [dataclasses.asdict(s) for s in scaling],
         }
         snapshot = json.dumps(sorted(fabric.label_inventory().items(),
                                      key=str), default=str)
@@ -189,9 +212,11 @@ class DeterministicInterpreter:
 
         intent = Intent(
             text=text, domain=domain,
-            complexity="complex" if (len(placement) + len(routing) > 1
+            complexity="complex" if (len(placement) + len(routing)
+                                     + len(scaling) > 1
                                      or domain == "hybrid") else "simple",
-            placement=tuple(placement), routing=tuple(routing))
+            placement=tuple(placement), routing=tuple(routing),
+            scaling=tuple(scaling))
         return InterpretResult(
             intent=intent, classified_domain=domain, state_requests=state,
             directives=directives, prompt_tokens=prompt_tokens,
@@ -263,6 +288,40 @@ class DeterministicInterpreter:
                 require=tuple(sorted(require.items())),
                 forbid=tuple(sorted(forbid.items()))))
         return out
+
+    # ---- scaling clause grammar (runtime capacity: autoscaler bounds) ----
+    def _scaling_clauses(self, clause: str) -> List[ScalingConstraint]:
+        if not any(n in clause for n in SCALING_NOUNS):
+            return []
+        lo: Optional[int] = None
+        hi: Optional[int] = None
+        m = re.search(r"between\s+%s\s+and\s+%s" % (_NUM, _NUM), clause)
+        if m:
+            lo, hi = _to_int(m.group(1)), _to_int(m.group(2))
+        m = re.search(r"at\s+least\s+%s" % _NUM, clause)
+        if m:
+            lo = _to_int(m.group(1))
+        m = re.search(r"(?:at\s+most|no\s+more\s+than|up\s+to)\s+%s" % _NUM,
+                      clause)
+        if m:
+            hi = _to_int(m.group(1))
+        m = re.search(r"exactly\s+%s" % _NUM, clause)
+        if m:
+            lo = hi = _to_int(m.group(1))
+        if lo is None and hi is None:
+            return []
+
+        subjects = _find_any(clause, ONTOLOGY_APP)
+        data_types = _find_any(clause, ONTOLOGY_DATA)
+        selector: Dict[str, str] = {}
+        if subjects:
+            selector["app"] = subjects[0]
+        elif data_types:
+            selector["data-type"] = data_types[0]
+        else:
+            return []      # capacity clause with no workload subject
+        return [ScalingConstraint(selector=tuple(sorted(selector.items())),
+                                  min_engines=lo or 0, max_engines=hi)]
 
     def _merge_orphan_routing(self, routing: List[RoutingConstraint],
                               full_text: str) -> List[RoutingConstraint]:

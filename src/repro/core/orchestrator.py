@@ -38,6 +38,10 @@ class FabricState:
     flow_rules: List[Dict] = dataclasses.field(default_factory=list)
     manifests: List[Dict] = dataclasses.field(default_factory=list)
     plans: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # data-type label -> (min, max) serving-engine bounds committed by
+    # scaling intents (the HPA-manifest analogue)
+    scale_bounds: Dict[str, Tuple[int, Optional[int]]] = \
+        dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -82,11 +86,17 @@ class Orchestrator:
                ) -> OrchestrationResult:
         """Run the six-step loop for one intent.
 
-        `apply_to` (a `repro.serving.cluster.ServingCluster`) extends step
-        (F) into the live runtime: on a passing validation the cluster's
-        route constraints are programmed from the compiled plan updates and
+        `apply_to` (a `repro.serving.cluster.ServingCluster` or a
+        `repro.serving.autoscaler.Autoscaler` — anything with an
+        ``apply_policy(policy, components=...)`` hook) extends step (F)
+        into the live runtime: on a passing validation the cluster's route
+        constraints are programmed from the compiled plan updates and
         affected engines are reconfigured online (compile-ahead + blocking
         swap). The per-engine `DowntimeReport`s land in `result.reports`.
+        With an `Autoscaler`, the compiled per-label scaling bounds
+        (``policy.scale_bounds``) are additionally pinned, so an intent
+        like "keep at least two engines for phi traffic" sizes the
+        cluster's elastic floor/ceiling for that label.
         """
         timings: Dict[str, float] = {}
 
@@ -125,6 +135,7 @@ class Orchestrator:
             self.state.placement.update(policy.config.placement)
             self.state.manifests.extend(policy.manifests)
             self.state.plans.update(policy.plan_updates)
+            self.state.scale_bounds.update(policy.scale_bounds)
             applied = True
         if self.stabilization_s:
             time.sleep(self.stabilization_s)

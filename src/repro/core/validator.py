@@ -12,7 +12,9 @@ Check classes:
   * HLO checks — for plans carrying `forbidden_collective_axes`, the
     compiled executable's collectives must not cross those mesh axes
     (parsed from the SPMD module; stronger than runtime sampling since
-    compile-time proof covers every step).
+    compile-time proof covers every step);
+  * scaling checks — autoscaler bounds must target an existing workload
+    class and be internally consistent (min <= max).
 
 An intent is successful only if ALL its checks pass (fail-closed).
 """
@@ -107,6 +109,23 @@ def validate(policy: CompiledPolicy, fabric: Fabric,
                                          axis_names or ("pod", "data", "model"))
                 checks.append(Check(
                     f"routing[{i}]/hlo-collectives[{mod_name}]", ok, msg))
+
+    # ---- scaling checks (runtime capacity bounds) ----
+    for i, sc in enumerate(intent.scaling):
+        matched = [c for c in components if c.matches(sc.sel())]
+        ok = bool(matched)
+        checks.append(Check(
+            f"scaling[{i}]/workload-exists", ok,
+            f"{len(matched)} component(s) match {sc.sel()}" if ok
+            else f"no component matches selector {sc.sel()} (unenforceable)"))
+        sane = (sc.min_engines >= 0
+                and (sc.max_engines is None
+                     or sc.min_engines <= sc.max_engines))
+        checks.append(Check(
+            f"scaling[{i}]/bounds-sane", sane,
+            f"min={sc.min_engines} max={sc.max_engines}" if sane
+            else f"inconsistent bounds min={sc.min_engines} "
+                 f"max={sc.max_engines}"))
 
     if not checks:
         checks.append(Check("no-constraints", False,

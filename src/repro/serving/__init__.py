@@ -1,3 +1,9 @@
+from repro.serving.autoscaler import (  # noqa: F401
+    Autoscaler,
+    ElasticPolicy,
+    LoadTracker,
+    ScaleDecision,
+)
 from repro.serving.cluster import (  # noqa: F401
     DowntimeReport,
     RoutingError,

@@ -1,0 +1,449 @@
+"""Elastic autoscaling for `ServingCluster`: per-label load tracking,
+spawn/retire/rebalance decisions, and intent-pinned scaling bounds.
+
+The paper's online-reconfiguration machinery (PREPARE-phase AOT compile +
+blocking swap, <50 ms downtime) only pays off when the system can *add and
+remove* capacity per workload class, not just reconfigure one resident
+engine. This module closes that loop (LLM-Mesh-style elastic sharing):
+
+    LoadTracker     per-label EWMA arrival rate + queue depth, fed from the
+                    cluster's demand counters and `metrics()` aggregation;
+    ElasticPolicy   hysteresis policy turning tracked load + scaling bounds
+                    into `ScaleDecision`s (spawn a dedicated engine for a
+                    hot label, retire a drained idle one, or REBALANCE an
+                    idle engine onto the hot label when a resize beats a
+                    cold spawn);
+    Autoscaler      executes decisions through the cluster's elastic
+                    lifecycle (`spawn_engine` / `retire_engine` /
+                    `rebalance` — all built on pause/drain/swap/resume, so
+                    scaling never JITs on the serving path) and accepts
+                    intent-compiled scaling bounds via `apply_policy`, i.e.
+                    ``Orchestrator.submit(text, apply_to=autoscaler)``.
+
+The control loop is tick-driven and uses virtual time (``dt``), so tests
+and benchmarks are deterministic:
+
+    scaler = Autoscaler(cluster, factory)
+    while serving:
+        ... submit requests, cluster.step() ...
+        scaler.tick()          # observe -> decide -> scale
+
+See docs/architecture.md (autoscaler loop) and docs/reconfiguration.md
+(worked example) for the full story.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.cluster import DowntimeReport, ServingCluster
+from repro.serving.engine import ServingEngine
+from repro.sharding.plan import (
+    ShardingPlan,
+    merge_restrictions,
+    plan_satisfies,
+)
+
+# (min_engines, max_engines); max None == unbounded
+Bounds = Tuple[int, Optional[int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """One autoscaling action, as emitted by `ElasticPolicy.decide`.
+
+    Attributes:
+        kind: ``"spawn"`` | ``"retire"`` | ``"rebalance"``.
+        label: the ``data-type`` label value the decision serves.
+        engine: target engine name (the engine to retire or retarget;
+            empty for a spawn — the `Autoscaler` names spawned engines).
+        reason: human-readable justification (telemetry / benchmark CSV).
+    """
+
+    kind: str
+    label: str
+    engine: str = ""
+    reason: str = ""
+
+
+class LoadTracker:
+    """Per-label EWMA arrival rate and queue depth.
+
+    Fed from `ServingCluster.arrivals()` (cumulative per-label submission
+    counts, including fail-closed rejections — rejected demand is still
+    demand) and `ServingCluster.queue_depth_by_label()`. Labels with no
+    traffic are zero-filled by the cluster's per-label views, so every
+    known label is always observable.
+
+    Args:
+        alpha: EWMA smoothing factor in (0, 1]; 1.0 == no smoothing.
+    """
+
+    def __init__(self, alpha: float = 0.5):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._rate: Dict[str, float] = {}
+        self._depth: Dict[str, float] = {}
+        self._last_arrivals: Dict[str, int] = {}
+
+    def observe(self, cluster: ServingCluster, dt: float = 1.0) -> None:
+        """Fold one tick of cluster state into the EWMAs.
+
+        Args:
+            cluster: the cluster to sample.
+            dt: virtual seconds since the previous observation (rates are
+                per-``dt`` unit; keep it constant for deterministic runs).
+
+        Raises:
+            ValueError: if ``dt`` is not positive.
+        """
+        if dt <= 0:
+            raise ValueError(f"dt must be positive, got {dt}")
+        arrivals = cluster.arrivals()
+        depths = cluster.queue_depth_by_label(extra_labels=self.labels())
+        for label in set(arrivals) | set(depths) | set(self._rate):
+            inst_rate = (arrivals.get(label, 0)
+                         - self._last_arrivals.get(label, 0)) / dt
+            self._rate[label] = (self._rate.get(label, 0.0)
+                                 + self.alpha
+                                 * (inst_rate - self._rate.get(label, 0.0)))
+            d = float(depths.get(label, 0))
+            self._depth[label] = (self._depth.get(label, 0.0)
+                                  + self.alpha
+                                  * (d - self._depth.get(label, 0.0)))
+        self._last_arrivals = arrivals
+
+    def rate(self, label: str) -> float:
+        """EWMA arrival rate (requests per ``dt`` unit) for ``label``;
+        0.0 for labels never observed."""
+        return self._rate.get(label, 0.0)
+
+    def depth(self, label: str) -> float:
+        """EWMA queued+resident request count for ``label``; 0.0 for
+        labels never observed."""
+        return self._depth.get(label, 0.0)
+
+    def labels(self) -> List[str]:
+        """All labels ever observed (including the ``"*"`` unlabeled
+        bucket), sorted."""
+        return sorted(set(self._rate) | set(self._depth))
+
+
+class ElasticPolicy:
+    """Hysteresis scaling policy: sustained overload spawns, sustained
+    idleness retires, and a cooldown after every action prevents flapping.
+
+    Decision rules, per label (the ``"*"`` unlabeled bucket is exempt —
+    unlabeled traffic may land on any engine, so it never owns capacity):
+
+      * below ``min``: spawn immediately (a pinned floor is mandatory,
+        bypassing the sustain window) — but if the previous floor spawn
+        added a dedicated engine without raising the eligible count, the
+        floor is blocked by a constraint conflict that more spawns cannot
+        fix, and the policy stops rather than accumulate never-eligible
+        engines;
+      * hot — EWMA queue depth per serving engine > ``spawn_depth`` (any
+        demand at all counts as hot when NO engine serves the label) — for
+        ``sustain`` consecutive ticks, and under ``max``: spawn, or
+        rebalance an idle donor engine dedicated to a cold label when one
+        exists above that label's floor (a resize beats a cold spawn);
+      * cold — EWMA rate <= ``retire_rate`` and depth <= ``retire_depth``
+        — for ``sustain`` ticks, and above ``min``: retire one engine
+        DEDICATED to the label (never a shared engine) whose load is
+        already zero — retirement strictly follows drain;
+      * after any action on a label (including the donor of a rebalance):
+        no further action on it for ``cooldown`` ticks.
+
+    The policy is stateful (per-label streaks and cooldowns); use one
+    instance per control loop.
+    """
+
+    def __init__(self, *, spawn_depth: float = 4.0, retire_rate: float = 0.25,
+                 retire_depth: float = 0.5, sustain: int = 2,
+                 cooldown: int = 3, default_bounds: Bounds = (0, 4),
+                 prefer_rebalance: bool = True):
+        self.spawn_depth = spawn_depth
+        self.retire_rate = retire_rate
+        self.retire_depth = retire_depth
+        self.sustain = max(1, sustain)
+        self.cooldown = cooldown
+        self.default_bounds = default_bounds
+        self.prefer_rebalance = prefer_rebalance
+        self._hot: Dict[str, int] = {}       # label -> consecutive hot ticks
+        self._cold: Dict[str, int] = {}      # label -> consecutive cold ticks
+        self._cooldown: Dict[str, int] = {}  # label -> ticks remaining
+        # label -> (eligible n, dedicated total) snapshot at the last
+        # floor-enforcement spawn: if the spawn added a dedicated engine
+        # but n did not grow, the floor is blocked by a constraint
+        # conflict and further spawns cannot help
+        self._floor_probe: Dict[str, Tuple[int, int]] = {}
+
+    # -- helpers -------------------------------------------------------
+    def _dedicated_idle(self, cluster: ServingCluster, label: str,
+                        claimed: set) -> List[str]:
+        """Engines dedicated to ``label`` (engine label == label) with no
+        queued or resident work and not already claimed by another
+        decision this tick — the only legal retire/donor targets."""
+        out = []
+        for name in cluster.engines_for_label(label):
+            eng = cluster.engine(name)
+            if (name not in claimed
+                    and eng.labels.get(cluster.ROUTE_KEY) == label
+                    and eng.load == 0):
+                out.append(name)
+        return out
+
+    def _dedicated_total(self, cluster: ServingCluster, label: str) -> int:
+        """Engines dedicated to ``label`` regardless of routing
+        eligibility — the floor-enforcement backstop: capacity that exists
+        but fails the route constraint means spawning MORE engines cannot
+        help (a constraint conflict, not a capacity shortfall)."""
+        return sum(
+            1 for name in cluster.engines()
+            if cluster.engine(name).labels.get(cluster.ROUTE_KEY) == label
+            and name not in cluster.draining())
+
+    def _donor(self, tracker: LoadTracker, cluster: ServingCluster,
+               hot_label: str, bounds: Dict[str, Bounds],
+               claimed: set) -> Optional[str]:
+        """An idle engine dedicated to a cold label, above that label's
+        floor, that can be retargeted at ``hot_label`` — and whose plan,
+        once merged with the hot label's route constraint, would actually
+        satisfy it (a donor whose device pins conflict with the
+        constraint would come out of the swap unroutable for every
+        label: worse than a cold spawn, not better)."""
+        required = cluster.route_constraints().get(hot_label)
+        for other in tracker.labels():
+            if other in (hot_label, "*"):
+                continue
+            if (tracker.rate(other) > self.retire_rate
+                    or tracker.depth(other) > self.retire_depth):
+                continue
+            lo, _ = bounds.get(other, self.default_bounds)
+            if len(cluster.engines_for_label(other)) <= lo:
+                continue
+            for name in self._dedicated_idle(cluster, other, claimed):
+                base = cluster.engine(name).plan
+                if required is None or plan_satisfies(
+                        merge_restrictions(base, required), required):
+                    return name
+        return None
+
+    # -- the decision function -----------------------------------------
+    def decide(self, tracker: LoadTracker, cluster: ServingCluster,
+               bounds: Dict[str, Bounds]) -> List[ScaleDecision]:
+        """Turn tracked load into scale decisions (at most one per label
+        per tick). Pure decision logic — execution is the `Autoscaler`'s
+        job.
+
+        Args:
+            tracker: the observed per-label load.
+            cluster: the live cluster (capacity + idleness queries only).
+            bounds: per-label (min, max) engine counts; labels absent fall
+                back to ``default_bounds``.
+
+        Returns:
+            The decisions for this tick, in label order.
+        """
+        decisions: List[ScaleDecision] = []
+        claimed: set = set()          # engines already targeted this tick
+        labels = [v for v in set(tracker.labels()) | set(bounds) if v != "*"]
+        for label in sorted(labels):
+            lo, hi = bounds.get(label, self.default_bounds)
+            n = len(cluster.engines_for_label(label))
+
+            # a pinned floor is mandatory — enforce before anything else.
+            # Backstop: if the PREVIOUS floor spawn added a dedicated
+            # engine without raising n, spawns are not becoming eligible
+            # (constraint conflict) and repeating them cannot help — stop
+            # until eligibility actually changes.
+            if n < lo:
+                dedicated = self._dedicated_total(cluster, label)
+                probe = self._floor_probe.get(label)
+                blocked = (probe is not None and n <= probe[0]
+                           and dedicated > probe[1])
+                if not blocked:
+                    decisions.append(ScaleDecision(
+                        "spawn", label,
+                        reason=f"below floor: {n} < min {lo}"))
+                    self._floor_probe[label] = (n, dedicated)
+                    self._cooldown[label] = self.cooldown
+                    self._hot[label] = self._cold[label] = 0
+                continue
+            self._floor_probe.pop(label, None)
+
+            depth, rate = tracker.depth(label), tracker.rate(label)
+            # with no engine at all, any real demand is hot (EWMAs decay
+            # geometrically and never reach exactly 0 — compare against
+            # the retire thresholds, not strict positivity)
+            hot = (depth > self.retire_depth or rate > self.retire_rate) \
+                if n == 0 else (depth / n > self.spawn_depth)
+            cold = rate <= self.retire_rate and depth <= self.retire_depth
+            self._hot[label] = self._hot.get(label, 0) + 1 if hot else 0
+            self._cold[label] = self._cold.get(label, 0) + 1 if cold else 0
+
+            if self._cooldown.get(label, 0) > 0:
+                self._cooldown[label] -= 1
+                continue
+
+            if self._hot[label] >= self.sustain and (hi is None or n < hi):
+                donor = self._donor(tracker, cluster, label, bounds,
+                                    claimed) if self.prefer_rebalance \
+                    else None
+                if donor is not None:
+                    decisions.append(ScaleDecision(
+                        "rebalance", label, engine=donor,
+                        reason=f"hot (depth/engine {depth/max(n,1):.1f} > "
+                               f"{self.spawn_depth}); idle donor beats "
+                               "cold spawn"))
+                    claimed.add(donor)
+                    donor_label = cluster.engine(donor).labels.get(
+                        cluster.ROUTE_KEY, "*")
+                    self._cooldown[donor_label] = self.cooldown
+                else:
+                    decisions.append(ScaleDecision(
+                        "spawn", label,
+                        reason=f"hot for {self._hot[label]} ticks "
+                               f"(depth/engine {depth/max(n,1):.1f} > "
+                               f"{self.spawn_depth})"))
+                self._cooldown[label] = self.cooldown
+                self._hot[label] = 0
+            elif self._cold[label] >= self.sustain and n > lo:
+                idle = self._dedicated_idle(cluster, label, claimed)
+                if idle:               # retire strictly follows drain
+                    decisions.append(ScaleDecision(
+                        "retire", label, engine=idle[0],
+                        reason=f"cold for {self._cold[label]} ticks "
+                               f"(rate {rate:.2f} <= {self.retire_rate})"))
+                    claimed.add(idle[0])
+                    self._cooldown[label] = self.cooldown
+                    self._cold[label] = 0
+        return decisions
+
+
+class Autoscaler:
+    """Drives a `ServingCluster`'s elastic lifecycle from per-label load.
+
+    Args:
+        cluster: the cluster to scale.
+        factory: ``factory(label) -> ServingEngine`` building a fresh
+            engine for a label (model/params/slot sizing is the caller's
+            policy). The autoscaler installs the label and a route-
+            constraint-satisfying plan itself.
+        policy: decision policy (default `ElasticPolicy()`).
+        tracker: load tracker (default `LoadTracker()`).
+        bounds: initial per-label (min, max) engine counts; extended by
+            `set_bounds` or intent application (`apply_policy`).
+
+    Attributes:
+        events: ``[(ScaleDecision, DowntimeReport), ...]`` for every
+            executed scale event, in order.
+        trajectory: per-tick ``{label: engine count, "total": n}``
+            snapshots (the benchmark's engine-count trajectory).
+    """
+
+    def __init__(self, cluster: ServingCluster,
+                 factory: Callable[[str], ServingEngine], *,
+                 policy: Optional[ElasticPolicy] = None,
+                 tracker: Optional[LoadTracker] = None,
+                 bounds: Optional[Dict[str, Bounds]] = None):
+        self.cluster = cluster
+        self.factory = factory
+        self.policy = policy or ElasticPolicy()
+        self.tracker = tracker or LoadTracker()
+        self.bounds: Dict[str, Bounds] = dict(bounds or {})
+        self.events: List[Tuple[ScaleDecision, DowntimeReport]] = []
+        self.trajectory: List[Dict[str, int]] = []
+        self._spawn_seq = 0
+
+    # ------------------------------------------------------------------
+    def set_bounds(self, label: str, lo: int, hi: Optional[int] = None
+                   ) -> None:
+        """Pin scaling bounds for a label: keep at least ``lo`` and at
+        most ``hi`` (None == unbounded) engines able to serve it.
+
+        Raises:
+            ValueError: if ``lo`` is negative or exceeds ``hi``.
+        """
+        if lo < 0 or (hi is not None and lo > hi):
+            raise ValueError(f"invalid bounds for {label!r}: ({lo}, {hi})")
+        self.bounds[label] = (lo, hi)
+
+    def apply_policy(self, policy, components: Sequence = ()
+                     ) -> Dict[str, DowntimeReport]:
+        """Intent hook: `Orchestrator.submit(text, apply_to=autoscaler)`.
+
+        Installs the compiled policy's per-label scaling bounds
+        (``policy.scale_bounds``), then delegates route-constraint
+        installation + engine reconfiguration to the underlying cluster's
+        `apply_policy`. Bounds take effect on the next `tick()` — a pinned
+        floor spawns immediately there.
+
+        Returns:
+            {engine name: DowntimeReport} for engines the cluster swapped.
+        """
+        for label, (lo, hi) in getattr(policy, "scale_bounds", {}).items():
+            self.set_bounds(label, lo, hi)
+        return self.cluster.apply_policy(policy, components=components)
+
+    # ------------------------------------------------------------------
+    def _plan_for(self, label: str, base: ShardingPlan) -> ShardingPlan:
+        """Merge the label's route constraint (if any) into ``base`` so a
+        spawned/rebalanced engine is immediately routing-eligible (same
+        fail-closed merge semantics as cluster `apply_policy` swaps)."""
+        required = self.cluster.route_constraints().get(label)
+        if required is None:
+            return base
+        return merge_restrictions(base, required)
+
+    def _execute(self, d: ScaleDecision) -> DowntimeReport:
+        if d.kind == "spawn":
+            engine = self.factory(d.label)
+            # skip names already live in the cluster (a previous scaler
+            # instance or a manual registration may own them)
+            name = f"{d.label}-as{self._spawn_seq}"
+            while name in self.cluster.engines():
+                self._spawn_seq += 1
+                name = f"{d.label}-as{self._spawn_seq}"
+            self._spawn_seq += 1
+            report = self.cluster.spawn_engine(
+                name, engine,
+                plan=self._plan_for(d.label, engine.plan),
+                labels={self.cluster.ROUTE_KEY: d.label},
+                prefill_lengths=self.cluster.label_prompt_lengths(d.label))
+        elif d.kind == "retire":
+            report = self.cluster.retire_engine(d.engine)
+        elif d.kind == "rebalance":
+            base = self.cluster.engine(d.engine).plan
+            report = self.cluster.rebalance(
+                d.engine, self._plan_for(d.label, base),
+                labels={self.cluster.ROUTE_KEY: d.label},
+                prefill_lengths=self.cluster.label_prompt_lengths(d.label))
+        else:
+            raise ValueError(f"unknown decision kind {d.kind!r}")
+        return report
+
+    def tick(self, dt: float = 1.0) -> List[ScaleDecision]:
+        """One control-loop iteration: observe load, decide, execute.
+
+        Args:
+            dt: virtual seconds since the last tick (see
+                `LoadTracker.observe`).
+
+        Returns:
+            The decisions executed this tick (empty most ticks). Every
+            executed decision's `DowntimeReport` is appended to
+            ``self.events``; a per-label engine-count snapshot is appended
+            to ``self.trajectory``.
+        """
+        self.tracker.observe(self.cluster, dt)
+        decisions = self.policy.decide(self.tracker, self.cluster,
+                                       self.bounds)
+        for d in decisions:
+            self.events.append((d, self._execute(d)))
+        snap = {label: len(self.cluster.engines_for_label(label))
+                for label in self.tracker.labels() if label != "*"}
+        snap["total"] = len(self.cluster.engines())
+        self.trajectory.append(snap)
+        return decisions

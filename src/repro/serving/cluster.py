@@ -20,11 +20,22 @@ This is the runtime the orchestrator programs (ROADMAP north-star layer):
     snapshots at resume and is refreshed with the post-swap completion
     window by the next `run()`/`step()` that retires requests.
 
+  * the cluster is ELASTIC: `spawn_engine` brings a new engine online with
+    the same PREPARE-phase AOT path (a spawn never JITs on the serving
+    path), `retire_engine` puts an engine into a DRAINING state — it stops
+    receiving new requests, serves out its queue, and is deregistered once
+    empty (its completions are retained for cluster metrics) — and
+    `rebalance` retargets an idle engine at a different label via the swap
+    protocol. `repro.serving.autoscaler` drives these from per-label load.
+
 Typical flow (three lines of control plane):
 
     cluster.register("edge0", engine, plan=default_plan())
     orch.submit("Phi traffic must remain inside the pod.", apply_to=cluster)
     cluster.run()          # keep serving; routing now enforces the intent
+
+See docs/architecture.md for the end-to-end dataflow and
+docs/reconfiguration.md for the lifecycle state machine.
 """
 from __future__ import annotations
 
@@ -42,6 +53,7 @@ from repro.serving.engine import (
 )
 from repro.sharding.plan import (
     ShardingPlan,
+    merge_restrictions,
     plan_satisfies,
     plan_to_shardings,
 )
@@ -55,8 +67,24 @@ class RoutingError(RuntimeError):
 
 @dataclasses.dataclass
 class DowntimeReport:
-    """Cost of one online reconfiguration (paper metrics: downtime + the
-    TTFT/TPOT band before vs after the swap)."""
+    """Cost of one online scale/reconfiguration event (paper metrics:
+    downtime + the TTFT/TPOT band before vs after the swap).
+
+    Attributes:
+        prepare_s: background compile time; serving continues throughout.
+        downtime_s: the blocking window (drain + migrate + install). Zero
+            for retirements — draining never blocks other engines.
+        migrate_bytes: bytes of params + KV pool moved in the swap window.
+        metrics_before: `compute_metrics` over the traffic window since the
+            engine's previous scale event (empty-window NaNs for a spawn).
+        metrics_after: `compute_metrics` over traffic served *after* the
+            event. Auto-finalized: seeded with the empty window and
+            refreshed by the next `ServingCluster.run()` that retires
+            post-event completions (or at reap time for a retirement).
+        engine: name of the affected engine.
+        compiled_in_prepare: executables AOT-compiled ahead of the swap.
+        event: "reconfigure" | "spawn" | "retire" | "rebalance".
+    """
 
     prepare_s: float          # background compile time (serving continues)
     downtime_s: float         # blocking window (drain + migrate + install)
@@ -65,9 +93,11 @@ class DowntimeReport:
     metrics_after: Dict[str, float]
     engine: str = ""
     compiled_in_prepare: int = 0   # executables AOT-compiled ahead of swap
+    event: str = "reconfigure"
 
     def summary(self) -> str:
-        return (f"engine={self.engine or '?'} "
+        """One-line human-readable digest of the event cost."""
+        return (f"engine={self.engine or '?'} event={self.event} "
                 f"prepare={self.prepare_s:.3f}s (aot x{self.compiled_in_prepare}) "
                 f"downtime={self.downtime_s*1e3:.1f}ms "
                 f"migrated={self.migrate_bytes/2**20:.1f}MiB")
@@ -79,6 +109,7 @@ class _EngineEntry:
     engine: ServingEngine
     pending_report: Optional[DowntimeReport] = None
     swap_t: float = 0.0
+    draining: bool = False    # retiring: serves out its queue, gets no new work
 
     # plan and labels read the live engine — one source of truth, so
     # updates after registration are visible to the router
@@ -108,10 +139,20 @@ def _default_mesh() -> jax.sharding.Mesh:
 
 
 class ServingCluster:
-    """Multi-engine serving runtime with label-based, fail-closed routing
-    and online per-engine reconfiguration."""
+    """Multi-engine serving runtime with label-based fail-closed routing,
+    online per-engine reconfiguration, and elastic spawn/retire lifecycle.
+
+    The unlabeled-traffic bucket is tracked under the label value ``"*"``
+    in the per-label views (`metrics_by_label`, `queue_depth_by_label`,
+    `arrivals`).
+    """
 
     ROUTE_KEY = "data-type"   # the label routing constraints key on
+    # retention cap on completions of retired engines: under continuous
+    # spawn/retire churn the raw request list would otherwise grow with
+    # total traffic ever served; beyond the cap the oldest completions
+    # age out and cluster-level aggregates become windowed approximations
+    RETIRED_DONE_CAP = 10_000
 
     def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
         self.mesh = mesh or _default_mesh()
@@ -119,6 +160,17 @@ class ServingCluster:
         self._routes: Dict[str, ShardingPlan] = {}   # label value -> required
         self.history: List[DowntimeReport] = []
         self.rejected: List[Request] = []
+        # completions of engines that have since been retired — retained so
+        # cluster-level metrics never lose traffic to a scale-down
+        self._retired_done: List[Request] = []
+        # per-label demand counters (submissions, INCLUDING fail-closed
+        # rejections — rejected demand is still demand the autoscaler may
+        # fix by spawning a compliant engine)
+        self._arrivals: Dict[str, int] = {}
+        # per-label recently seen prompt lengths (length -> last-seen seq),
+        # so a spawn can AOT-compile exactly the live traffic shapes
+        self._label_lengths: Dict[str, Dict[int, int]] = {}
+        self._length_seq = 0
 
     # ------------------------------------------------------------------
     # registration / introspection
@@ -126,6 +178,19 @@ class ServingCluster:
     def register(self, name: str, engine: ServingEngine, *,
                  plan: Optional[ShardingPlan] = None,
                  labels: Optional[Dict[str, str]] = None) -> None:
+        """Add an engine to the routing pool (no AOT warm-up — see
+        `spawn_engine` for the elastic path that never JITs while serving).
+
+        Args:
+            name: unique engine name.
+            engine: the `ServingEngine` to serve through.
+            plan: if given, installed as ``engine.plan`` (routing reads the
+                live engine, so this is the plan the router checks).
+            labels: merged into ``engine.labels`` (tenancy restriction).
+
+        Raises:
+            ValueError: if ``name`` is already registered.
+        """
         if name in self._entries:
             raise ValueError(f"engine {name!r} already registered")
         if plan is not None:
@@ -135,12 +200,24 @@ class ServingCluster:
         self._entries[name] = _EngineEntry(name, engine)
 
     def engine(self, name: str) -> ServingEngine:
+        """Return the registered engine ``name``.
+
+        Raises:
+            KeyError: if no engine of that name is registered (it may have
+                been retired).
+        """
         return self._entries[name].engine
 
     def engines(self) -> List[str]:
+        """Names of all registered engines (including draining ones)."""
         return list(self._entries)
 
+    def draining(self) -> List[str]:
+        """Names of engines currently draining toward retirement."""
+        return [n for n, e in self._entries.items() if e.draining]
+
     def route_constraints(self) -> Dict[str, ShardingPlan]:
+        """Installed route constraints: label value -> required plan."""
         return dict(self._routes)
 
     def set_route_constraint(self, value: str,
@@ -152,19 +229,44 @@ class ServingCluster:
     # ------------------------------------------------------------------
     # routing (fail-closed)
     # ------------------------------------------------------------------
+    def _entry_eligible(self, e: _EngineEntry, labels: Dict[str, str],
+                        required: Optional[ShardingPlan]) -> bool:
+        """THE routing-eligibility predicate (one copy, shared by request
+        routing and the autoscaler's capacity view): not draining, tenancy
+        labels don't contradict, plan satisfies the route constraint."""
+        return (not e.draining and e.serves(labels)
+                and (required is None or plan_satisfies(e.plan, required)))
+
     def eligible(self, req: Request) -> List[str]:
+        """Engines allowed to serve ``req``: tenancy labels must not
+        contradict, the engine's plan must satisfy the label's route
+        constraint (if any), and the engine must not be draining."""
         route_val = req.labels.get(self.ROUTE_KEY)
         required = self._routes.get(route_val) if route_val else None
-        out = []
-        for e in self._entries.values():
-            if not e.serves(req.labels):
-                continue
-            if required is not None and not plan_satisfies(e.plan, required):
-                continue
-            out.append(e.name)
-        return out
+        return [e.name for e in self._entries.values()
+                if self._entry_eligible(e, req.labels, required)]
+
+    def engines_for_label(self, value: str) -> List[str]:
+        """Non-draining engines that could serve traffic labeled
+        ``data-type=value`` under the current route constraints (the
+        autoscaler's per-label capacity view)."""
+        required = self._routes.get(value)
+        return [e.name for e in self._entries.values()
+                if self._entry_eligible(e, {self.ROUTE_KEY: value},
+                                        required)]
 
     def route(self, req: Request) -> str:
+        """Pick the least-loaded eligible engine for ``req``.
+
+        Returns:
+            The chosen engine name. Running engines are preferred; a paused
+            engine still queues (documented lifecycle) but only when no
+            running engine qualifies. Draining engines are never chosen.
+
+        Raises:
+            RoutingError: if no engine qualifies (fail-closed); the request
+                is recorded in ``self.rejected``.
+        """
         names = self.eligible(req)
         if not names:
             self.rejected.append(req)
@@ -173,35 +275,66 @@ class ServingCluster:
                 f"(labels={req.labels}, constraint="
                 f"{self._routes.get(req.labels.get(self.ROUTE_KEY))!r}) — "
                 "failing closed")
-        # balance over compliant engines, preferring ones actively serving;
-        # a paused engine still queues (documented lifecycle) but only when
-        # no running engine qualifies
         running = [n for n in names if not self._entries[n].engine.paused]
         return min(running or names,
                    key=lambda n: self._entries[n].engine.load)
 
     def submit(self, req: Request) -> str:
-        """Route + enqueue; returns the chosen engine name."""
+        """Route + enqueue; returns the chosen engine name.
+
+        Demand accounting happens BEFORE routing: per-label arrival counts
+        and prompt lengths are recorded even when routing fails closed, so
+        the autoscaler can see (and fix) rejected demand.
+
+        Raises:
+            RoutingError: if no engine qualifies (fail-closed).
+        """
+        value = req.labels.get(self.ROUTE_KEY, "*")
+        self._arrivals[value] = self._arrivals.get(value, 0) + 1
+        self._length_seq += 1
+        self._label_lengths.setdefault(value, {})[len(req.prompt)] = \
+            self._length_seq
         name = self.route(req)
         self._entries[name].engine.submit(req)
         return name
+
+    def arrivals(self) -> Dict[str, int]:
+        """Cumulative per-label submission counts (``"*"`` = unlabeled),
+        including fail-closed rejections. The `LoadTracker` differences
+        these to form arrival rates."""
+        return dict(self._arrivals)
+
+    def label_prompt_lengths(self, value: str,
+                             cap: int = ServingEngine.MAX_AOT_PREFILL
+                             ) -> List[int]:
+        """Most recently seen distinct prompt lengths for a label (at most
+        ``cap``), for AOT-compiling a spawned engine against live shapes."""
+        seen = self._label_lengths.get(value, {})
+        recent = sorted(seen, key=seen.get)[-cap:]
+        return sorted(recent)
 
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One decode step across all running engines. Returns #active."""
+        """One decode step across all running engines (draining engines
+        keep stepping — they must serve out their queues). Returns the
+        number of active engine-steps; reaps any engine that finished
+        draining."""
         n = 0
-        for e in self._entries.values():
+        for e in list(self._entries.values()):
             if not e.engine.paused:
                 n += e.engine.step()
+        self._reap_drained()
         return n
 
     def run(self, max_steps: int = 10_000) -> None:
         """Serve until every *running* engine's queue and slots are empty.
 
         Work queued on a paused engine stays queued (nothing is dropped)
-        and is served by the `run()` after that engine's `resume()`."""
+        and is served by the `run()` after that engine's `resume()`.
+        Draining engines are stepped until empty, then reaped. Pending
+        `DowntimeReport`s are re-finalized with the post-swap window."""
         for _ in range(max_steps):
             busy = any(
                 e.engine.queue or any(r is not None
@@ -210,15 +343,67 @@ class ServingCluster:
             if not busy:
                 break
             self.step()
+        self._reap_drained()
         self._refresh_reports()
 
     def metrics(self, name: Optional[str] = None) -> Dict[str, float]:
+        """TTFT/TPOT summary (full `METRIC_KEYS` set, NaN when undefined).
+
+        Args:
+            name: a specific engine's metrics; with ``None``, the
+                cluster-wide aggregate over every registered engine —
+                including engines registered after traffic started — plus
+                the retained completions of retired engines.
+
+        Raises:
+            KeyError: if ``name`` is given but not registered.
+        """
         if name is not None:
             return self._entries[name].engine.metrics()
-        done: List[Request] = []
+        done: List[Request] = list(self._retired_done)
         for e in self._entries.values():
             done.extend(e.engine.done)
         return compute_metrics(done)
+
+    def _known_labels(self, extra: Sequence[str] = ()) -> set:
+        vals = set(extra) | set(self._routes) | set(self._arrivals)
+        for e in self._entries.values():
+            v = e.labels.get(self.ROUTE_KEY)
+            if v:
+                vals.add(v)
+        return vals
+
+    def metrics_by_label(self, extra_labels: Sequence[str] = ()
+                         ) -> Dict[str, Dict[str, float]]:
+        """Per-label TTFT/TPOT aggregation over live + retired completions.
+
+        Every known label (route constraints, engine labels, observed
+        arrivals, plus ``extra_labels``) is present in the result —
+        zero-filled (``completed=0``, NaN stats) when it has no traffic —
+        so the `LoadTracker` can index unconditionally. Unlabeled traffic
+        aggregates under ``"*"``.
+        """
+        done: List[Request] = list(self._retired_done)
+        for e in self._entries.values():
+            done.extend(e.engine.done)
+        groups: Dict[str, List[Request]] = {}
+        for r in done:
+            groups.setdefault(r.labels.get(self.ROUTE_KEY, "*"), []).append(r)
+        labels = self._known_labels(extra_labels) | set(groups)
+        return {v: compute_metrics(groups.get(v, [])) for v in labels}
+
+    def queue_depth_by_label(self, extra_labels: Sequence[str] = ()
+                             ) -> Dict[str, int]:
+        """Queued + resident request counts per label across all engines
+        (zero-filled over the same label universe as `metrics_by_label`)."""
+        out: Dict[str, int] = {v: 0 for v in self._known_labels(extra_labels)}
+        for e in self._entries.values():
+            live = list(e.engine.queue) + [r for r in e.engine.slot_req
+                                           if r is not None]
+            for r in live:
+                v = r.labels.get(self.ROUTE_KEY, "*")
+                out[v] = out.get(v, 0) + 1
+        return out
 
     # ------------------------------------------------------------------
     # online reconfiguration (compile-ahead + blocking swap)
@@ -227,15 +412,33 @@ class ServingCluster:
                     shardings: Optional[Dict[str, Any]] = None,
                     prefill_lengths: Sequence[int] = (),
                     ) -> DowntimeReport:
+        """Swap a live engine onto ``plan`` (PREPARE / SWAP / RESUME).
+
+        Args:
+            name: the engine to reconfigure.
+            plan: the target `ShardingPlan`.
+            shardings: pre-materialized sharding trees; derived from the
+                plan via `plan_to_shardings` when omitted.
+            prefill_lengths: prompt lengths to AOT-compile; defaults to the
+                engine's recently seen lengths.
+
+        Returns:
+            The (auto-finalizing) `DowntimeReport` for this swap.
+
+        Raises:
+            KeyError: if ``name`` is not registered.
+            ValueError: if the engine is draining toward retirement — a
+                retiring engine never pays a swap window.
+        """
         entry = self._entries[name]
+        if entry.draining:
+            raise ValueError(f"engine {name!r} is draining — a retiring "
+                             "engine cannot be reconfigured")
         eng = entry.engine
         # a still-pending previous report gets its honest final window now
         # (possibly empty — completed=0/NaN — if no traffic ran under it),
         # rather than being silently dropped by the overwrite below
-        if entry.pending_report is not None:
-            entry.pending_report.metrics_after = compute_metrics(
-                [r for r in eng.done if r.t_done >= entry.swap_t])
-            entry.pending_report = None
+        self._finalize_pending(entry)
         # window since the previous swap (everything, on the first one), so
         # repeated reconfigurations compare like-for-like traffic windows
         metrics_before = compute_metrics(
@@ -276,6 +479,214 @@ class ServingCluster:
         entry.swap_t = time.time()
         self.history.append(report)
         return report
+
+    # ------------------------------------------------------------------
+    # elastic lifecycle (spawn / retire / rebalance) — autoscaler hooks
+    # ------------------------------------------------------------------
+    def spawn_engine(self, name: str, engine: ServingEngine, *,
+                     plan: Optional[ShardingPlan] = None,
+                     labels: Optional[Dict[str, str]] = None,
+                     prefill_lengths: Sequence[int] = (),
+                     ) -> DowntimeReport:
+        """Bring a NEW engine online through the PREPARE-phase AOT path.
+
+        The engine's params/cache are migrated onto shardings materialized
+        from its plan and its prefill/decode executables are AOT-compiled
+        BEFORE it joins the routing pool — a spawned engine never JITs on
+        the serving path. Existing engines keep serving throughout; the
+        report's ``downtime_s`` only covers the spawn's own install window.
+
+        Args:
+            name: unique engine name.
+            engine: a freshly built `ServingEngine` (e.g. from an
+                autoscaler factory).
+            plan: installed as the engine's plan before materialization.
+            labels: merged into the engine's labels (e.g. dedicate it to
+                one ``data-type``).
+            prefill_lengths: prompt lengths to AOT-compile (typically
+                `label_prompt_lengths` of the label being scaled).
+
+        Returns:
+            A `DowntimeReport` with ``event="spawn"`` (``metrics_before``
+            is the empty window; ``metrics_after`` finalizes once the
+            engine serves traffic).
+
+        Raises:
+            ValueError: if ``name`` is already registered.
+        """
+        if name in self._entries:
+            raise ValueError(f"engine {name!r} already registered")
+        if plan is not None:
+            engine.plan = plan
+        if labels:
+            engine.labels.update(labels)
+
+        # ---- PREPARE (cluster keeps serving; the new engine is offline) ----
+        t0 = time.time()
+        shardings = plan_to_shardings(
+            engine.model.cfg, engine.plan, self.mesh, n_slots=engine.n_slots)
+        executables, n_compiled = engine.aot_executables(
+            shardings, prefill_lengths=prefill_lengths)
+        prepare_s = time.time() - t0
+
+        # ---- install + join the routing pool ----
+        t0 = time.time()
+        engine.pause()
+        try:
+            migrate_bytes = engine.swap_plan(
+                engine.plan, shardings=shardings, executables=executables)
+        finally:
+            engine.resume()
+        entry = _EngineEntry(name, engine)
+        self._entries[name] = entry
+        downtime_s = time.time() - t0
+
+        report = DowntimeReport(
+            prepare_s=prepare_s, downtime_s=downtime_s,
+            migrate_bytes=migrate_bytes,
+            metrics_before=compute_metrics([]),
+            metrics_after=compute_metrics([]),
+            engine=name, compiled_in_prepare=n_compiled, event="spawn")
+        entry.pending_report = report
+        entry.swap_t = time.time()
+        self.history.append(report)
+        # new capacity takes its share of the existing backlog at once
+        if engine.labels.get(self.ROUTE_KEY):
+            self.redistribute_queued(engine.labels[self.ROUTE_KEY])
+        else:
+            for value in self._known_labels():
+                self.redistribute_queued(value)
+        return report
+
+    def retire_engine(self, name: str) -> DowntimeReport:
+        """Begin graceful retirement: the engine stops receiving new
+        requests immediately (the router skips draining engines), serves
+        out its queue and resident slots, and is deregistered by the next
+        `step()`/`run()` that finds it empty. Its completions are retained
+        for cluster-level metrics.
+
+        Retirement never blocks other engines: ``downtime_s`` is 0. A
+        paused engine is resumed so it can actually drain — a retiring
+        engine that never steps would strand its queued requests forever.
+
+        Returns:
+            A `DowntimeReport` with ``event="retire"``; ``metrics_after``
+            finalizes at reap time with the drain-window traffic (empty if
+            the engine was already idle).
+
+        Raises:
+            KeyError: if ``name`` is not registered.
+            ValueError: if the engine is already draining.
+        """
+        entry = self._entries[name]
+        if entry.draining:
+            raise ValueError(f"engine {name!r} is already draining")
+        if entry.engine.paused:
+            entry.engine.resume()
+        self._finalize_pending(entry)
+        metrics_before = compute_metrics(
+            [r for r in entry.engine.done if r.t_done >= entry.swap_t])
+        entry.draining = True
+        report = DowntimeReport(
+            prepare_s=0.0, downtime_s=0.0, migrate_bytes=0,
+            metrics_before=metrics_before,
+            metrics_after=compute_metrics([]),
+            engine=name, event="retire")
+        entry.pending_report = report
+        entry.swap_t = time.time()
+        self.history.append(report)
+        self._reap_drained()           # already-idle engines retire at once
+        return report
+
+    def rebalance(self, name: str, plan: ShardingPlan, *,
+                  labels: Optional[Dict[str, str]] = None,
+                  prefill_lengths: Sequence[int] = ()) -> DowntimeReport:
+        """Retarget a live engine at a different workload class: update its
+        tenancy labels and swap it onto ``plan`` via `reconfigure`. The
+        autoscaler uses this when resizing an idle engine beats a cold
+        spawn (no new params to initialize, one swap window).
+
+        Args / Raises: as `reconfigure`; ``labels`` as in `register`.
+
+        Returns:
+            The swap's `DowntimeReport` with ``event="rebalance"``.
+        """
+        entry = self._entries[name]
+        if labels:
+            entry.engine.labels.update(labels)
+        report = self.reconfigure(name, plan, prefill_lengths=prefill_lengths)
+        report.event = "rebalance"
+        value = entry.labels.get(self.ROUTE_KEY)
+        if value:
+            self.redistribute_queued(value)
+        return report
+
+    def redistribute_queued(self, value: str) -> int:
+        """Re-route queued (not yet prefilled) requests labeled
+        ``data-type=value`` across the currently eligible engines, so new
+        capacity immediately shares the backlog instead of only absorbing
+        future arrivals. Requests already resident in decode slots stay
+        where they are (their KV state lives on that engine).
+
+        Submission timestamps are preserved — a moved request's TTFT still
+        measures from its original submit. A request that no engine can
+        serve anymore stays on its current engine (never dropped).
+
+        Returns:
+            The number of requests moved through the router.
+        """
+        moved: List[Tuple[_EngineEntry, Request]] = []
+        for e in self._entries.values():
+            keep: List[Request] = []
+            for r in e.engine.queue:
+                if r.labels.get(self.ROUTE_KEY, "*") == value:
+                    moved.append((e, r))
+                else:
+                    keep.append(r)
+            e.engine.queue[:] = keep
+        for src, r in moved:
+            try:
+                name = self.route(r)
+            except RoutingError:
+                self.rejected.pop()      # a requeue miss is not a rejection
+                src.engine.queue.append(r)
+                continue
+            dest = self._entries[name].engine
+            # the destination must learn the prompt length, or a later
+            # default-lengths reconfigure would omit it from the AOT set
+            # and JIT prefill on the serving path
+            dest.note_prompt_length(len(r.prompt))
+            dest.queue.append(r)
+        return len(moved)
+
+    def pending_reports(self) -> List[str]:
+        """Engine names whose latest `DowntimeReport` still awaits its
+        post-event traffic window (empty list == all reports finalized)."""
+        return [n for n, e in self._entries.items()
+                if e.pending_report is not None]
+
+    def _finalize_pending(self, entry: _EngineEntry) -> None:
+        """Close an entry's pending report with its honest final window
+        (possibly empty) before a new scale event overwrites it."""
+        if entry.pending_report is not None:
+            entry.pending_report.metrics_after = compute_metrics(
+                [r for r in entry.engine.done if r.t_done >= entry.swap_t])
+            entry.pending_report = None
+
+    def _reap_drained(self) -> None:
+        """Deregister draining engines that have gone empty, finalizing
+        their retire reports with the drain-window traffic and retaining
+        their completions for cluster metrics."""
+        for name in [n for n, e in self._entries.items() if e.draining]:
+            entry = self._entries[name]
+            eng = entry.engine
+            if eng.queue or any(r is not None for r in eng.slot_req):
+                continue               # still draining
+            self._finalize_pending(entry)
+            self._retired_done.extend(eng.done)
+            if len(self._retired_done) > self.RETIRED_DONE_CAP:
+                del self._retired_done[:-self.RETIRED_DONE_CAP]
+            del self._entries[name]
 
     def _refresh_reports(self) -> None:
         """Re-finalize pending reports once post-swap completions exist, so
@@ -339,36 +750,18 @@ class ServingCluster:
         # one swap per engine: merge ALL unsatisfied constraints into a
         # single target plan (per-constraint swaps would let a later pin
         # overwrite an earlier one and churn the engine through repeated
-        # migrations). Pins that conflict across constraints are dropped in
-        # favor of forbidding the axis — the engine then satisfies neither
-        # pinned constraint and those labels fail closed at routing time,
-        # which is the correct outcome for one engine asked to be in two
-        # places at once.
+        # migrations); `merge_restrictions` degrades conflicting pins to
+        # axis confinement, which stays fail-closed at routing time
         reports: Dict[str, DowntimeReport] = {}
         for e in list(self._entries.values()):
-            axes = set(e.plan.forbidden_collective_axes)
-            pins: Dict[str, int] = dict(e.plan.device_constraints)
-            conflicts: set = set()
-            needs_swap = False
-            for value, required in self._routes.items():
-                if not e.serves({self.ROUTE_KEY: value}):
-                    continue
-                if plan_satisfies(e.plan, required):
-                    continue
-                needs_swap = True
-                axes.update(required.forbidden_collective_axes)
-                for axis, coord in required.device_constraints:
-                    if axis in pins and pins[axis] != coord:
-                        conflicts.add(axis)
-                    else:
-                        pins[axis] = coord
-            if not needs_swap:
+            if e.draining:
+                continue               # a retiring engine never swaps
+            unsatisfied = [
+                required for value, required in self._routes.items()
+                if e.serves({self.ROUTE_KEY: value})
+                and not plan_satisfies(e.plan, required)]
+            if not unsatisfied:
                 continue
-            for axis in conflicts:
-                pins.pop(axis, None)
-                axes.add(axis)
-            new_plan = e.plan.with_(
-                device_constraints=tuple(sorted(pins.items())),
-                forbidden_collective_axes=tuple(sorted(axes)))
+            new_plan = merge_restrictions(e.plan, *unsatisfied)
             reports[e.name] = self.reconfigure(e.name, new_plan)
         return reports

@@ -50,6 +50,20 @@ class EngineStateError(RuntimeError):
 
 @dataclasses.dataclass
 class Request:
+    """One generation request flowing through an engine.
+
+    Attributes:
+        rid: caller-chosen request id (metrics/bookkeeping only).
+        prompt: ``(S_prompt,)`` int32 token ids.
+        max_new_tokens: decode budget; generation also stops at the KV
+            pool's sequence capacity.
+        labels: tenancy labels (e.g. ``{"data-type": "phi"}``) — the
+            cluster routes and aggregates on these.
+        t_submit / t_first / t_done: wall-clock stamps set by the engine
+            at submission, first token, and completion.
+        tokens_out: generated token ids (first entry comes from prefill).
+    """
+
     rid: int
     prompt: np.ndarray                 # (S_prompt,) int32
     max_new_tokens: int = 16
@@ -62,10 +76,12 @@ class Request:
 
     @property
     def ttft(self) -> float:
+        """Time to first token (seconds): first-token stamp - submit."""
         return self.t_first - self.t_submit
 
     @property
     def tpot(self) -> float:
+        """Mean time per output token (seconds) over the decode phase."""
         n = max(len(self.tokens_out) - 1, 1)
         return (self.t_done - self.t_first) / n
 
@@ -73,9 +89,14 @@ class Request:
 def compute_metrics(done: Sequence[Request]) -> Dict[str, float]:
     """TTFT/TPOT summary over a set of completed requests.
 
-    Always emits the full `METRIC_KEYS` set — NaN for undefined statistics —
-    so callers can index unconditionally (an empty window is a value, not a
-    missing key).
+    Args:
+        done: completed requests (``t_done`` set); any iterable window.
+
+    Returns:
+        Always the full `METRIC_KEYS` set — ``completed`` plus mean/p99
+        TTFT and TPOT, with NaN for undefined statistics — so callers can
+        index unconditionally (an empty window is a value, not a missing
+        key).
     """
     out: Dict[str, float] = {
         "completed": len(done),
@@ -95,7 +116,21 @@ def compute_metrics(done: Sequence[Request]) -> Dict[str, float]:
 
 
 class ServingEngine:
-    """Single-model engine; decode batch of `n_slots` sequences."""
+    """Single-model engine; decode batch of `n_slots` sequences.
+
+    Args:
+        model: the `repro.models.Model` to serve.
+        params: its parameter pytree (device arrays).
+        n_slots: continuous-batching width (KV pool batch dim).
+        s_max: KV pool sequence capacity per slot.
+        greedy: greedy sampling (the only mode currently implemented).
+        plan: initial `ShardingPlan`; `default_plan()` when omitted.
+        labels: tenancy labels. Under cluster routing an engine label
+            only EXCLUDES requests that carry a contradicting value: an
+            engine labeled ``{"data-type": "phi"}`` never receives
+            ``data-type=general`` traffic, but requests without the label
+            can still land on it. An unlabeled engine serves all.
+    """
 
     # cap on the prompt-length fallback set `aot_executables` compiles for:
     # a long-lived engine sees unboundedly many distinct lengths, but only
@@ -135,7 +170,8 @@ class ServingEngine:
     # lifecycle
     # ------------------------------------------------------------------
     def pause(self) -> None:
-        """Stop stepping. Submissions still queue; nothing is dropped."""
+        """Stop stepping. Submissions still queue; nothing is dropped.
+        Idempotent; `step()` raises `EngineStateError` while paused."""
         self.paused = True
 
     def drain(self) -> int:
@@ -155,13 +191,23 @@ class ServingEngine:
         swap in pre-compiled `executables`. Must be called paused — this is
         the blocking window and it performs NO compilation.
 
-        `shardings`:   {"params": sharding tree, "cache": sharding tree}
-        `executables`: {"prefill": callable | {prompt_len: AOT executable},
-                        "decode": callable | AOT executable}
-                       (a plain callable replaces the JIT fallback; an AOT
-                       dict/executable is installed ahead of the fallback)
+        Args:
+            plan: the new `ShardingPlan` to record on the engine (routing
+                reads it); ``None`` keeps the current plan.
+            shardings: ``{"params": sharding tree, "cache": sharding
+                tree}`` to `jax.device_put` the live state onto; AOT
+                executables compiled for the old layout are invalidated.
+            executables: ``{"prefill": callable | {prompt_len: AOT
+                executable}, "decode": callable | AOT executable}`` — a
+                plain callable replaces the JIT fallback; an AOT
+                dict/executable is installed ahead of the fallback.
 
-        Returns the number of bytes migrated."""
+        Returns:
+            The number of bytes migrated (0 without ``shardings``).
+
+        Raises:
+            EngineStateError: if the engine is not paused.
+        """
         if not self.paused:
             raise EngineStateError("swap_plan requires a paused engine "
                                    "(call pause(); drain() first)")
@@ -195,6 +241,7 @@ class ServingEngine:
         return migrated
 
     def resume(self) -> None:
+        """Leave the paused state and serve again (idempotent)."""
         self.paused = False
 
     # ------------------------------------------------------------------
@@ -206,8 +253,18 @@ class ServingEngine:
         """Ahead-of-time compile decode (and prefill per prompt length)
         against the target `shardings`, via .lower().compile().
 
-        Returns (executables, n_compiled) in the shape `swap_plan` accepts,
-        so the blocking swap window installs finished executables only."""
+        Args:
+            shardings: the target ``{"params": ..., "cache": ...}``
+                sharding trees (see `plan_to_shardings`).
+            prefill_lengths: prompt lengths to compile prefill for; when
+                empty, falls back to the engine's most recently seen
+                lengths (capped at `MAX_AOT_PREFILL`).
+
+        Returns:
+            ``(executables, n_compiled)`` in the shape `swap_plan`
+            accepts, so the blocking swap window installs finished
+            executables only.
+        """
         sds = jax.ShapeDtypeStruct
         p_sds = jax.tree.map(lambda x, s: sds(x.shape, x.dtype, sharding=s),
                              self.params, shardings["params"])
@@ -239,10 +296,19 @@ class ServingEngine:
     # serving
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue a request (stamps ``t_submit``; records its prompt
+        length for future AOT prefill compilation). Works while paused —
+        the request waits for `resume()`."""
         req.t_submit = time.time()
-        self._submit_seq += 1
-        self.seen_prompt_lengths[len(req.prompt)] = self._submit_seq
+        self.note_prompt_length(len(req.prompt))
         self.queue.append(req)
+
+    def note_prompt_length(self, length: int) -> None:
+        """Record a prompt length as recently seen (feeds the default AOT
+        prefill set) WITHOUT re-stamping submission metadata — used when a
+        request migrates onto this engine from another one."""
+        self._submit_seq += 1
+        self.seen_prompt_lengths[length] = self._submit_seq
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
@@ -280,7 +346,15 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One decode step over all active slots. Returns #active."""
+        """Admit queued requests into free slots (prefill), then run one
+        decode step over all active slots.
+
+        Returns:
+            The number of slots that decoded this step.
+
+        Raises:
+            EngineStateError: if the engine is paused.
+        """
         if self.paused:
             raise EngineStateError("engine is paused (resume() to serve)")
         self._admit()
@@ -313,6 +387,12 @@ class ServingEngine:
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> None:
+        """Step until the queue and all slots are empty (or the engine's
+        lifetime step count reaches ``max_steps``).
+
+        Raises:
+            EngineStateError: if the engine is paused.
+        """
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and self.steps < max_steps:
             self.step()

@@ -3,6 +3,7 @@ from repro.sharding.plan import (  # noqa: F401
     batch_specs,
     cache_specs,
     default_plan,
+    merge_restrictions,
     opt_state_specs,
     param_specs,
     plan_satisfies,

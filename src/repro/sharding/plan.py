@@ -29,6 +29,35 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class ShardingPlan:
+    """Logical-axis -> mesh-axis assignment for a whole deployment, plus
+    the intent layer's placement restrictions.
+
+    Immutable; derive variants with `with_`. Two halves:
+
+      * parallelism layout (``batch_axes`` .. ``shard_vocab``): how arrays
+        shard over the mesh — materialized by `param_specs`/`cache_specs`/
+        `plan_to_shardings`;
+      * intent restrictions (``device_constraints``,
+        ``forbidden_collective_axes``): where the arrays may live and
+        which mesh axes their collectives must not cross — checked by the
+        validator and by the cluster router (`plan_satisfies`).
+
+    Attributes:
+        batch_axes: mesh axes the input batch shards over (DP).
+        fsdp_axes: param-storage sharding axes (ZeRO-3 style).
+        tp_axis: tensor-parallel mesh axis (None disables TP).
+        ep_axis: expert-parallel mesh axis for MoE layers.
+        seq_axis: KV-cache sequence sharding (flash-decoding style); a
+            mesh axis name, tuple of names, or None.
+        sequence_parallel: Megatron-style residual-stream sharding.
+        shard_attn_heads: shard attention heads over ``tp_axis``.
+        shard_vocab: shard embedding/LM-head vocab over ``tp_axis``.
+        device_constraints: ``(("pod", 0), ...)`` — mesh-axis coordinates
+            this plan's arrays are confined to (see `restrict_mesh`).
+        forbidden_collective_axes: mesh axes that tagged tensors'
+            collectives must NOT cross (validated against compiled HLO).
+    """
+
     batch_axes: Tuple[str, ...] = ("data",)
     fsdp_axes: Tuple[str, ...] = ("data",)     # param-storage sharding (ZeRO)
     tp_axis: Optional[str] = "model"           # tensor parallel
@@ -50,18 +79,36 @@ class ShardingPlan:
     forbidden_collective_axes: Tuple[str, ...] = ()
 
     def with_(self, **kw) -> "ShardingPlan":
+        """Return a copy with the given fields replaced (the plan itself
+        is frozen).
+
+        Raises:
+            TypeError: on a field name `ShardingPlan` does not define.
+        """
         return dataclasses.replace(self, **kw)
 
     @property
     def fsdp(self) -> Optional[Tuple[str, ...]]:
+        """FSDP axes, normalized so an empty tuple reads as None."""
         return self.fsdp_axes or None
 
     @property
     def tp(self) -> Optional[str]:
+        """Tensor-parallel axis (alias for ``tp_axis``)."""
         return self.tp_axis
 
 
 def default_plan(multi_pod: bool = False) -> ShardingPlan:
+    """The paper-faithful conservative baseline layout.
+
+    Args:
+        multi_pod: also spread the batch over the ``pod`` axis (DP across
+            pods) — single-pod batch sharding otherwise.
+
+    Returns:
+        An unrestricted `ShardingPlan` (no device constraints, no
+        forbidden collective axes).
+    """
     if multi_pod:
         return ShardingPlan(batch_axes=("pod", "data"), fsdp_axes=("data",))
     return ShardingPlan()
@@ -160,7 +207,16 @@ def _prepend(spec_tree: PyTree, axis=None) -> PyTree:
 
 
 def param_specs(cfg: ModelConfig, plan: ShardingPlan) -> PyTree:
-    """PartitionSpec tree matching `Model.init_params` output structure."""
+    """PartitionSpec tree matching `Model.init_params` output structure.
+
+    Args:
+        cfg: the model config (architecture decides the tree layout:
+            enc-dec, hybrid, MoE, ...).
+        plan: the layout to realize.
+
+    Returns:
+        A pytree of `PartitionSpec` congruent with the param tree.
+    """
     from repro.models.lm import layer_kinds  # avoid cycle
 
     f, tp = plan.fsdp, plan.tp
@@ -203,6 +259,12 @@ def param_specs(cfg: ModelConfig, plan: ShardingPlan) -> PyTree:
 
 
 def opt_state_specs(pspecs: PyTree) -> PyTree:
+    """Adam-state PartitionSpecs: moments shard like the params they
+    track; the step counter is replicated.
+
+    Args:
+        pspecs: the `param_specs` output for the same model/plan.
+    """
     return {
         "m": pspecs,
         "v": pspecs,
@@ -222,6 +284,15 @@ def cache_specs(cfg: ModelConfig, plan: ShardingPlan, *, batch: int) -> PyTree:
     style) rather than the few-KV-head dim: KV-head counts (2..8) don't
     divide the 16-wide model axis, while 32k+ contexts always do. Distributed
     softmax (max/sum all-reduce) is inserted by GSPMD automatically.
+
+    Args:
+        cfg: the model config (decides GQA/MLA/SSM cache layouts).
+        plan: the layout to realize.
+        batch: the KV pool's batch size (``n_slots``); with ``batch == 1``
+            the batch dim is left unsharded.
+
+    Returns:
+        A pytree of `PartitionSpec` congruent with the cache tree.
     """
     from repro.models.lm import layer_kinds
 
@@ -269,7 +340,16 @@ def cache_specs(cfg: ModelConfig, plan: ShardingPlan, *, batch: int) -> PyTree:
 def prune_spec(spec: "jax.sharding.PartitionSpec",
                axis_names: Tuple[str, ...]) -> "jax.sharding.PartitionSpec":
     """Drop mesh-axis references a mesh does not carry (reduced runs build
-    smaller meshes than the full production topology)."""
+    smaller meshes than the full production topology).
+
+    Args:
+        spec: the spec to prune (tuple entries are pruned element-wise).
+        axis_names: the axes the target mesh actually has.
+
+    Returns:
+        A spec referencing only ``axis_names`` (dropped entries become
+        None, i.e. replicated).
+    """
     parts = []
     for entry in spec:
         if entry is None:
@@ -290,6 +370,15 @@ def restrict_mesh(mesh: "jax.sharding.Mesh",
     Logical coordinates fold onto the available hardware by modulo, so a
     plan pinned to ``("pod", 1)`` still resolves on a single-pod (or
     single-device) reduced mesh.
+
+    Args:
+        mesh: the full mesh.
+        device_constraints: ``((axis, coord), ...)`` pins; axes the mesh
+            does not carry are ignored.
+
+    Returns:
+        A mesh restricted to one coordinate per pinned axis (the input
+        mesh unchanged when there are no constraints).
     """
     if not device_constraints:
         return mesh
@@ -311,6 +400,16 @@ def plan_to_shardings(cfg: ModelConfig, plan: ShardingPlan,
     This is the bridge the orchestrator uses: a validated intent compiles to
     a (restricted) plan, and this function turns that plan into the concrete
     device assignment honoring ``device_constraints`` (via `restrict_mesh`).
+
+    Args:
+        cfg: the served model's config.
+        plan: the plan to materialize.
+        mesh: the cluster mesh (restricted per the plan's constraints).
+        n_slots: the engine's KV pool batch size.
+
+    Returns:
+        ``{"params": NamedSharding tree, "cache": NamedSharding tree}`` in
+        the shape `ServingEngine.swap_plan` / `aot_executables` accept.
     """
     sub = restrict_mesh(mesh, plan.device_constraints)
     is_p = lambda x: isinstance(x, P)  # noqa: E731
@@ -338,6 +437,14 @@ def plan_satisfies(plan: ShardingPlan, required: ShardingPlan) -> bool:
       `plan` or pinned by a device constraint (a single coordinate on an
       axis means no collective can cross it);
     * every required device pin must be pinned identically by `plan`.
+
+    Args:
+        plan: the candidate engine's plan.
+        required: the constraint plan compiled from an intent (only its
+            restriction fields matter).
+
+    Returns:
+        True iff `plan` meets every restriction in `required`.
     """
     pinned = dict(plan.device_constraints)
     for axis in required.forbidden_collective_axes:
@@ -350,8 +457,57 @@ def plan_satisfies(plan: ShardingPlan, required: ShardingPlan) -> bool:
     return True
 
 
+def merge_restrictions(base: ShardingPlan,
+                       *required: ShardingPlan) -> ShardingPlan:
+    """Merge the restriction fields of `required` plans into `base`.
+
+    The single source of the merge semantics used everywhere a plan must
+    be made to satisfy intent constraints (cluster `apply_policy` swaps,
+    autoscaler spawn/rebalance targets): forbidden collective axes union;
+    device pins accumulate, and a pin that CONFLICTS (same axis, different
+    coordinate — whether with `base` or between two required plans)
+    degrades to forbidding that axis with no pin. That keeps the result
+    fail-closed: an engine asked to be in two places at once satisfies
+    neither pinned constraint and the affected labels are rejected at
+    routing time rather than silently mis-placed.
+
+    Args:
+        base: the plan whose parallelism layout is kept.
+        required: constraint plans (only their restriction fields matter).
+
+    Returns:
+        `base` with merged ``device_constraints`` and
+        ``forbidden_collective_axes``.
+    """
+    pins = dict(base.device_constraints)
+    axes = set(base.forbidden_collective_axes)
+    conflicts: set = set()
+    for req in required:
+        axes.update(req.forbidden_collective_axes)
+        for axis, coord in req.device_constraints:
+            if axis in pins and pins[axis] != coord:
+                conflicts.add(axis)
+            else:
+                pins[axis] = coord
+    for axis in conflicts:
+        pins.pop(axis, None)
+        axes.add(axis)
+    return base.with_(device_constraints=tuple(sorted(pins.items())),
+                      forbidden_collective_axes=tuple(sorted(axes)))
+
+
 def batch_specs(cfg: ModelConfig, plan: ShardingPlan, cell: ShapeCell) -> dict:
-    """Input-batch PartitionSpecs per shape cell kind."""
+    """Input-batch PartitionSpecs per shape cell kind.
+
+    Args:
+        cfg: the model config (adds frames/positions entries as needed).
+        plan: the layout to realize.
+        cell: the shape cell being launched; ``global_batch == 1`` leaves
+            the batch dim unsharded, train cells add a loss mask.
+
+    Returns:
+        ``{"tokens": P, ...}`` matching the batch dict the model consumes.
+    """
     b_ax = plan.batch_axes if cell.global_batch > 1 else None
     specs = {"tokens": P(b_ax, None)}
     if cell.kind == "train":

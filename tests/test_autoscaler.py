@@ -1,0 +1,701 @@
+"""Elastic autoscaling tests: per-label load tracking, spawn on sustained
+overload, retire strictly after drain, anti-flapping hysteresis, auto-
+finalized DowntimeReports for every scale event, intent-pinned scaling
+bounds (Orchestrator.submit(apply_to=autoscaler)), and the per-label
+cluster-metrics aggregation the LoadTracker depends on."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import Orchestrator
+from repro.models import build_model
+from repro.serving import (
+    METRIC_KEYS,
+    Autoscaler,
+    ElasticPolicy,
+    LoadTracker,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.sharding import ShardingPlan, plan_satisfies
+
+
+@pytest.fixture(scope="module")
+def fp32_model():
+    cfg = dataclasses.replace(get_reduced_config("minitron_4b"),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _req(rng, cfg, rid, label=None, n=6, new=3):
+    labels = {"data-type": label} if label else {}
+    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
+                   .astype(np.int32), max_new_tokens=new, labels=labels)
+
+
+def _mk(model, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("s_max", 32)
+    return ServingEngine(model, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# load tracking + per-label metrics (the LoadTracker's substrate)
+# ---------------------------------------------------------------------------
+
+
+def test_load_tracker_ewma_rates_and_decay(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("e", _mk(model, params))
+    rng = np.random.default_rng(0)
+    tracker = LoadTracker(alpha=0.5)
+
+    for rid in range(4):
+        cluster.submit(_req(rng, cfg, rid, "phi"))
+    tracker.observe(cluster)
+    assert tracker.rate("phi") == pytest.approx(2.0)   # 0.5 * 4/1
+    assert tracker.depth("phi") == pytest.approx(2.0)
+    # no new arrivals: the rate EWMA decays, never goes negative
+    cluster.run()
+    tracker.observe(cluster)
+    assert tracker.rate("phi") == pytest.approx(1.0)
+    assert tracker.depth("phi") == pytest.approx(1.0)
+    assert tracker.rate("never-seen") == 0.0
+
+
+def test_cluster_metrics_aggregate_late_and_retired_engines(fp32_model):
+    """The aggregation bugfix: engines registered after traffic started are
+    included, and a retired engine's completions are never lost."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params))
+    rng = np.random.default_rng(1)
+    cluster.submit(_req(rng, cfg, 0, "phi"))
+    cluster.run()
+    assert cluster.metrics()["completed"] == 1
+
+    # registered AFTER the first request — must still aggregate
+    cluster.register("b", _mk(model, params),
+                     labels={"data-type": "general"})
+    cluster.submit(_req(rng, cfg, 1, "general"))
+    cluster.run()
+    assert cluster.metrics()["completed"] == 2
+
+    # retiring b keeps its completions in the cluster aggregate
+    cluster.retire_engine("b")
+    cluster.run()
+    assert "b" not in cluster.engines()
+    assert cluster.metrics()["completed"] == 2
+    assert cluster.metrics_by_label()["general"]["completed"] == 1
+
+
+def test_metrics_by_label_zero_fills_idle_labels(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("e", _mk(model, params))
+    cluster.set_route_constraint("phi", ShardingPlan())  # vacuous, test-only
+    rng = np.random.default_rng(2)
+    cluster.submit(_req(rng, cfg, 0, "general"))
+    cluster.run()
+
+    by_label = cluster.metrics_by_label(extra_labels=("audio",))
+    # constrained-but-idle and explicitly requested labels are zero-filled
+    for label in ("phi", "audio"):
+        assert set(by_label[label]) == set(METRIC_KEYS)
+        assert by_label[label]["completed"] == 0
+        assert np.isnan(by_label[label]["ttft_mean_s"])
+    assert by_label["general"]["completed"] == 1
+    depths = cluster.queue_depth_by_label(extra_labels=("audio",))
+    assert depths["phi"] == 0 and depths["audio"] == 0
+
+
+# ---------------------------------------------------------------------------
+# scale-up: spawn on sustained per-label overload
+# ---------------------------------------------------------------------------
+
+
+def test_spawn_on_sustained_overload_not_on_transient(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(spawn_depth=3.0, sustain=2, cooldown=2,
+                             prefer_rebalance=False),
+        tracker=LoadTracker(alpha=1.0))
+    rng = np.random.default_rng(3)
+    for rid in range(8):
+        cluster.submit(_req(rng, cfg, rid, "phi"))
+
+    # one hot tick is transient — no spawn yet (sustain=2)
+    assert scaler.tick() == []
+    decisions = scaler.tick()
+    assert [d.kind for d in decisions] == ["spawn"]
+    assert decisions[0].label == "phi"
+
+    (_, report), = scaler.events
+    name = report.engine
+    assert name in cluster.engines()
+    assert report.event == "spawn"
+    assert report.compiled_in_prepare > 0          # AOT'd in PREPARE
+    spawned = cluster.engine(name)
+    assert spawned.labels["data-type"] == "phi"    # dedicated capacity
+    # the spawn took its share of the backlog immediately
+    assert spawned.load > 0
+    # moved requests keep their original submission timestamps
+    assert all(r.t_submit > 0 for r in spawned.queue)
+
+
+def test_spawned_engine_never_jits_on_serving_path(fp32_model):
+    """A spawn AOT-compiles prefill for the label's live prompt lengths, so
+    admission uses the AOT executable, not the JIT fallback."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    rng = np.random.default_rng(4)
+    for rid in range(3):
+        cluster.submit(_req(rng, cfg, rid, "phi", n=7))
+    assert cluster.label_prompt_lengths("phi") == [7]
+
+    engine = _mk(model, params)
+    report = cluster.spawn_engine(
+        "phi-1", engine, labels={"data-type": "phi"},
+        prefill_lengths=cluster.label_prompt_lengths("phi"))
+    assert report.compiled_in_prepare == 2         # decode + prefill(7)
+    assert 7 in engine._prefill_exec
+    assert engine._decode_exec is not None
+
+
+# ---------------------------------------------------------------------------
+# scale-down: retire strictly after drain, never route to draining
+# ---------------------------------------------------------------------------
+
+
+def test_retire_only_after_drain(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    cluster.spawn_engine("phi-0", _mk(model, params),
+                         labels={"data-type": "phi"})
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(retire_rate=0.25, sustain=2, cooldown=0),
+        tracker=LoadTracker(alpha=1.0))
+    rng = np.random.default_rng(5)
+    for rid in range(4):
+        cluster.submit(_req(rng, cfg, rid, "phi"))
+
+    # cold rate but the dedicated engine still has work: no retirement
+    for _ in range(3):
+        assert all(d.kind != "retire" for d in scaler.tick())
+    assert "phi-0" in cluster.engines()
+
+    cluster.run()                                  # drains everything
+    for _ in range(2):
+        decisions = scaler.tick()
+    assert [d.kind for d in decisions] == ["retire"]
+    cluster.run()
+    assert "phi-0" not in cluster.engines()
+    # completions survived the retirement
+    assert cluster.metrics_by_label()["phi"]["completed"] == 4
+
+
+def test_no_request_routed_to_draining_engine(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    cluster.register("phi-0", _mk(model, params),
+                     labels={"data-type": "phi"})
+    rng = np.random.default_rng(6)
+    # park work directly on the dedicated engine so it must drain, not vanish
+    cluster.engine("phi-0").submit(_req(rng, cfg, 0, "phi"))
+    assert cluster.engine("phi-0").load == 1
+
+    report = cluster.retire_engine("phi-0")
+    assert report.event == "retire" and report.downtime_s == 0.0
+    assert cluster.draining() == ["phi-0"]
+    assert "phi-0" in cluster.engines()            # still serving its queue
+
+    # new traffic lands on the remaining engine, never the draining one
+    for rid in range(1, 4):
+        assert cluster.submit(_req(rng, cfg, rid, "phi")) == "base"
+    assert "phi-0" not in cluster.eligible(_req(rng, cfg, 99, "phi"))
+
+    cluster.run()
+    assert "phi-0" not in cluster.engines()        # reaped once empty
+    assert cluster.retire_engine("base").event == "retire"
+
+
+def test_retire_draining_twice_raises(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params))
+    rng = np.random.default_rng(7)
+    cluster.submit(_req(rng, cfg, 0, "phi"))       # keep it busy
+    cluster.retire_engine("a")
+    with pytest.raises(ValueError):
+        cluster.retire_engine("a")
+
+
+# ---------------------------------------------------------------------------
+# anti-flapping hysteresis
+# ---------------------------------------------------------------------------
+
+
+def test_no_flapping_under_oscillating_trace(fp32_model):
+    """A trace oscillating around the threshold must not churn engines:
+    sustain windows + cooldown bound the number of scale events."""
+    cfg, model, params = fp32_model
+
+    def run_trace(policy):
+        cluster = ServingCluster()
+        cluster.register("base", _mk(model, params))
+        scaler = Autoscaler(cluster, lambda label: _mk(model, params),
+                            policy=policy, tracker=LoadTracker(alpha=1.0))
+        rng = np.random.default_rng(8)
+        rid = 0
+        for t in range(10):
+            if t % 2 == 0:                          # hot tick
+                for _ in range(8):
+                    cluster.submit(_req(rng, cfg, rid, "phi", new=2))
+                    rid += 1
+            scaler.tick()
+            cluster.run()                           # cold by the next tick
+        return len(scaler.events)
+
+    eager = run_trace(ElasticPolicy(spawn_depth=3.0, sustain=1, cooldown=0,
+                                    default_bounds=(0, 2),
+                                    prefer_rebalance=False))
+    damped = run_trace(ElasticPolicy(spawn_depth=3.0, sustain=2, cooldown=3,
+                                     default_bounds=(0, 2),
+                                     prefer_rebalance=False))
+    assert eager >= 2                 # an undamped policy thrashes
+    assert damped == 0                # hysteresis rides out the oscillation
+
+
+# ---------------------------------------------------------------------------
+# report finalization + rebalance
+# ---------------------------------------------------------------------------
+
+
+def test_every_scale_event_report_finalized(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(spawn_depth=2.0, retire_rate=0.25, sustain=2,
+                             cooldown=1, prefer_rebalance=False),
+        tracker=LoadTracker(alpha=1.0))
+    rng = np.random.default_rng(9)
+    rid = 0
+    for t in range(4):                              # burst
+        for _ in range(6):
+            cluster.submit(_req(rng, cfg, rid, "phi", new=2))
+            rid += 1
+        scaler.tick()
+        cluster.step()
+    cluster.run()
+    for _ in range(4):                              # quiet tail -> retire
+        scaler.tick()
+        cluster.run()
+
+    kinds = {d.kind for d, _ in scaler.events}
+    assert "spawn" in kinds and "retire" in kinds
+    assert cluster.pending_reports() == []          # all finalized
+    for _, report in scaler.events:
+        assert set(report.metrics_after) == set(METRIC_KEYS)
+        if report.event == "spawn":                 # spawned capacity served
+            assert report.metrics_after["completed"] > 0
+
+
+def test_rebalance_retargets_idle_engine_instead_of_cold_spawn(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    cluster.spawn_engine("phi-0", _mk(model, params),
+                         labels={"data-type": "phi"})
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(spawn_depth=3.0, sustain=2, cooldown=2,
+                             prefer_rebalance=True),
+        tracker=LoadTracker(alpha=1.0))
+    rng = np.random.default_rng(10)
+    for rid in range(10):
+        cluster.submit(_req(rng, cfg, rid, "general"))
+
+    scaler.tick()
+    decisions = scaler.tick()
+    assert [d.kind for d in decisions] == ["rebalance"]
+    assert decisions[0].engine == "phi-0"
+    assert len(cluster.engines()) == 2              # resized, not spawned
+    assert cluster.engine("phi-0").labels["data-type"] == "general"
+    (_, report), = scaler.events
+    assert report.event == "rebalance"
+    # the retargeted engine immediately shares the general backlog
+    assert cluster.engine("phi-0").load > 0
+
+
+# ---------------------------------------------------------------------------
+# intent-pinned scaling bounds (Orchestrator.submit(apply_to=autoscaler))
+# ---------------------------------------------------------------------------
+
+
+def test_intent_pins_scaling_bounds_and_floor_spawns(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    scaler = Autoscaler(cluster, lambda label: _mk(model, params),
+                        tracker=LoadTracker(alpha=1.0))
+
+    orch = Orchestrator()
+    res = orch.submit("Keep at least two serving engines for phi traffic.",
+                      apply_to=scaler)
+    assert res.success
+    assert scaler.bounds["phi"] == (2, None)
+    assert orch.state.scale_bounds["phi"] == (2, None)
+
+    # the pinned floor is enforced on the next ticks, bypassing sustain
+    scaler.tick()
+    scaler.tick()
+    assert len(cluster.engines_for_label("phi")) >= 2
+    assert all(r.event == "spawn" and r.compiled_in_prepare > 0
+               for _, r in scaler.events)
+
+
+def test_intent_routing_plus_scaling_spawns_compliant_engines(fp32_model):
+    """A hybrid intent: pod confinement AND a capacity floor. Spawned
+    engines must satisfy the installed route constraint."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    scaler = Autoscaler(cluster, lambda label: _mk(model, params),
+                        tracker=LoadTracker(alpha=1.0))
+
+    orch = Orchestrator()
+    res = orch.submit("Phi traffic must remain inside the pod, and keep "
+                      "at least two engines for phi traffic.",
+                      apply_to=scaler)
+    assert res.success
+    assert "base" in res.reports                   # base was reconfigured
+    required = cluster.route_constraints()["phi"]
+
+    scaler.tick()
+    scaler.tick()
+    phi_engines = cluster.engines_for_label("phi")
+    assert len(phi_engines) >= 2
+    for name in phi_engines:
+        assert plan_satisfies(cluster.engine(name).plan, required)
+
+    # the scaled cluster still serves phi end-to-end
+    rng = np.random.default_rng(11)
+    for rid in range(4):
+        cluster.submit(_req(rng, cfg, rid, "phi"))
+    cluster.run()
+    assert cluster.metrics_by_label()["phi"]["completed"] == 4
+
+
+def test_invalid_scaling_intent_fails_closed(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    scaler = Autoscaler(cluster, lambda label: _mk(model, params))
+
+    orch = Orchestrator()
+    res = orch.submit("Keep at least two engines for financial records.",
+                      apply_to=scaler)
+    assert not res.success                          # unknown workload class
+    assert scaler.bounds == {}                      # nothing was pinned
+    assert len(cluster.engines()) == 1
+
+
+def test_set_bounds_validation(fp32_model):
+    cfg, model, params = fp32_model
+    scaler = Autoscaler(ServingCluster(), lambda label: None)
+    with pytest.raises(ValueError):
+        scaler.set_bounds("phi", -1)
+    with pytest.raises(ValueError):
+        scaler.set_bounds("phi", 3, 2)
+
+
+def test_scaling_bound_without_routing_label_fails_closed():
+    """A scaling selector that matches components carrying no data-type
+    label can never be enforced by the autoscaler — the compiler must
+    error (fail-closed), not silently drop the bound."""
+    from repro.core import Component, DeterministicInterpreter
+    from repro.core.compiler import compile_intent
+    from repro.core.labels import build_fabric
+    from repro.core.validator import validate
+
+    comps = (Component("doctor", {"app": "doctor"}),)   # no data-type
+    fabric = build_fabric((2, 16, 16), ("pod", "data", "model"))
+    res = DeterministicInterpreter().interpret(
+        "Keep at least two instances of the doctor app.", fabric, comps)
+    assert res.intent.scaling                          # parsed...
+    policy = compile_intent(res.intent, fabric, comps)
+    assert policy.scale_bounds == {}                   # ...but unenforceable
+    assert any("scaling selector" in e for e in policy.errors)
+    assert not validate(policy, fabric, comps).passed
+
+
+def test_capacity_clause_keeps_colocated_placement():
+    """A clause carrying both a capacity phrase and a placement predicate
+    must compile BOTH constraints — the capacity grammar must not swallow
+    the placement half."""
+    from repro.core import DEFAULT_WORKLOAD, DeterministicInterpreter
+    from repro.core.labels import build_fabric
+
+    fabric = build_fabric((2, 16, 16), ("pod", "data", "model"))
+    res = DeterministicInterpreter().interpret(
+        "Keep at least two patient instances in the cloud zone.",
+        fabric, DEFAULT_WORKLOAD)
+    assert len(res.intent.scaling) == 1
+    assert res.intent.scaling[0].min_engines == 2
+    assert len(res.intent.placement) == 1
+    assert dict(res.intent.placement[0].require) == {"zone": "cloud"}
+
+
+def test_retire_and_rebalance_never_target_same_engine(fp32_model):
+    """One tick can decide to retire a cold label's engine AND fix a hot
+    label — but never by handing the freshly-retiring engine out as a
+    rebalance donor (a draining engine is unroutable and unswappable)."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("a0", _mk(model, params), labels={"data-type": "a"})
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(retire_rate=0.25, sustain=1, cooldown=0,
+                             prefer_rebalance=True),
+        tracker=LoadTracker(alpha=1.0))
+    rng = np.random.default_rng(13)
+    # label "b" demand fails closed (no engine serves it) but still counts
+    for rid in range(4):
+        with pytest.raises(Exception):
+            cluster.submit(_req(rng, cfg, rid, "b"))
+
+    decisions = scaler.tick()
+    targeted = [d.engine for d in decisions if d.engine]
+    assert len(targeted) == len(set(targeted))     # no double-targeting
+    for d in decisions:
+        if d.kind == "rebalance":
+            assert d.engine not in cluster.draining()
+    # the draining-engine guard also holds at the cluster layer
+    if cluster.draining():
+        with pytest.raises(ValueError):
+            cluster.reconfigure(cluster.draining()[0],
+                                cluster.engine(cluster.draining()[0]).plan)
+
+
+def test_no_respawn_flapping_from_residual_ewma(fp32_model):
+    """After traffic stops and capacity fully retires, the geometrically
+    decaying EWMA (never exactly 0.0) must not read as 'hot' forever."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(sustain=1, cooldown=0),
+        tracker=LoadTracker(alpha=0.5))
+    rng = np.random.default_rng(14)
+    # demand for an unservable label; hold scaling off while it decays
+    scaler.set_bounds("phi", 0, 0)
+    for rid in range(4):
+        with pytest.raises(Exception):
+            cluster.submit(_req(rng, cfg, rid, "phi"))
+    for _ in range(10):
+        scaler.tick()                              # rate: 2.0 -> ~0.004
+    assert scaler.tracker.rate("phi") > 0.0        # residual, not zero
+    scaler.set_bounds("phi", 0, 4)                 # allow scaling again
+    for _ in range(3):
+        scaler.tick()
+    assert scaler.events == []                     # residual is not demand
+
+
+def test_floor_blocked_by_constraint_conflict_does_not_accumulate(fp32_model):
+    """If spawned engines can never satisfy the label's route constraint,
+    floor enforcement must stop instead of spawning forever."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    # constraint pins pod 1; the factory's engines are pinned to pod 0 —
+    # merge_restrictions degrades the conflict to axis confinement, which
+    # does NOT satisfy the pin, so spawns never become eligible
+    cluster.set_route_constraint("phi", ShardingPlan(
+        device_constraints=(("pod", 1),)))
+    factory = lambda label: _mk(  # noqa: E731
+        model, params, plan=ShardingPlan(device_constraints=(("pod", 0),)))
+    scaler = Autoscaler(cluster, factory, tracker=LoadTracker(alpha=1.0))
+    scaler.set_bounds("phi", 2)
+
+    for _ in range(4):
+        scaler.tick()
+    assert len(cluster.engines_for_label("phi")) == 0   # still ineligible
+    assert len(cluster.engines()) <= 2                  # bounded by floor
+
+
+def test_overlapping_scaling_constraints_intersect(fp32_model):
+    """Two clauses landing on the same data-type label intersect their
+    bounds; an empty intersection fails closed."""
+    from repro.core import DEFAULT_WORKLOAD, DeterministicInterpreter
+    from repro.core.compiler import compile_intent
+    from repro.core.labels import build_fabric
+
+    fabric = build_fabric((2, 16, 16), ("pod", "data", "model"))
+    it = DeterministicInterpreter()
+    # patient app carries data-type=phi -> both clauses hit "phi"
+    res = it.interpret("Keep at least two engines for phi traffic, and "
+                       "at most three instances of the patient service.",
+                       fabric, DEFAULT_WORKLOAD)
+    policy = compile_intent(res.intent, fabric, DEFAULT_WORKLOAD)
+    assert policy.scale_bounds["phi"] == (2, 3)
+    assert policy.errors == []
+
+    res2 = it.interpret("Keep at least two engines for phi traffic, and "
+                        "at most one instance of the patient service.",
+                        fabric, DEFAULT_WORKLOAD)
+    policy2 = compile_intent(res2.intent, fabric, DEFAULT_WORKLOAD)
+    assert any("conflicting scaling bounds" in e for e in policy2.errors)
+
+
+def test_number_words_need_word_boundary():
+    """'fourteen' must not parse as 'four'; unknown number words yield no
+    constraint rather than a wrong one. Digits always work."""
+    from repro.core import DEFAULT_WORKLOAD, DeterministicInterpreter
+    from repro.core.labels import build_fabric
+
+    fabric = build_fabric((2, 16, 16), ("pod", "data", "model"))
+    it = DeterministicInterpreter()
+    res = it.interpret("Keep at least fourteen engines for phi traffic.",
+                       fabric, DEFAULT_WORKLOAD)
+    assert res.intent.scaling == ()                # not min_engines=4
+    res2 = it.interpret("Keep at least 14 engines for phi traffic.",
+                        fabric, DEFAULT_WORKLOAD)
+    assert res2.intent.scaling[0].min_engines == 14
+
+
+def test_donor_with_conflicting_pins_is_not_rebalanced(fp32_model):
+    """A donor whose device pins conflict with the hot label's route
+    constraint would come out of the swap unroutable — the policy must
+    spawn instead of bricking it."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    # idle donor dedicated to cold label "a", pinned to pod 0
+    cluster.register("a0", _mk(model, params, plan=ShardingPlan(
+        device_constraints=(("pod", 0),))), labels={"data-type": "a"})
+    # hot label "phi" requires pod 1 — conflicts with the donor's pin
+    cluster.set_route_constraint("phi", ShardingPlan(
+        device_constraints=(("pod", 1),)))
+    scaler = Autoscaler(
+        cluster,
+        lambda label: _mk(model, params, plan=ShardingPlan(
+            device_constraints=(("pod", 1),))),
+        policy=ElasticPolicy(sustain=1, cooldown=0, prefer_rebalance=True),
+        tracker=LoadTracker(alpha=1.0))
+    rng = np.random.default_rng(15)
+    for rid in range(4):                           # phi demand, fails closed
+        with pytest.raises(Exception):
+            cluster.submit(_req(rng, cfg, rid, "phi"))
+
+    decisions = scaler.tick()
+    # the hot label is fixed by a SPAWN; the conflicting donor is never
+    # rebalanced (retiring it as idle cold surplus is fine)
+    assert all(d.kind != "rebalance" for d in decisions)
+    assert any(d.kind == "spawn" and d.label == "phi" for d in decisions)
+    assert len(cluster.engines_for_label("phi")) == 1        # spawn works
+
+
+def test_floor_enforced_despite_preexisting_ineligible_engine(fp32_model):
+    """A pre-existing dedicated-but-ineligible engine must not count
+    against the floor: eligible capacity is what the bound promises."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.set_route_constraint("phi", ShardingPlan(
+        device_constraints=(("pod", 1),)))
+    # dedicated to phi but pinned to the wrong pod -> never eligible
+    cluster.register("stale", _mk(model, params, plan=ShardingPlan(
+        device_constraints=(("pod", 0),))), labels={"data-type": "phi"})
+    scaler = Autoscaler(cluster, lambda label: _mk(model, params),
+                        tracker=LoadTracker(alpha=1.0))
+    scaler.set_bounds("phi", 2)
+
+    for _ in range(4):
+        scaler.tick()
+    # the floor fills with ELIGIBLE engines despite the stale one, and
+    # enforcement then stops (no unbounded accumulation)
+    assert len(cluster.engines_for_label("phi")) == 2
+    assert len(cluster.engines()) == 3             # stale + 2 spawned
+
+
+def test_orphaned_capacity_clause_recovered_from_full_sentence():
+    """Clause splitting can orphan the capacity phrase from its subject;
+    the whole-sentence fallback must recover scaling too."""
+    from repro.core import DEFAULT_WORKLOAD, DeterministicInterpreter
+    from repro.core.labels import build_fabric
+
+    fabric = build_fabric((2, 16, 16), ("pod", "data", "model"))
+    res = DeterministicInterpreter().interpret(
+        "For the phi workloads. Provision at least two engines.",
+        fabric, DEFAULT_WORKLOAD)
+    assert len(res.intent.scaling) == 1
+    assert res.intent.scaling[0].min_engines == 2
+
+
+def test_spawn_names_skip_existing_engines(fp32_model):
+    """A scaler must not crash when its generated name is already taken
+    (previous scaler instance, manual registration)."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("phi-as0", _mk(model, params),
+                     labels={"data-type": "phi"})
+    scaler = Autoscaler(cluster, lambda label: _mk(model, params),
+                        tracker=LoadTracker(alpha=1.0))
+    scaler.set_bounds("phi", 2)
+    scaler.tick()
+    assert len(cluster.engines_for_label("phi")) == 2
+    assert "phi-as1" in cluster.engines()          # collision skipped
+
+
+def test_redistributed_requests_feed_aot_length_set(fp32_model):
+    """Requests that reach an engine via redistribute_queued must still
+    register their prompt length, so a later default-lengths reconfigure
+    AOT-compiles them instead of JITting on the serving path."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    rng = np.random.default_rng(16)
+    for rid in range(4):
+        cluster.submit(_req(rng, cfg, rid, "phi", n=9))
+
+    spawned = _mk(model, params)
+    cluster.spawn_engine("phi-1", spawned, labels={"data-type": "phi"},
+                         prefill_lengths=(9,))
+    assert spawned.queue                           # took backlog
+    assert 9 in spawned.seen_prompt_lengths        # length registered
+    # a default-lengths reconfigure therefore covers the live shape
+    report = cluster.reconfigure("phi-1", spawned.plan)
+    assert 9 in spawned._prefill_exec
+    assert report.compiled_in_prepare >= 2
+
+
+def test_retire_paused_engine_still_drains(fp32_model):
+    """Retiring a paused engine must resume it so the drain can finish —
+    otherwise its queued requests would be stranded forever."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params))
+    rng = np.random.default_rng(12)
+    eng = cluster.engine("a")
+    eng.submit(_req(rng, cfg, 0, "phi"))
+    eng.pause()
+
+    cluster.retire_engine("a")
+    assert not eng.paused                          # resumed to drain
+    cluster.run()
+    assert "a" not in cluster.engines()            # reaped once empty
+    assert cluster.metrics()["completed"] == 1     # nothing stranded
