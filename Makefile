@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: test ci example bench-reconfig bench-elastic docs
+.PHONY: test ci example bench-reconfig bench-elastic bench-migration \
+        bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -13,6 +14,12 @@ bench-reconfig:
 
 bench-elastic:
 	PYTHONPATH=src:. $(PY) benchmarks/elastic_scaling.py
+
+bench-migration:
+	PYTHONPATH=src:. $(PY) benchmarks/live_migration.py
+
+bench-json:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic
 
 docs:
 	$(PY) scripts/run_doc_examples.py

@@ -128,7 +128,8 @@ def bench_elastic_scaling(arch: str = "minitron_4b", ticks: int = 20,
          "worst blocking swap window (paper target <0.05)")
     emit("elastic_retire_downtime_s_max",
          round(max(r.downtime_s for _, r in retires), 4),
-         "retirement drains, never blocks (always 0)")
+         "drain-mode retires never block (0); migrate-mode pays the "
+         "relocation window (see live_migration.py)")
     for label in ("general", "phi"):
         m = by_label[label]
         emit(f"elastic_{label}_completed", int(m["completed"]))

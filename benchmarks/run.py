@@ -10,21 +10,67 @@ artifact (see DESIGN.md §7 for the index):
   failmode_*          — §6.3 failure-mode detection rates
   reconfig_*          — downtime / TTFT / TPOT around an online plan swap
                         (calibration-band metrics)
+  migration_*         — live in-flight request migration (migrate-mode
+                        retirement: per-request pause + stream identity)
+  elastic_*           — autoscaled spawn/retire trajectory over a bursty
+                        two-label trace
   roofline summary    — printed per (arch x shape) from the dry-run records
+
+Machine-readable artifacts: the serving benchmarks also write
+``benchmarks/BENCH_reconfig.json`` (reconfigure + migration) and
+``benchmarks/BENCH_elastic.json`` (autoscaling trajectory), so the perf
+trajectory is tracked across PRs. CI produces them via
+
+    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic
+
+(``--only`` substring-matches bench function names; no flag runs all.)
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
+import math
 import time
 from pathlib import Path
 
 ROWS = []
+ARTIFACTS = {}          # bench key -> JSON-able dict (see _write_artifacts)
+ART_DIR = Path(__file__).resolve().parent
 
 
 def emit(name: str, value, derived: str = "") -> None:
     ROWS.append((name, value, derived))
     print(f"{name},{value},{derived}")
+
+
+def _jsonable(x):
+    """Recursively convert to strict-JSON values (NaN/inf -> None)."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, float) and not math.isfinite(x):
+        return None
+    if hasattr(x, "item"):               # numpy scalar
+        return _jsonable(x.item())
+    return x
+
+
+def _write_artifacts() -> None:
+    """Write BENCH_reconfig.json / BENCH_elastic.json from whatever
+    serving benchmarks ran (partial runs write partial artifacts)."""
+    reconfig = {k: ARTIFACTS[k] for k in ("reconfigure", "migration")
+                if k in ARTIFACTS}
+    if reconfig:
+        path = ART_DIR / "BENCH_reconfig.json"
+        path.write_text(json.dumps(_jsonable(reconfig), indent=2) + "\n")
+        emit("_artifact_reconfig_json", str(path))
+    if "elastic" in ARTIFACTS:
+        path = ART_DIR / "BENCH_elastic.json"
+        path.write_text(
+            json.dumps(_jsonable(ARTIFACTS["elastic"]), indent=2) + "\n")
+        emit("_artifact_elastic_json", str(path))
 
 
 # ---------------------------------------------------------------------------
@@ -103,7 +149,62 @@ def bench_reconfig_serving() -> None:
         from benchmarks.reconfig_serving import bench_reconfig_cluster
     except ImportError:   # invoked as `python benchmarks/run.py`
         from reconfig_serving import bench_reconfig_cluster
-    bench_reconfig_cluster(emit=emit)
+    out = bench_reconfig_cluster(emit=emit)
+    rep, before, after = out["report"], out["before"], out["after"]
+    ARTIFACTS["reconfigure"] = {
+        "prepare_s": rep.prepare_s,
+        "downtime_s": rep.downtime_s,
+        "migrate_bytes": rep.migrate_bytes,
+        "aot_executables": rep.compiled_in_prepare,
+        "ttft_before_s": before["ttft_mean_s"],
+        "ttft_after_s": after["ttft_mean_s"],
+        "tpot_before_s": before["tpot_mean_s"],
+        "tpot_after_s": after["tpot_mean_s"],
+        "overhead_pct": 100.0 * max(
+            after["ttft_mean_s"] / before["ttft_mean_s"] - 1.0,
+            after["tpot_mean_s"] / before["tpot_mean_s"] - 1.0),
+    }
+
+
+def bench_live_migration() -> None:
+    """Live in-flight request migration: migrate-mode retirement must keep
+    token streams bitwise identical and every per-request pause under the
+    (CPU-scaled) 50 ms budget."""
+    try:
+        from benchmarks.live_migration import bench_live_migration as bench
+    except ImportError:
+        from live_migration import bench_live_migration as bench
+    ARTIFACTS["migration"] = bench(emit=emit)
+
+
+def bench_elastic_scaling() -> None:
+    """Autoscaled spawn/retire trajectory over a bursty two-label trace
+    (downtime + TTFT/TPOT per label + engine-count trajectory)."""
+    try:
+        from benchmarks.elastic_scaling import bench_elastic_scaling as bench
+    except ImportError:
+        from elastic_scaling import bench_elastic_scaling as bench
+    out = bench(emit=emit)
+    scaler, cluster = out["scaler"], out["cluster"]
+    events = [(d.kind, d.label, d.mode, r.downtime_s, r.prepare_s)
+              for d, r in scaler.events]
+    ARTIFACTS["elastic"] = {
+        "spawns": sum(1 for e in events if e[0] == "spawn"),
+        "retires": sum(1 for e in events if e[0] == "retire"),
+        "rebalances": sum(1 for e in events if e[0] == "rebalance"),
+        "peak_engines": max(out["trajectory"]),
+        "final_engines": out["trajectory"][-1],
+        "downtime_s_max": max((e[3] for e in events), default=0.0),
+        "trajectory": out["trajectory"],
+        "per_label": {
+            label: {"completed": m["completed"],
+                    "ttft_mean_s": m["ttft_mean_s"],
+                    "tpot_mean_s": m["tpot_mean_s"]}
+            for label, m in out["by_label"].items()},
+        "events": [{"kind": k, "label": lb, "mode": md,
+                    "downtime_s": d, "prepare_s": p}
+                   for k, lb, md, d, p in events],
+    }
 
 
 def bench_roofline_table() -> None:
@@ -153,17 +254,28 @@ BENCHES = [
     bench_fig11_complexity,
     bench_failure_modes,
     bench_reconfig_serving,
+    bench_live_migration,
+    bench_elastic_scaling,
     bench_kernel_latency,
     bench_roofline_table,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", nargs="*", default=None, metavar="SUBSTR",
+                    help="run only benches whose function name contains "
+                         "any of these substrings (e.g. reconfig elastic)")
+    args = ap.parse_args(argv)
+    benches = BENCHES if not args.only else [
+        b for b in BENCHES
+        if any(s in b.__name__ for s in args.only)]
     print("name,value,derived")
-    for b in BENCHES:
+    for b in benches:
         t0 = time.time()
         b()
         emit(f"_bench_{b.__name__}_wall_s", round(time.time() - t0, 2))
+    _write_artifacts()
 
 
 if __name__ == "__main__":

@@ -13,4 +13,7 @@ PYTHONPATH=src python examples/serve_intents.py
 echo "== docs: execute the embedded examples (they must not rot) =="
 python scripts/run_doc_examples.py
 
+echo "== serving benchmarks: perf-trajectory artifacts (BENCH_*.json) =="
+PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic
+
 echo "CI OK"

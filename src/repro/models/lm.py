@@ -368,12 +368,26 @@ def prefill(
     *,
     use_kernel: bool = False,
 ) -> Tuple[jax.Array, PyTree]:
-    """Returns (last-token logits (B, V), populated cache)."""
+    """Returns (last-token logits (B, V), populated cache).
+
+    ``batch`` may carry ``true_len`` (scalar int32): the prompt is then
+    treated as right-padded to the token buffer's length and the logits
+    are read at position ``true_len - 1`` instead of the last position.
+    With causal attention the positions below ``true_len`` never see the
+    padding, so a padded-bucket prefill is bit-for-bit equivalent at the
+    read position — this is what lets serving engines compile a few
+    bucket shapes instead of one executable per prompt length.
+    """
     tokens = batch["tokens"]
     hidden, cache, _ = forward(
         cfg, params, tokens, mode="prefill",
         positions=batch.get("positions"), remat=False, use_kernel=use_kernel)
-    logits = logits_fn(cfg, params, hidden[:, -1:, :])[:, 0, :]
+    true_len = batch.get("true_len")
+    if true_len is None:
+        last = hidden[:, -1:, :]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1, axis=1)
+    logits = logits_fn(cfg, params, last)[:, 0, :]
     return logits, cache
 
 

@@ -16,3 +16,8 @@ from repro.serving.engine import (  # noqa: F401
     ServingEngine,
     compute_metrics,
 )
+from repro.serving.migration import (  # noqa: F401
+    MigrationError,
+    MigrationRecord,
+    SlotSnapshot,
+)

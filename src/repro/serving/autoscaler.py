@@ -58,12 +58,16 @@ class ScaleDecision:
         engine: target engine name (the engine to retire or retarget;
             empty for a spawn — the `Autoscaler` names spawned engines).
         reason: human-readable justification (telemetry / benchmark CSV).
+        mode: retirement mode — ``"drain"`` (serve out the queue first)
+            or ``"migrate"`` (live-migrate in-flight work to peers and
+            reap immediately). Ignored for spawn/rebalance.
     """
 
     kind: str
     label: str
     engine: str = ""
     reason: str = ""
+    mode: str = "drain"
 
 
 class LoadTracker:
@@ -151,7 +155,12 @@ class ElasticPolicy:
       * cold — EWMA rate <= ``retire_rate`` and depth <= ``retire_depth``
         — for ``sustain`` ticks, and above ``min``: retire one engine
         DEDICATED to the label (never a shared engine) whose load is
-        already zero — retirement strictly follows drain;
+        already zero — retirement strictly follows drain. With
+        ``prefer_migrate`` and no drained candidate, a dedicated engine
+        whose in-flight work FITS its peers' free slots is retired in
+        ``"migrate"`` mode instead: its requests are live-migrated and
+        the engine reaps immediately, bounding scale-down latency by the
+        per-request migration pause rather than the longest decode;
       * after any action on a label (including the donor of a rebalance):
         no further action on it for ``cooldown`` ticks.
 
@@ -162,7 +171,8 @@ class ElasticPolicy:
     def __init__(self, *, spawn_depth: float = 4.0, retire_rate: float = 0.25,
                  retire_depth: float = 0.5, sustain: int = 2,
                  cooldown: int = 3, default_bounds: Bounds = (0, 4),
-                 prefer_rebalance: bool = True):
+                 prefer_rebalance: bool = True,
+                 prefer_migrate: bool = False):
         self.spawn_depth = spawn_depth
         self.retire_rate = retire_rate
         self.retire_depth = retire_depth
@@ -170,6 +180,9 @@ class ElasticPolicy:
         self.cooldown = cooldown
         self.default_bounds = default_bounds
         self.prefer_rebalance = prefer_rebalance
+        # opt-in fast scale-down (live migration); the default preserves
+        # strict retire-follows-drain semantics
+        self.prefer_migrate = prefer_migrate
         self._hot: Dict[str, int] = {}       # label -> consecutive hot ticks
         self._cold: Dict[str, int] = {}      # label -> consecutive cold ticks
         self._cooldown: Dict[str, int] = {}  # label -> ticks remaining
@@ -193,6 +206,30 @@ class ElasticPolicy:
                     and eng.load == 0):
                 out.append(name)
         return out
+
+    def _dedicated_migratable(self, cluster: ServingCluster, label: str,
+                              claimed: set) -> Optional[str]:
+        """The least-loaded engine dedicated to ``label`` whose in-flight
+        work fits into its peers' free decode slots — a migrate-mode
+        retirement can relocate everything and reap it immediately.
+        ``None`` when no peer exists or capacity doesn't fit (fall back
+        to waiting for a drain)."""
+        names = cluster.engines_for_label(label)
+        dedicated = [
+            n for n in names
+            if n not in claimed
+            and cluster.engine(n).labels.get(cluster.ROUTE_KEY) == label]
+        for name in sorted(dedicated, key=lambda n: cluster.engine(n).load):
+            eng = cluster.engine(name)
+            resident = sum(r is not None for r in eng.slot_req)
+            # only RUNNING peers count: the relocation refuses to strand
+            # a decoding request on a paused engine
+            peers = [p for p in names if p != name and p not in claimed
+                     and not cluster.engine(p).paused]
+            peers_free = sum(cluster.engine(p).free_slots for p in peers)
+            if peers and peers_free >= resident:
+                return name
+        return None
 
     def _dedicated_total(self, cluster: ServingCluster, label: str) -> int:
         """Engines dedicated to ``label`` regardless of routing
@@ -319,6 +356,18 @@ class ElasticPolicy:
                     claimed.add(idle[0])
                     self._cooldown[label] = self.cooldown
                     self._cold[label] = 0
+                elif self.prefer_migrate:
+                    cand = self._dedicated_migratable(cluster, label,
+                                                      claimed)
+                    if cand is not None:   # relocate-and-reap immediately
+                        decisions.append(ScaleDecision(
+                            "retire", label, engine=cand, mode="migrate",
+                            reason=f"cold for {self._cold[label]} ticks; "
+                                   "peers have free slots — migrate "
+                                   "in-flight work instead of draining"))
+                        claimed.add(cand)
+                        self._cooldown[label] = self.cooldown
+                        self._cold[label] = 0
         return decisions
 
 
@@ -413,7 +462,7 @@ class Autoscaler:
                 labels={self.cluster.ROUTE_KEY: d.label},
                 prefill_lengths=self.cluster.label_prompt_lengths(d.label))
         elif d.kind == "retire":
-            report = self.cluster.retire_engine(d.engine)
+            report = self.cluster.retire_engine(d.engine, mode=d.mode)
         elif d.kind == "rebalance":
             base = self.cluster.engine(d.engine).plan
             report = self.cluster.rebalance(

@@ -51,6 +51,12 @@ from repro.serving.engine import (
     ServingEngine,
     compute_metrics,
 )
+from repro.serving.migration import (
+    MigrationError,
+    MigrationRecord,
+    migrate_one,
+    needed_capacity,
+)
 from repro.sharding.plan import (
     ShardingPlan,
     merge_restrictions,
@@ -72,9 +78,13 @@ class DowntimeReport:
 
     Attributes:
         prepare_s: background compile time; serving continues throughout.
-        downtime_s: the blocking window (drain + migrate + install). Zero
-            for retirements — draining never blocks other engines.
-        migrate_bytes: bytes of params + KV pool moved in the swap window.
+        downtime_s: the blocking window. For a reconfigure/rebalance:
+            drain + migrate + install. For a retirement the HONEST
+            blocking cost: 0 for drain-mode (draining never blocks other
+            engines), the measured relocation window for migrate-mode.
+        migrate_bytes: bytes moved in the blocking window — params + KV
+            pool for a swap, the migrated requests' KV state for a
+            migrate-mode retirement.
         metrics_before: `compute_metrics` over the traffic window since the
             engine's previous scale event (empty-window NaNs for a spawn).
         metrics_after: `compute_metrics` over traffic served *after* the
@@ -84,6 +94,9 @@ class DowntimeReport:
         engine: name of the affected engine.
         compiled_in_prepare: executables AOT-compiled ahead of the swap.
         event: "reconfigure" | "spawn" | "retire" | "rebalance".
+        migrations: per-request `MigrationRecord`s for migrate-mode
+            retirements / explicit `migrate_requests` events — each
+            carries the request's own pause (the paper's <50 ms budget).
     """
 
     prepare_s: float          # background compile time (serving continues)
@@ -94,13 +107,18 @@ class DowntimeReport:
     engine: str = ""
     compiled_in_prepare: int = 0   # executables AOT-compiled ahead of swap
     event: str = "reconfigure"
+    migrations: Tuple[MigrationRecord, ...] = ()
 
     def summary(self) -> str:
         """One-line human-readable digest of the event cost."""
-        return (f"engine={self.engine or '?'} event={self.event} "
-                f"prepare={self.prepare_s:.3f}s (aot x{self.compiled_in_prepare}) "
-                f"downtime={self.downtime_s*1e3:.1f}ms "
-                f"migrated={self.migrate_bytes/2**20:.1f}MiB")
+        s = (f"engine={self.engine or '?'} event={self.event} "
+             f"prepare={self.prepare_s:.3f}s (aot x{self.compiled_in_prepare}) "
+             f"downtime={self.downtime_s*1e3:.1f}ms "
+             f"migrated={self.migrate_bytes/2**20:.1f}MiB")
+        if self.migrations:
+            s += (f" moved={len(self.migrations)}req "
+                  f"pause_max={max(m.pause_s for m in self.migrations)*1e3:.1f}ms")
+        return s
 
 
 @dataclasses.dataclass
@@ -110,6 +128,10 @@ class _EngineEntry:
     pending_report: Optional[DowntimeReport] = None
     swap_t: float = 0.0
     draining: bool = False    # retiring: serves out its queue, gets no new work
+    # compiled-HLO validation failed after registration (e.g. a constraint
+    # was installed later): the engine is unroutable until a reconfigure
+    # passes verification — fail-closed beats serving on a disproven claim
+    quarantined: bool = False
 
     # plan and labels read the live engine — one source of truth, so
     # updates after registration are visible to the router
@@ -177,7 +199,8 @@ class ServingCluster:
     # ------------------------------------------------------------------
     def register(self, name: str, engine: ServingEngine, *,
                  plan: Optional[ShardingPlan] = None,
-                 labels: Optional[Dict[str, str]] = None) -> None:
+                 labels: Optional[Dict[str, str]] = None,
+                 verify_hlo: bool = True) -> None:
         """Add an engine to the routing pool (no AOT warm-up — see
         `spawn_engine` for the elastic path that never JITs while serving).
 
@@ -187,9 +210,17 @@ class ServingCluster:
             plan: if given, installed as ``engine.plan`` (routing reads the
                 live engine, so this is the plan the router checks).
             labels: merged into ``engine.labels`` (tenancy restriction).
+            verify_hlo: check the engine's *compiled HLO* against any
+                already-installed route constraint it would serve under
+                (see `verify_engine_hlo`) — the declared plan alone is a
+                claim; the compiled artifact is the proof. Skipped
+                automatically when no constraint applies (the common
+                register-then-constrain order pays nothing).
 
         Raises:
-            ValueError: if ``name`` is already registered.
+            ValueError: if ``name`` is already registered, or (fail-closed)
+                the compiled HLO violates an applicable route constraint —
+                the engine is NOT registered in that case.
         """
         if name in self._entries:
             raise ValueError(f"engine {name!r} already registered")
@@ -198,6 +229,65 @@ class ServingCluster:
         if labels:
             engine.labels.update(labels)
         self._entries[name] = _EngineEntry(name, engine)
+        if verify_hlo:
+            try:
+                self.verify_engine_hlo(name)
+            except ValueError:
+                del self._entries[name]
+                raise
+
+    def verify_engine_hlo(self, name: str, *, hlo_text: Optional[str] = None,
+                          mesh_shape: Optional[Sequence[int]] = None,
+                          axis_names: Optional[Sequence[str]] = None,
+                          ) -> Optional[str]:
+        """Validate an engine's COMPILED decode HLO against the forbidden
+        collective axes of every route constraint it could serve under
+        (the paper's post-deployment compliance check, applied at
+        registration: a plan's restriction fields are a declaration — the
+        compiled module's collectives are the artifact-level proof).
+
+        Only constraints whose label the engine serves AND whose plan the
+        engine claims to satisfy are checked (a non-eligible engine never
+        receives that traffic — the router already fails closed).
+
+        Args:
+            name: the registered engine to check.
+            hlo_text: override the HLO module text (defaults to the
+                engine's `decode_hlo_text`, i.e. the installed/compiled
+                decode executable).
+            mesh_shape / axis_names: topology to attribute collective
+                replica groups to mesh axes (defaults to the cluster
+                mesh).
+
+        Returns:
+            The check detail string, or ``None`` when no constraint
+            applied (nothing to prove).
+
+        Raises:
+            KeyError: ``name`` is not registered.
+            ValueError: fail-closed — a collective in the compiled module
+                crosses a forbidden axis.
+        """
+        from repro.core.validator import check_hlo_axes   # local: no cycle
+        entry = self._entries[name]
+        axes: set = set()
+        for value, required in self._routes.items():
+            if entry.serves({self.ROUTE_KEY: value}) \
+                    and plan_satisfies(entry.plan, required):
+                axes |= set(required.forbidden_collective_axes)
+        if not axes:
+            return None
+        text = hlo_text if hlo_text is not None \
+            else entry.engine.decode_hlo_text()
+        ok, msg = check_hlo_axes(
+            text, sorted(axes),
+            tuple(mesh_shape) if mesh_shape else self.mesh.devices.shape,
+            tuple(axis_names) if axis_names else self.mesh.axis_names)
+        if not ok:
+            raise ValueError(
+                f"engine {name!r} failed compiled-HLO validation against "
+                f"route constraints (fail-closed): {msg}")
+        return msg
 
     def engine(self, name: str) -> ServingEngine:
         """Return the registered engine ``name``.
@@ -221,10 +311,38 @@ class ServingCluster:
         return dict(self._routes)
 
     def set_route_constraint(self, value: str,
-                             required: ShardingPlan) -> None:
+                             required: ShardingPlan, *,
+                             verify_hlo: bool = True) -> None:
         """Require that requests labeled ``data-type=value`` be served only
-        by engines whose plan satisfies `required` (see `plan_satisfies`)."""
+        by engines whose plan satisfies `required` (see `plan_satisfies`).
+
+        The register-then-constrain order is as fail-closed as the
+        reverse: installing a constraint re-validates the compiled HLO of
+        every registered engine that would serve it and claims to satisfy
+        it. An engine whose compiled artifact disproves its declared plan
+        is QUARANTINED (unroutable until a reconfigure passes
+        verification) and a ValueError is raised — the constraint stays
+        installed either way.
+
+        Raises:
+            ValueError: an engine failed compiled-HLO validation (it has
+                been quarantined; other engines were still checked).
+        """
         self._routes[value] = required
+        if not (verify_hlo and required.forbidden_collective_axes):
+            return
+        errors = []
+        for e in list(self._entries.values()):
+            if e.quarantined or not e.serves({self.ROUTE_KEY: value}) \
+                    or not plan_satisfies(e.plan, required):
+                continue
+            try:
+                self.verify_engine_hlo(e.name)
+            except ValueError as err:
+                e.quarantined = True
+                errors.append(str(err))
+        if errors:
+            raise ValueError("; ".join(errors))
 
     # ------------------------------------------------------------------
     # routing (fail-closed)
@@ -232,9 +350,10 @@ class ServingCluster:
     def _entry_eligible(self, e: _EngineEntry, labels: Dict[str, str],
                         required: Optional[ShardingPlan]) -> bool:
         """THE routing-eligibility predicate (one copy, shared by request
-        routing and the autoscaler's capacity view): not draining, tenancy
-        labels don't contradict, plan satisfies the route constraint."""
-        return (not e.draining and e.serves(labels)
+        routing, migration, and the autoscaler's capacity view): not
+        draining, not HLO-quarantined, tenancy labels don't contradict,
+        plan satisfies the route constraint."""
+        return (not e.draining and not e.quarantined and e.serves(labels)
                 and (required is None or plan_satisfies(e.plan, required)))
 
     def eligible(self, req: Request) -> List[str]:
@@ -411,6 +530,7 @@ class ServingCluster:
     def reconfigure(self, name: str, plan: ShardingPlan, *,
                     shardings: Optional[Dict[str, Any]] = None,
                     prefill_lengths: Sequence[int] = (),
+                    prefill_buckets: bool = False,
                     ) -> DowntimeReport:
         """Swap a live engine onto ``plan`` (PREPARE / SWAP / RESUME).
 
@@ -421,6 +541,9 @@ class ServingCluster:
                 plan via `plan_to_shardings` when omitted.
             prefill_lengths: prompt lengths to AOT-compile; defaults to the
                 engine's recently seen lengths.
+            prefill_buckets: also AOT-compile the padded-bucket prefill
+                ladder so prompt lengths never seen before avoid the JIT
+                fallback too (see `ServingEngine.aot_executables`).
 
         Returns:
             The (auto-finalizing) `DowntimeReport` for this swap.
@@ -450,7 +573,8 @@ class ServingCluster:
             shardings = plan_to_shardings(
                 eng.model.cfg, plan, self.mesh, n_slots=eng.n_slots)
         executables, n_compiled = eng.aot_executables(
-            shardings, prefill_lengths=prefill_lengths)
+            shardings, prefill_lengths=prefill_lengths,
+            prefill_buckets=prefill_buckets)
         prepare_s = time.time() - t0
 
         # ---- 2. SWAP (blocking window — no compilation here) ----
@@ -478,6 +602,18 @@ class ServingCluster:
         entry.pending_report = report
         entry.swap_t = time.time()
         self.history.append(report)
+
+        # the freshly installed executable must prove whatever route
+        # constraints the new plan claims (clears a quarantine on pass;
+        # quarantines on failure — fail-closed, the plan stays installed
+        # but the router skips the engine). The report above is recorded
+        # either way: the blocking window was really paid.
+        try:
+            self.verify_engine_hlo(name)
+        except ValueError:
+            entry.quarantined = True
+            raise
+        entry.quarantined = False
         return report
 
     # ------------------------------------------------------------------
@@ -487,6 +623,7 @@ class ServingCluster:
                      plan: Optional[ShardingPlan] = None,
                      labels: Optional[Dict[str, str]] = None,
                      prefill_lengths: Sequence[int] = (),
+                     prefill_buckets: bool = False,
                      ) -> DowntimeReport:
         """Bring a NEW engine online through the PREPARE-phase AOT path.
 
@@ -505,6 +642,8 @@ class ServingCluster:
                 one ``data-type``).
             prefill_lengths: prompt lengths to AOT-compile (typically
                 `label_prompt_lengths` of the label being scaled).
+            prefill_buckets: also AOT-compile the padded-bucket prefill
+                ladder (unseen lengths never JIT either).
 
         Returns:
             A `DowntimeReport` with ``event="spawn"`` (``metrics_before``
@@ -512,7 +651,10 @@ class ServingCluster:
             engine serves traffic).
 
         Raises:
-            ValueError: if ``name`` is already registered.
+            ValueError: if ``name`` is already registered, or (fail-closed)
+                the AOT-compiled decode HLO violates an applicable route
+                constraint (`verify_engine_hlo` — the spawn is rolled
+                back).
         """
         if name in self._entries:
             raise ValueError(f"engine {name!r} already registered")
@@ -526,7 +668,8 @@ class ServingCluster:
         shardings = plan_to_shardings(
             engine.model.cfg, engine.plan, self.mesh, n_slots=engine.n_slots)
         executables, n_compiled = engine.aot_executables(
-            shardings, prefill_lengths=prefill_lengths)
+            shardings, prefill_lengths=prefill_lengths,
+            prefill_buckets=prefill_buckets)
         prepare_s = time.time() - t0
 
         # ---- install + join the routing pool ----
@@ -539,6 +682,13 @@ class ServingCluster:
             engine.resume()
         entry = _EngineEntry(name, engine)
         self._entries[name] = entry
+        try:
+            # the compiled artifact (already in hand from PREPARE) must
+            # prove the route constraints its plan claims to satisfy
+            self.verify_engine_hlo(name)
+        except ValueError:
+            del self._entries[name]
+            raise
         downtime_s = time.time() - t0
 
         report = DowntimeReport(
@@ -558,16 +708,174 @@ class ServingCluster:
                 self.redistribute_queued(value)
         return report
 
-    def retire_engine(self, name: str) -> DowntimeReport:
-        """Begin graceful retirement: the engine stops receiving new
-        requests immediately (the router skips draining engines), serves
-        out its queue and resident slots, and is deregistered by the next
-        `step()`/`run()` that finds it empty. Its completions are retained
-        for cluster-level metrics.
+    def migrate_requests(self, src: str, dst: str,
+                         rids: Optional[Sequence[int]] = None
+                         ) -> List[MigrationRecord]:
+        """Live-migrate in-flight requests from ``src`` to ``dst``:
+        export each request's per-slot state (KV slices, decode position,
+        generated tokens, metric stamps), reshard it onto the
+        destination pool's layout, and resume decode there — no
+        recompilation, no re-run of prefill, token streams bitwise
+        identical to an unmigrated run.
 
-        Retirement never blocks other engines: ``downtime_s`` is 0. A
-        paused engine is resumed so it can actually drain — a retiring
-        engine that never steps would strand its queued requests forever.
+        Fail-closed, and ATOMIC with respect to validation: every request
+        is pre-flighted — destination eligibility (the same predicate the
+        router uses: tenancy labels + route-constraint `plan_satisfies`),
+        pool capacity, and free decode slots — BEFORE any state moves, so
+        a rejected batch leaves the cluster exactly as it was. A transfer
+        failure mid-batch (exceptional after pre-flight) restores that
+        request to ``src``; earlier requests of the batch remain moved.
+
+        Args:
+            src: source engine (may be draining — that is the retire
+                fast path).
+            dst: destination engine (must not be draining).
+            rids: requests to move; every resident + queued request on
+                ``src`` when omitted.
+
+        Returns:
+            One `MigrationRecord` per moved request (pause measured
+            export→import).
+
+        Raises:
+            KeyError: unknown engine or ``rids`` entry not on ``src``
+                (nothing moved).
+            ValueError: ``src == dst``, ``dst`` is draining, or ``rids``
+                contains duplicates (nothing moved).
+            RoutingError: ``dst`` is not eligible for a request's labels
+                (fail-closed; nothing moved).
+            MigrationError: ``dst`` cannot hold the batch — a request's
+                sequence capacity or the free-slot count (nothing moved);
+                or a transfer failed mid-batch (that request restored).
+        """
+        if src == dst:
+            raise ValueError("source and destination are the same engine")
+        se, de = self._entries[src], self._entries[dst]
+        if de.draining:
+            raise ValueError(f"destination {dst!r} is draining — a "
+                             "retiring engine cannot receive migrations")
+        if rids is None:
+            rids = [r.rid for r in se.engine.slot_req if r is not None] \
+                + [r.rid for r in se.engine.queue]
+        if len(set(rids)) != len(rids):
+            raise ValueError(f"duplicate rids in migration batch: {rids}")
+        # ---- pre-flight: validate the WHOLE batch before moving anything
+        resident = {r.rid: i for i, r in enumerate(se.engine.slot_req)
+                    if r is not None}
+        queued = {r.rid: r for r in se.engine.queue}
+        slots_needed = 0
+        for rid in rids:
+            if rid in resident:
+                slot = resident[rid]
+                req = se.engine.slot_req[slot]
+                phase, pos = "decoding", int(se.engine.slot_pos[slot])
+                slots_needed += 1
+            elif rid in queued:
+                req, phase = queued[rid], "queued"
+                pos = len(req.prompt)
+            else:
+                raise KeyError(f"request {rid} is not on engine {src!r}")
+            route_val = req.labels.get(self.ROUTE_KEY)
+            required = self._routes.get(route_val) if route_val else None
+            if not self._entry_eligible(de, req.labels, required):
+                raise RoutingError(
+                    f"engine {dst!r} may not serve request {rid} "
+                    f"(labels={req.labels}, constraint={required!r}) — "
+                    "failing closed, nothing moved")
+            need = needed_capacity(req, phase, pos, se.engine.s_max)
+            if need > de.engine.s_max:
+                raise MigrationError(
+                    f"request {rid} needs sequence capacity {need} but "
+                    f"{dst!r} has s_max={de.engine.s_max} — failing "
+                    "closed, nothing moved")
+        if slots_needed > de.engine.free_slots:
+            raise MigrationError(
+                f"batch needs {slots_needed} decode slots but {dst!r} has "
+                f"{de.engine.free_slots} free — failing closed, nothing "
+                "moved")
+        # ---- transfer
+        # compile-ahead: the pool-surgery ops must already be warm when
+        # the per-request pause clock starts (nothing compiles inside it)
+        se.engine.warm_migration()
+        de.engine.warm_migration()
+        # device barrier: pending decode work on either side must retire
+        # before export — waiting for it is drain cost (counted by the
+        # caller's blocking window), not per-request transfer cost
+        se.engine.drain()
+        de.engine.drain()
+        return [migrate_one(se.engine, de.engine, rid, src=src, dst=dst)
+                for rid in rids]
+
+    def _relocate_for_retirement(self, entry: _EngineEntry
+                                 ) -> List[MigrationRecord]:
+        """Move a retiring engine's in-flight work onto eligible peers,
+        batched per destination (one warm + drain barrier per engine
+        pair, not per request). A resident request resumes decode, so it
+        needs a RUNNING peer with a free slot and enough sequence
+        capacity — a paused one would strand it; a queued request only
+        needs routing (running peers preferred, router parity). Requests
+        no peer may legally hold (the route-constraint merge semantics of
+        `merge_restrictions` keep conflicting placements unroutable) stay
+        behind and drain — fail-closed beats mis-placement."""
+        eng = entry.engine
+        work = [(r, "decoding", int(eng.slot_pos[i]))
+                for i, r in enumerate(eng.slot_req) if r is not None] \
+            + [(r, "queued", len(r.prompt)) for r in eng.queue]
+        free = {e.name: e.engine.free_slots for e in self._entries.values()}
+        extra = {e.name: 0 for e in self._entries.values()}
+        assignments: Dict[str, List[int]] = {}
+        for req, phase, pos in work:
+            route_val = req.labels.get(self.ROUTE_KEY)
+            required = self._routes.get(route_val) if route_val else None
+            need = needed_capacity(req, phase, pos, eng.s_max)
+            cands = [e for e in self._entries.values()
+                     if e.name != entry.name
+                     and self._entry_eligible(e, req.labels, required)
+                     and need <= e.engine.s_max]
+            if phase == "decoding":
+                cands = [e for e in cands
+                         if not e.engine.paused and free[e.name] > 0]
+            else:
+                running = [e for e in cands if not e.engine.paused]
+                cands = running or cands
+            if not cands:
+                continue                   # stays behind; drains in place
+            dst = min(cands, key=lambda e: e.engine.load + extra[e.name])
+            assignments.setdefault(dst.name, []).append(req.rid)
+            extra[dst.name] += 1
+            if phase == "decoding":
+                free[dst.name] -= 1
+        records: List[MigrationRecord] = []
+        for dst, rids in assignments.items():
+            try:
+                records.extend(self.migrate_requests(entry.name, dst,
+                                                     rids=rids))
+            except (MigrationError, RoutingError):
+                continue                   # kept/restored on source; drains
+        return records
+
+    def retire_engine(self, name: str, mode: str = "drain"
+                      ) -> DowntimeReport:
+        """Begin retirement: the engine stops receiving new requests
+        immediately (the router skips draining engines) and is
+        deregistered once empty; its completions are retained for
+        cluster-level metrics.
+
+        Modes:
+          * ``"drain"`` (default): the engine serves out its queue and
+            resident slots first — retirement latency is bounded by the
+            longest in-flight decode, but nothing ever blocks
+            (``downtime_s`` is honestly 0).
+          * ``"migrate"``: in-flight work is live-migrated to eligible
+            peers (`migrate_requests` semantics — fail-closed on route
+            constraints) and the engine is reaped IMMEDIATELY when
+            everything moved. ``downtime_s`` reports the measured
+            relocation window; per-request pauses are in
+            ``report.migrations``. Requests no peer can legally hold
+            stay behind and drain in place (the engine then retires the
+            drain way for them).
+
+        A paused engine is resumed so it can actually drain.
 
         Returns:
             A `DowntimeReport` with ``event="retire"``; ``metrics_after``
@@ -576,8 +884,12 @@ class ServingCluster:
 
         Raises:
             KeyError: if ``name`` is not registered.
-            ValueError: if the engine is already draining.
+            ValueError: if the engine is already draining, or ``mode`` is
+                unknown.
         """
+        if mode not in ("drain", "migrate"):
+            raise ValueError(f"unknown retirement mode {mode!r} "
+                             "(expected 'drain' or 'migrate')")
         entry = self._entries[name]
         if entry.draining:
             raise ValueError(f"engine {name!r} is already draining")
@@ -586,16 +898,38 @@ class ServingCluster:
         self._finalize_pending(entry)
         metrics_before = compute_metrics(
             [r for r in entry.engine.done if r.t_done >= entry.swap_t])
-        entry.draining = True
+        entry.draining = True              # router skips it from here on
+        downtime_s = 0.0
+        records: List[MigrationRecord] = []
+        if mode == "migrate":
+            # PREPARE-equivalent: warm the pool-surgery ops on the source
+            # and every peer that could actually receive one of its
+            # in-flight requests, BEFORE the blocking window
+            entry.engine.warm_migration()
+            inflight = [r for r in entry.engine.slot_req
+                        if r is not None] + list(entry.engine.queue)
+            for e in self._entries.values():
+                if e is entry or e.draining:
+                    continue
+                if any(self._entry_eligible(
+                        e, r.labels,
+                        self._routes.get(r.labels[self.ROUTE_KEY])
+                        if r.labels.get(self.ROUTE_KEY) else None)
+                       for r in inflight):
+                    e.engine.warm_migration()
+            t0 = time.perf_counter()
+            records = self._relocate_for_retirement(entry)
+            downtime_s = time.perf_counter() - t0
         report = DowntimeReport(
-            prepare_s=0.0, downtime_s=0.0, migrate_bytes=0,
+            prepare_s=0.0, downtime_s=downtime_s,
+            migrate_bytes=sum(m.bytes_moved for m in records),
             metrics_before=metrics_before,
             metrics_after=compute_metrics([]),
-            engine=name, event="retire")
+            engine=name, event="retire", migrations=tuple(records))
         entry.pending_report = report
         entry.swap_t = time.time()
         self.history.append(report)
-        self._reap_drained()           # already-idle engines retire at once
+        self._reap_drained()           # emptied/idle engines retire at once
         return report
 
     def rebalance(self, name: str, plan: ShardingPlan, *,

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serving import migration
+from repro.serving.migration import MigrationError, SlotSnapshot
 from repro.sharding.plan import ShardingPlan, default_plan
 
 PyTree = Any
@@ -136,6 +138,9 @@ class ServingEngine:
     # a long-lived engine sees unboundedly many distinct lengths, but only
     # the most recent ones predict live traffic
     MAX_AOT_PREFILL = 8
+    # smallest padded-prefill bucket (powers of two up to s_max are
+    # compiled when `aot_executables(..., prefill_buckets=True)`)
+    BUCKET_MIN = 8
 
     def __init__(self, model: Model, params: PyTree, *, n_slots: int = 4,
                  s_max: int = 128, greedy: bool = True,
@@ -165,6 +170,14 @@ class ServingEngine:
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
         self._prefill_exec: Dict[int, Callable] = {}
         self._decode_exec: Optional[Callable] = None
+        # padded-bucket prefill executables: an unseen prompt length pads
+        # to the smallest bucket >= its length instead of JIT-compiling
+        self._bucket_exec: Dict[int, Callable] = {}
+        self._bucket_lengths: List[int] = []
+        # migration-path caches: the per-leaf batch axis of the KV pool is
+        # a property of (model, s_max) — constant for the engine's life
+        self._batch_axes: Optional[PyTree] = None
+        self._migration_warm = False
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -198,9 +211,12 @@ class ServingEngine:
                 tree}`` to `jax.device_put` the live state onto; AOT
                 executables compiled for the old layout are invalidated.
             executables: ``{"prefill": callable | {prompt_len: AOT
-                executable}, "decode": callable | AOT executable}`` — a
+                executable}, "decode": callable | AOT executable,
+                "prefill_buckets": {bucket_len: AOT executable}}`` — a
                 plain callable replaces the JIT fallback; an AOT
-                dict/executable is installed ahead of the fallback.
+                dict/executable is installed ahead of the fallback;
+                bucket executables serve unseen prompt lengths padded to
+                the bucket (see `aot_executables`).
 
         Returns:
             The number of bytes migrated (0 without ``shardings``).
@@ -223,6 +239,9 @@ class ServingEngine:
             # executables compiled for the old layout are stale
             self._prefill_exec = {}
             self._decode_exec = None
+            self._bucket_exec = {}
+            self._bucket_lengths = []
+            self._migration_warm = False   # pool-surgery ops too
         if executables:
             pf = executables.get("prefill")
             if isinstance(pf, dict):
@@ -230,6 +249,10 @@ class ServingEngine:
             elif pf is not None:
                 self._prefill = pf
                 self._prefill_exec = {}
+            bk = executables.get("prefill_buckets")
+            if bk is not None:
+                self._bucket_exec = dict(bk)
+                self._bucket_lengths = sorted(self._bucket_exec)
             de = executables.get("decode")
             if isinstance(de, jax.stages.Compiled):
                 self._decode_exec = de
@@ -247,8 +270,35 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # AOT compilation (PREPARE phase — runs while serving continues)
     # ------------------------------------------------------------------
+    def supports_padded_prefill(self) -> bool:
+        """Whether bucket-padded prefill is sound for this model: every
+        mixer must be attention-style (causal attention never reads the
+        padding; positions < ``true_len`` are bit-exact). SSM mixers fold
+        the WHOLE padded sequence into their recurrent state, and enc-dec
+        prefill has its own shape contract — both are excluded."""
+        cfg = self.model.cfg
+        if cfg.encdec is not None:
+            return False
+        from repro.models.lm import layer_kinds   # local: avoid cycles
+        return all(mixer in ("attn", "mla") for mixer, _ in layer_kinds(cfg))
+
+    def bucket_lengths(self) -> List[int]:
+        """The padded-prefill bucket ladder: powers of two from
+        `BUCKET_MIN` up to (and always including) ``s_max``. Empty when
+        the model cannot be padded (see `supports_padded_prefill`)."""
+        if not self.supports_padded_prefill():
+            return []
+        out: List[int] = []
+        b = self.BUCKET_MIN
+        while b < self.s_max:
+            out.append(b)
+            b *= 2
+        out.append(self.s_max)
+        return out
+
     def aot_executables(self, shardings: Dict[str, Any],
-                        prefill_lengths: Sequence[int] = ()
+                        prefill_lengths: Sequence[int] = (), *,
+                        prefill_buckets: bool = False,
                         ) -> Tuple[Dict[str, Any], int]:
         """Ahead-of-time compile decode (and prefill per prompt length)
         against the target `shardings`, via .lower().compile().
@@ -259,6 +309,12 @@ class ServingEngine:
             prefill_lengths: prompt lengths to compile prefill for; when
                 empty, falls back to the engine's most recently seen
                 lengths (capped at `MAX_AOT_PREFILL`).
+            prefill_buckets: also compile padded-bucket prefill
+                executables (`bucket_lengths`) that take a ``true_len``
+                argument, so prompt lengths never seen before ALSO avoid
+                the JIT fallback on the serving path — an unseen length
+                pads to the smallest bucket that holds it. No-op for
+                models where padding is unsound (SSM/enc-dec).
 
         Returns:
             ``(executables, n_compiled)`` in the shape `swap_plan`
@@ -275,6 +331,15 @@ class ServingEngine:
         decode = jax.jit(self.model.decode_step, donate_argnums=(2,)) \
             .lower(p_sds, tok_sds, c_sds, pos_sds).compile()
         n_compiled = 1
+
+        def batch_sds(S: int, padded: bool) -> Dict[str, Any]:
+            b = {"tokens": sds((1, S), jnp.int32)}
+            if padded:
+                b["true_len"] = sds((), jnp.int32)
+            if self.model.cfg.pos_type == "mrope":
+                b["positions"] = sds((3, 1, S), jnp.int32)
+            return b
+
         prefill: Dict[int, Callable] = {}
         if prefill_lengths:
             lengths = sorted(set(prefill_lengths))
@@ -284,13 +349,33 @@ class ServingEngine:
                             key=self.seen_prompt_lengths.get)
             lengths = sorted(recent[-self.MAX_AOT_PREFILL:])
         for S in lengths:
-            b_sds = {"tokens": sds((1, S), jnp.int32)}
-            if self.model.cfg.pos_type == "mrope":
-                b_sds["positions"] = sds((3, 1, S), jnp.int32)
             prefill[S] = jax.jit(self.model.prefill) \
-                .lower(p_sds, b_sds).compile()
+                .lower(p_sds, batch_sds(S, padded=False)).compile()
             n_compiled += 1
-        return {"prefill": prefill, "decode": decode}, n_compiled
+        buckets: Dict[int, Callable] = {}
+        if prefill_buckets:
+            for S in self.bucket_lengths():
+                buckets[S] = jax.jit(self.model.prefill) \
+                    .lower(p_sds, batch_sds(S, padded=True)).compile()
+                n_compiled += 1
+        return {"prefill": prefill, "decode": decode,
+                "prefill_buckets": buckets}, n_compiled
+
+    def decode_hlo_text(self) -> str:
+        """Post-compile HLO of the decode step, for compiled-artifact
+        validation (`ServingCluster` checks registered engines' HLO
+        against route constraints, not just their declared plans).
+
+        Reuses the installed AOT executable when present; otherwise
+        compiles decode once for the live layout and installs it, so the
+        check never forces a later JIT on the serving path."""
+        if self._decode_exec is None:
+            tok = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
+            self._decode_exec = jax.jit(self.model.decode_step,
+                                        donate_argnums=(2,)) \
+                .lower(self.params, tok, self.cache, pos).compile()
+        return self._decode_exec.as_text()
 
     # ------------------------------------------------------------------
     # serving
@@ -321,28 +406,165 @@ class ServingEngine:
         """Queued + resident requests (the router's balance key)."""
         return len(self.queue) + sum(r is not None for r in self.slot_req)
 
+    @property
+    def free_slots(self) -> int:
+        """Decode slots currently unoccupied (migration capacity)."""
+        return sum(r is None for r in self.slot_req)
+
     def _admit(self) -> None:
         while self.queue:
             slot = self._free_slot()
             if slot is None:
                 return
             req = self.queue.pop(0)
+            S = len(req.prompt)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            batch = {"tokens": prompt}
+            # exact-length AOT executable first; else the smallest padded
+            # bucket that holds the prompt; JIT fallback last
+            prefill = self._prefill_exec.get(S)
+            batch: Dict[str, Any] = {"tokens": prompt}
+            if prefill is None:
+                bucket = next((b for b in self._bucket_lengths if b >= S),
+                              None)
+                if bucket is not None:
+                    batch = {"tokens": jnp.pad(prompt,
+                                               ((0, 0), (0, bucket - S))),
+                             "true_len": jnp.asarray(S, jnp.int32)}
+                    prefill = self._bucket_exec[bucket]
+                else:
+                    prefill = self._prefill
             if self.model.cfg.pos_type == "mrope":
-                S = prompt.shape[1]
+                Sp = batch["tokens"].shape[1]
                 batch["positions"] = jnp.broadcast_to(
-                    jnp.arange(S, dtype=jnp.int32)[None, None], (3, 1, S))
-            prefill = self._prefill_exec.get(prompt.shape[1], self._prefill)
+                    jnp.arange(Sp, dtype=jnp.int32)[None, None], (3, 1, Sp))
             logits, cache1 = prefill(self.params, batch)
             tok = int(jnp.argmax(logits[0, : self.vocab]))
             req.tokens_out.append(tok)
             req.t_first = time.time()
-            # merge the single-sequence cache into the slot pool
+            # merge the single-sequence cache into the slot pool (bucket
+            # entries beyond S are never read: decode masks by position)
             self.cache = _write_slot(self.cache, cache1, slot,
-                                     prompt.shape[1], self.s_max)
+                                     S, self.s_max)
             self.slot_req[slot] = req
-            self.slot_pos[slot] = prompt.shape[1]
+            self.slot_pos[slot] = S
+
+    # ------------------------------------------------------------------
+    # live migration (export / import one request's state)
+    # ------------------------------------------------------------------
+    def _migration_axes(self) -> PyTree:
+        """Per-leaf batch-axis tree of the KV pool (cached — a property
+        of the model and ``s_max``, not of the current layout)."""
+        if self._batch_axes is None:
+            self._batch_axes = migration.batch_axis_tree(self.model,
+                                                         self.s_max)
+        return self._batch_axes
+
+    def warm_migration(self) -> None:
+        """Pre-compile the pool-surgery ops the migration path uses
+        (slot slice + slot write at the live shapes/dtypes), so a later
+        `export_slot`/`import_slot` pays no first-call compile — the same
+        compile-ahead discipline `swap_plan` applies to executables.
+        Idempotent and state-preserving (results are discarded)."""
+        if self._migration_warm:
+            return
+        axes = self._migration_axes()
+        # mirror the real export→import pipeline exactly (fit/place change
+        # the arrays' committed-ness, which is part of the op-cache key)
+        kv = migration.slice_slot(self.cache, axes, 0)
+        jax.block_until_ready(jax.tree.leaves(kv))
+        single = migration.fit_single(kv, self.model.cache_shapes(1,
+                                                                  self.s_max))
+        single = migration.place_like(single, self.cache)
+        # chain two writes: the pool operand's placement differs between
+        # the first import (fresh pool) and later ones (previous write's
+        # output) — both variants must be compiled before the window
+        w1 = migration.write_single(self.cache, single, axes, 0)
+        w2 = migration.write_single(w1, single, axes, 0)
+        jax.block_until_ready(jax.tree.leaves(w2))
+        self._migration_warm = True
+
+    def export_slot(self, rid: int) -> SlotSnapshot:
+        """Detach request ``rid`` from this engine as a `SlotSnapshot`.
+
+        A resident request's KV slices are sliced out of the pool (its
+        slot is freed); a queued request exports as a lightweight
+        ``phase="queued"`` snapshot. In both cases ``max_new_tokens`` is
+        clamped to what THIS pool could still have produced, so importing
+        into a larger pool never extends the stream beyond the
+        unmigrated run's.
+
+        Returns:
+            The snapshot (the `Request` object travels inside it — it is
+            no longer tracked by this engine).
+
+        Raises:
+            KeyError: ``rid`` is neither resident nor queued here.
+        """
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                pos = int(self.slot_pos[slot])
+                room = self.s_max - 1 - pos
+                if r.max_new_tokens - len(r.tokens_out) > room:
+                    r.max_new_tokens = len(r.tokens_out) + room
+                kv = migration.slice_slot(self.cache,
+                                          self._migration_axes(), slot)
+                jax.block_until_ready(jax.tree.leaves(kv))
+                self.slot_req[slot] = None
+                self.slot_pos[slot] = 0
+                return SlotSnapshot(rid=rid, request=r, phase="decoding",
+                                    pos=pos, kv=kv, src_s_max=self.s_max)
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(i)
+                r.max_new_tokens = min(r.max_new_tokens,
+                                       self.s_max - len(r.prompt))
+                return SlotSnapshot(rid=rid, request=r, phase="queued",
+                                    pos=len(r.prompt), kv=None,
+                                    src_s_max=self.s_max)
+        raise KeyError(f"request {rid} is not on this engine")
+
+    def import_slot(self, snapshot: SlotSnapshot) -> int:
+        """Adopt a migrated request: re-queue a ``"queued"`` snapshot, or
+        write a ``"decoding"`` snapshot's KV into a free slot (refit to
+        this pool's ``s_max`` and `jax.device_put` onto its layout) and
+        resume decode at the snapshot position — no recompilation, no
+        re-run of prefill. Submission stamps are preserved: TTFT/TPOT
+        still measure from the original submit.
+
+        Returns:
+            KV bytes written into the pool (0 for a queued snapshot).
+
+        Raises:
+            MigrationError: fail-closed, with this engine unchanged —
+                the pool's sequence capacity cannot finish the request's
+                generation (e.g. migrating into a smaller ``s_max``), or
+                no decode slot is free.
+        """
+        need = migration.required_capacity(snapshot)
+        if need > self.s_max:
+            raise MigrationError(
+                f"request {snapshot.rid} needs sequence capacity {need} "
+                f"but this pool has s_max={self.s_max} — failing closed")
+        req = snapshot.request
+        if snapshot.phase == "queued":
+            self.note_prompt_length(len(req.prompt))
+            self.queue.append(req)
+            return 0
+        slot = self._free_slot()
+        if slot is None:
+            raise MigrationError(
+                f"no free decode slot for request {snapshot.rid} "
+                f"(n_slots={self.n_slots}) — failing closed")
+        single = migration.fit_single(
+            snapshot.kv, self.model.cache_shapes(1, self.s_max))
+        single = migration.place_like(single, self.cache)
+        self.cache = migration.write_single(
+            self.cache, single, self._migration_axes(), slot)
+        jax.block_until_ready(jax.tree.leaves(self.cache))
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = snapshot.pos
+        self.note_prompt_length(len(req.prompt))
+        return snapshot.nbytes
 
     # ------------------------------------------------------------------
     def step(self) -> int:

@@ -1,0 +1,296 @@
+"""Live in-flight request migration: move per-request KV state between
+engines instead of draining.
+
+The paper's online-reconfiguration story only fully lands when a *stateful*
+request can leave its engine mid-generation: retirement latency is
+otherwise bounded below by the longest in-flight decode. This module is
+the state-transfer primitive (FlexPipe-style inflight refactoring):
+
+    export   `ServingEngine.export_slot(rid)` snapshots everything one
+             request owns — the KV slices of its decode slot (sliced out
+             of the (n_slots, s_max) pool along the per-leaf batch axis),
+             its decode position, generated tokens, and metric stamps —
+             and frees the slot. Queued requests export as lightweight
+             ``phase="queued"`` snapshots (no KV yet).
+    reshard  `fit_single` reshapes the snapshot onto the target pool's
+             single-sequence layout (differing ``s_max`` pads/truncates);
+             `place_like` `jax.device_put`s each leaf onto the target
+             pool's sharding (specs that do not divide the slice shape
+             degrade to replication on that dim).
+    import   `ServingEngine.import_slot(snapshot)` writes the KV into a
+             free slot and resumes decode at the snapshot position — no
+             recompilation (decode is shape-static) and no re-run of
+             prefill.
+    resume   the request decodes on the target; the generated-token
+             stream is bitwise identical to an unmigrated run (the KV
+             prefix is copied verbatim and decode is deterministic
+             per batch row).
+
+Fail-closed rules (enforced at import, before any state is dropped):
+
+  * the request's remaining token budget must fit the target pool's
+    sequence capacity — migrating into a smaller ``s_max`` that cannot
+    hold the rest of the generation raises `MigrationError`;
+  * `export_slot` clamps ``max_new_tokens`` to what the SOURCE pool could
+    have produced, so a larger target can never extend a stream beyond
+    what the unmigrated run would have emitted;
+  * a failed import restores the snapshot onto the source (the caller —
+    `ServingCluster.migrate_requests` — re-imports on the source engine,
+    which always fits its own snapshot).
+
+Route-constraint compliance is the cluster's job (`migrate_requests`
+checks the destination with the same fail-closed predicate the router
+uses); this module only moves state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:                      # no runtime import: engine.py imports us
+    from repro.serving.engine import Request
+
+PyTree = Any
+
+
+class MigrationError(RuntimeError):
+    """A snapshot cannot be imported (capacity/slot/layout mismatch) —
+    the request stays on (or is restored to) its source engine."""
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """Everything one in-flight request owns, detached from its engine.
+
+    Attributes:
+        rid: the request id (lookup key for export).
+        request: the live `Request` object — tokens generated so far and
+            the metric stamps travel with it; nothing is re-stamped.
+        phase: ``"decoding"`` (was resident in a slot; ``kv`` holds its
+            cache slices) or ``"queued"`` (not yet prefilled; no KV).
+        pos: the decode write position (``slot_pos``) for a decoding
+            snapshot; the prompt length for a queued one.
+        kv: single-sequence cache pytree sliced from the source pool
+            (batch dim == 1, seq dims == the source ``s_max``); ``None``
+            for queued snapshots.
+        src_s_max: the source pool's sequence capacity (import refits
+            seq dims from this to the target's).
+        src_engine: source engine name (telemetry only).
+        t_export: wall-clock stamp when the snapshot was taken.
+    """
+
+    rid: int
+    request: "Request"
+    phase: str
+    pos: int
+    kv: Optional[PyTree]
+    src_s_max: int
+    src_engine: str = ""
+    t_export: float = dataclasses.field(default_factory=time.time)
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes of KV state carried by this snapshot (0 when queued)."""
+        if self.kv is None:
+            return 0
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.kv))
+
+    def remaining_tokens(self) -> int:
+        """Decode budget left after the tokens already generated."""
+        return max(self.request.max_new_tokens - len(self.request.tokens_out), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationRecord:
+    """Telemetry for one migrated request (the per-request pause is the
+    paper's <50 ms budget; benchmarks assert it).
+
+    Attributes:
+        rid: the migrated request.
+        src / dst: engine names.
+        phase: ``"decoding"`` or ``"queued"`` at export time.
+        pause_s: the request's blocking window — export + reshard +
+            import, measured wall-clock (the request makes no progress
+            inside it).
+        bytes_moved: KV bytes transferred (0 for queued requests).
+    """
+
+    rid: int
+    src: str
+    dst: str
+    phase: str
+    pause_s: float
+    bytes_moved: int
+
+
+# ---------------------------------------------------------------------------
+# pool surgery (shape-driven, architecture-agnostic)
+# ---------------------------------------------------------------------------
+
+
+def batch_axis_tree(model, s_max: int) -> PyTree:
+    """Per-leaf batch-axis index of a model's KV cache layout.
+
+    Probes `Model.cache_shapes` (eval_shape — no device work) at two batch
+    sizes; the axis that tracks the probe is the batch axis. ``-1`` marks
+    leaves with no batch dim (replicated state)."""
+    one = model.cache_shapes(1, s_max)
+    three = model.cache_shapes(3, s_max)
+
+    def find(a, b):
+        for ax in range(a.ndim):
+            if a.shape[ax] == 1 and b.shape[ax] == 3:
+                return ax
+        return -1
+
+    return jax.tree.map(find, one, three)
+
+
+def slice_slot(pool: PyTree, axes: PyTree, slot: int) -> PyTree:
+    """Slice one batch slot out of a KV pool, keeping the batch dim at
+    size 1 (the single-sequence layout `ServingEngine._admit` also uses)."""
+
+    def one(p, ax):
+        if ax < 0:
+            return p
+        idx = [slice(None)] * p.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return p[tuple(idx)]
+
+    return jax.tree.map(one, pool, axes)
+
+
+def fit_single(kv: PyTree, dst_single: PyTree) -> PyTree:
+    """Refit a single-sequence cache onto a target single-sequence layout:
+    longer dims are truncated (valid entries live in the prefix — decode
+    masks by position), shorter ones zero-padded; dtypes follow the target.
+
+    Raises:
+        MigrationError: if the pytrees are not congruent (different
+            architectures cannot exchange KV state).
+    """
+
+    def one(k, d):
+        for ax in range(k.ndim):
+            if k.shape[ax] > d.shape[ax]:
+                k = jax.lax.slice_in_dim(k, 0, d.shape[ax], axis=ax)
+            elif k.shape[ax] < d.shape[ax]:
+                pad = [(0, 0)] * k.ndim
+                pad[ax] = (0, d.shape[ax] - k.shape[ax])
+                k = jnp.pad(k, pad)
+        return k.astype(d.dtype)
+
+    try:
+        return jax.tree.map(one, kv, dst_single)
+    except ValueError as e:
+        raise MigrationError(
+            f"snapshot cache layout is not congruent with the target "
+            f"engine's (different model architecture?): {e}") from e
+
+
+def place_like(kv: PyTree, pool: PyTree) -> PyTree:
+    """`jax.device_put` each snapshot leaf onto the target pool's sharding.
+
+    The pool's `NamedSharding` specs are re-derived for the slice shape:
+    a spec entry whose mesh-axis extent does not divide the slice dim
+    (e.g. a sharded batch dim collapsed to 1) degrades to replication on
+    that dim, so the transfer is always expressible."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def one(k, p):
+        sh = getattr(p, "sharding", None)
+        if isinstance(sh, NamedSharding):
+            parts = []
+            for ax in range(k.ndim):
+                entry = sh.spec[ax] if ax < len(sh.spec) else None
+                names = entry if isinstance(entry, (tuple, list)) else (
+                    (entry,) if entry is not None else ())
+                size = 1
+                for nm in names:
+                    size *= sh.mesh.shape[nm]
+                parts.append(entry if k.shape[ax] % size == 0 else None)
+            return jax.device_put(k, NamedSharding(sh.mesh,
+                                                   PartitionSpec(*parts)))
+        if sh is not None:
+            return jax.device_put(k, sh)
+        return jnp.asarray(k)
+
+    return jax.tree.map(one, kv, pool)
+
+
+def write_single(pool: PyTree, single: PyTree, axes: PyTree,
+                 slot: int) -> PyTree:
+    """Write a single-sequence cache into batch slot ``slot`` of a pool
+    (the inverse of `slice_slot`; trailing dims already fit the pool)."""
+
+    def one(p, c, ax):
+        if ax < 0:
+            return p
+        idx = [slice(None)] * p.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return p.at[tuple(idx)].set(c.astype(p.dtype))
+
+    return jax.tree.map(one, pool, single, axes)
+
+
+def needed_capacity(request: "Request", phase: str, pos: int,
+                    src_s_max: int) -> int:
+    """The minimum target ``s_max`` that can finish this request's
+    generation without ever hitting the pool's sequence cap — computable
+    BEFORE export (it applies the same source-pool budget clamp
+    `ServingEngine.export_slot` will).
+
+    For a decoding request the remaining tokens write positions
+    ``pos .. pos+rem-1`` and the engine stops when ``slot_pos >=
+    s_max - 1``; a queued request additionally gets its first token from
+    prefill. Importing below this capacity would truncate the stream, so
+    `ServingEngine.import_slot` fails closed instead."""
+    if phase == "queued":
+        # prefill emits token 1 at pos=len(prompt); rem-1 decode steps follow
+        rem = min(max(request.max_new_tokens - len(request.tokens_out), 0),
+                  src_s_max - len(request.prompt))
+        return len(request.prompt) + max(rem, 1)
+    rem = min(max(request.max_new_tokens - len(request.tokens_out), 0),
+              src_s_max - 1 - pos)
+    return pos + rem + 1
+
+
+def required_capacity(snapshot: SlotSnapshot) -> int:
+    """`needed_capacity` of an already-exported snapshot."""
+    return needed_capacity(snapshot.request, snapshot.phase, snapshot.pos,
+                           snapshot.src_s_max)
+
+
+def migrate_one(src_engine, dst_engine, rid: int, *,
+                src: str = "", dst: str = "") -> MigrationRecord:
+    """Export `rid` from ``src_engine`` and import it into ``dst_engine``,
+    restoring it to the source if the import fails closed.
+
+    This is the primitive `ServingCluster.migrate_requests` loops over;
+    eligibility (labels, route constraints, free slots) is the caller's
+    responsibility — state transfer and honest pause accounting are ours.
+
+    Returns:
+        The `MigrationRecord` (pause measured export→import, blocking).
+
+    Raises:
+        KeyError: ``rid`` is not on the source engine.
+        MigrationError: the destination cannot hold the request (it has
+            been restored to the source, unchanged).
+    """
+    t0 = time.perf_counter()
+    snap = src_engine.export_slot(rid)
+    if src:
+        snap.src_engine = src
+    try:
+        moved = dst_engine.import_slot(snap)
+    except MigrationError:
+        src_engine.import_slot(snap)   # the source always fits its own state
+        raise
+    return MigrationRecord(rid=rid, src=src, dst=dst, phase=snap.phase,
+                           pause_s=time.perf_counter() - t0,
+                           bytes_moved=moved)

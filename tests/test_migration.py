@@ -1,0 +1,468 @@
+"""Live in-flight request migration: export/import state transfer,
+fail-closed edge cases (capacity, labels, route constraints), the
+migrate-mode retirement fast path, padded-bucket AOT prefill, and the
+registration-time compiled-HLO validator hook."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serving import (
+    Autoscaler,
+    ElasticPolicy,
+    LoadTracker,
+    MigrationError,
+    Request,
+    RoutingError,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.sharding import ShardingPlan, default_plan
+
+
+@pytest.fixture(scope="module")
+def fp32_model():
+    cfg = dataclasses.replace(get_reduced_config("minitron_4b"),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _req(rng, cfg, rid, labels=None, n=6, new=5):
+    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
+                   .astype(np.int32), max_new_tokens=new,
+                   labels=labels or {})
+
+
+def _mk(model, params, n_slots=2, s_max=32, **kw):
+    return ServingEngine(model, params, n_slots=n_slots, s_max=s_max, **kw)
+
+
+def _baseline_streams(model, params, prompts, new, n_slots=4, s_max=32):
+    """Token streams of an unmigrated run over the same prompts."""
+    eng = ServingEngine(model, params, n_slots=n_slots, s_max=s_max)
+    reqs = [Request(i, p, max_new_tokens=new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.rid: list(r.tokens_out) for r in reqs}
+
+
+PINNED = ShardingPlan(device_constraints=(("pod", 0),),
+                      forbidden_collective_axes=("pod",))
+
+
+# ---------------------------------------------------------------------------
+# state transfer
+# ---------------------------------------------------------------------------
+
+
+def test_migrate_mid_decode_streams_bitwise_identical(fp32_model):
+    """The headline property: a request moved between engines mid-decode
+    keeps its KV prefix and its token stream is bitwise identical to an
+    unmigrated run."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 7, 6, 8)]
+    expect = _baseline_streams(model, params, prompts, new=8)
+
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, n_slots=4))
+    reqs = [Request(i, p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    for r in reqs:
+        cluster.submit(r)
+    for _ in range(3):
+        cluster.step()                       # everyone is mid-decode
+    cluster.register("dst", _mk(model, params, n_slots=4))
+    records = cluster.migrate_requests("src", "dst")
+    assert len(records) == 4
+    assert all(m.phase == "decoding" and m.bytes_moved > 0 for m in records)
+    assert cluster.engine("src").load == 0
+    cluster.run()
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+
+def test_migrate_mid_prefill_vs_mid_decode(fp32_model):
+    """A queued (not yet prefilled) request migrates as a lightweight
+    queued snapshot — no KV bytes, submission stamp preserved — while a
+    resident one carries its slot state."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(1)
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, n_slots=2))
+    reqs = [_req(rng, cfg, rid) for rid in range(3)]
+    for r in reqs:
+        cluster.submit(r)
+    cluster.step()                           # 2 resident, 1 still queued
+    t_submit = reqs[2].t_submit
+    cluster.register("dst", _mk(model, params, n_slots=2))
+    records = {m.rid: m for m in cluster.migrate_requests("src", "dst")}
+    assert records[0].phase == "decoding" and records[0].bytes_moved > 0
+    assert records[2].phase == "queued" and records[2].bytes_moved == 0
+    assert reqs[2].t_submit == t_submit      # TTFT still from original submit
+    cluster.run()
+    assert all(len(r.tokens_out) == r.max_new_tokens for r in reqs)
+
+
+def test_migrate_into_smaller_pool_fails_closed(fp32_model):
+    """A pool whose s_max cannot finish the generation refuses the import;
+    the request is restored to the source and completes there."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, s_max=48))
+    cluster.register("small", _mk(model, params, s_max=16))
+    rng = np.random.default_rng(2)
+    req = _req(rng, cfg, 0, n=8, new=20)     # needs 8 + 20 positions
+    cluster.engine("src").submit(req)
+    cluster.step()
+    with pytest.raises(MigrationError):
+        cluster.migrate_requests("src", "small", rids=[0])
+    assert cluster.engine("src").load == 1   # restored, not dropped
+    cluster.run()
+    assert len(req.tokens_out) == 20         # finished on the source
+
+
+def test_migrate_larger_pool_never_extends_stream(fp32_model):
+    """Export clamps the budget to what the SOURCE pool could produce, so
+    a roomier target can't emit tokens the unmigrated run wouldn't."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+    # source caps generation at s_max-1: 15 positions -> 9 decode tokens
+    base = ServingEngine(model, params, n_slots=2, s_max=16)
+    r0 = Request(0, prompt.copy(), max_new_tokens=30)
+    base.submit(r0)
+    base.run()
+
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, s_max=16))
+    cluster.register("big", _mk(model, params, s_max=64))
+    r1 = Request(0, prompt.copy(), max_new_tokens=30)
+    cluster.engine("src").submit(r1)
+    cluster.step()
+    cluster.migrate_requests("src", "big", rids=[0])
+    cluster.run()
+    assert r1.tokens_out == r0.tokens_out
+
+
+def test_migrate_unserved_label_fails_closed(fp32_model):
+    """Tenancy labels and route constraints gate migration exactly like
+    routing: an engine the router would refuse can't receive the request
+    by migration either."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params))
+    cluster.register("general-only", _mk(
+        model, params, labels={"data-type": "general"}))
+    rng = np.random.default_rng(4)
+    req = _req(rng, cfg, 0, {"data-type": "phi"})
+    cluster.engine("src").submit(req)
+    cluster.step()
+    with pytest.raises(RoutingError):
+        cluster.migrate_requests("src", "general-only", rids=[0])
+    assert cluster.engine("src").load == 1   # nothing moved
+
+    # route constraint: destination plan must satisfy it
+    cluster.set_route_constraint("phi", PINNED)
+    cluster.register("unpinned", _mk(model, params), plan=default_plan())
+    with pytest.raises(RoutingError):
+        cluster.migrate_requests("src", "unpinned", rids=[0])
+    cluster.register("pinned", _mk(model, params), plan=PINNED)
+    records = cluster.migrate_requests("src", "pinned", rids=[0])
+    assert records[0].dst == "pinned"
+
+
+# ---------------------------------------------------------------------------
+# migrate-mode retirement
+# ---------------------------------------------------------------------------
+
+
+def test_retire_migrate_reaps_immediately_with_measured_downtime(fp32_model):
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(5)
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params, n_slots=4))
+    cluster.register("b", _mk(model, params, n_slots=4))
+    reqs = [_req(rng, cfg, rid) for rid in range(3)]
+    for r in reqs:
+        cluster.engine("a").submit(r)
+    cluster.step()
+    report = cluster.retire_engine("a", mode="migrate")
+    # relocated and reaped in the same call — no drain latency
+    assert "a" not in cluster.engines()
+    assert report.event == "retire"
+    assert report.downtime_s > 0.0           # the honest blocking window
+    assert len(report.migrations) == 3
+    assert report.migrate_bytes > 0
+    assert all(m.pause_s >= 0 for m in report.migrations)
+    cluster.run()
+    assert all(len(r.tokens_out) == r.max_new_tokens for r in reqs)
+    assert cluster.metrics()["completed"] == 3
+
+
+def test_retire_migrate_falls_back_to_drain_without_peer(fp32_model):
+    """Requests no peer may legally hold stay behind and drain in place —
+    fail-closed beats mis-placement."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(6)
+    cluster = ServingCluster()
+    cluster.register("phi-0", _mk(model, params,
+                                  labels={"data-type": "phi"}))
+    cluster.register("general-0", _mk(model, params,
+                                      labels={"data-type": "general"}))
+    req = _req(rng, cfg, 0, {"data-type": "phi"})
+    cluster.engine("phi-0").submit(req)
+    cluster.step()
+    report = cluster.retire_engine("phi-0", mode="migrate")
+    assert report.migrations == ()           # nowhere legal to go
+    assert "phi-0" in cluster.engines()      # still draining it out
+    assert cluster.draining() == ["phi-0"]
+    cluster.run()
+    assert "phi-0" not in cluster.engines()  # drained, then reaped
+    assert len(req.tokens_out) == req.max_new_tokens
+
+
+def test_drain_mode_retirement_unchanged(fp32_model):
+    """The default mode keeps the PR-2 semantics: no blocking, no
+    migrations, drain then reap."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(7)
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params))
+    cluster.register("b", _mk(model, params))
+    cluster.engine("a").submit(_req(rng, cfg, 0))
+    report = cluster.retire_engine("a")
+    assert report.downtime_s == 0.0 and report.migrations == ()
+    assert cluster.draining() == ["a"]
+    cluster.run()
+    assert "a" not in cluster.engines()
+    with pytest.raises(ValueError):
+        cluster.retire_engine("b", mode="teleport")
+
+
+def test_autoscaler_prefers_migrate_retire_when_peers_have_slots(fp32_model):
+    """With prefer_migrate, a cold label's busy dedicated engine is
+    retired by live migration (relocate + immediate reap) instead of
+    waiting out its longest decode."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(8)
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params, n_slots=4))
+    cluster.spawn_engine("phi-0", _mk(model, params, n_slots=4),
+                         labels={"data-type": "phi"})
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        # retire_depth above the residual in-flight depth: the label is
+        # cold (no arrivals) even though two long decodes are resident
+        policy=ElasticPolicy(retire_rate=0.25, retire_depth=3.0, sustain=2,
+                             cooldown=0, prefer_migrate=True),
+        tracker=LoadTracker(alpha=1.0))
+    for rid in range(2):
+        cluster.engine("phi-0").submit(
+            _req(rng, cfg, rid, {"data-type": "phi"}, new=64))
+    cluster.step()                           # long decodes now resident
+    decisions = []
+    for _ in range(3):
+        decisions += scaler.tick()
+    retire = next(d for d in decisions if d.kind == "retire")
+    assert retire.mode == "migrate"
+    assert "phi-0" not in cluster.engines()  # reaped immediately
+    _, report = next(e for e in scaler.events if e[0].kind == "retire")
+    assert len(report.migrations) == 2
+    cluster.run()
+    assert cluster.metrics()["completed"] == 2
+
+
+def test_autoscaler_drain_strict_without_prefer_migrate(fp32_model):
+    """Default policy still never retires a busy engine (PR-2 contract)."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(9)
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params, n_slots=4))
+    cluster.spawn_engine("phi-0", _mk(model, params, n_slots=4),
+                         labels={"data-type": "phi"})
+    scaler = Autoscaler(
+        cluster, lambda label: _mk(model, params),
+        policy=ElasticPolicy(retire_rate=0.25, sustain=2, cooldown=0),
+        tracker=LoadTracker(alpha=1.0))
+    cluster.submit(_req(rng, cfg, 0, {"data-type": "phi"}, new=64))
+    cluster.step()
+    for _ in range(3):
+        assert all(d.kind != "retire" for d in scaler.tick())
+    assert "phi-0" in cluster.engines()
+
+
+# ---------------------------------------------------------------------------
+# padded-bucket AOT prefill
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_prefill_unseen_length_never_jits(fp32_model):
+    """With the bucket ladder compiled, a never-seen prompt length admits
+    through the padded executable — the JIT fallback is unreachable —
+    and the tokens match the exact-length path bit for bit."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (11, 5)]             # 11 and 5 were never compiled
+    expect = _baseline_streams(model, params, prompts, new=5, n_slots=2)
+
+    eng = _mk(model, params)
+    assert eng.supports_padded_prefill()
+    assert eng.bucket_lengths() == [8, 16, 32]
+    cluster = ServingCluster()
+    cluster.register("e0", eng)
+    report = cluster.reconfigure("e0", default_plan(), prefill_lengths=(6,),
+                                 prefill_buckets=True)
+    # decode + prefill(6) + buckets 8/16/32
+    assert report.compiled_in_prepare == 5
+    eng._prefill = _forbidden_jit            # prove the fallback is unused
+    reqs = [Request(i, p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert {r.rid: r.tokens_out for r in reqs} == expect
+
+
+def _forbidden_jit(*a, **k):
+    raise AssertionError("JIT prefill fallback used on the serving path")
+
+
+def test_bucket_prefill_excluded_for_ssm_models():
+    """SSM mixers fold padding into their recurrent state — bucket
+    padding must be refused, not silently wrong."""
+    cfg = dataclasses.replace(get_reduced_config("mamba2_370m"),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, n_slots=2, s_max=32)
+    assert not eng.supports_padded_prefill()
+    assert eng.bucket_lengths() == []
+
+
+def test_migrated_queued_request_reuses_target_buckets(fp32_model):
+    """A queued request migrated onto a bucket-equipped target admits via
+    the padded executable — migration never reintroduces serving-path
+    JIT."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(11)
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, n_slots=2))
+    reqs = [_req(rng, cfg, rid, n=9) for rid in range(3)]
+    for r in reqs:
+        cluster.submit(r)
+    cluster.step()                           # rid 2 still queued
+    dst = _mk(model, params, n_slots=2)
+    cluster.register("dst", dst)
+    cluster.reconfigure("dst", default_plan(), prefill_lengths=(),
+                        prefill_buckets=True)
+    dst._prefill = _forbidden_jit
+    records = cluster.migrate_requests("src", "dst", rids=[2])
+    assert records[0].phase == "queued"
+    cluster.run()
+    assert len(reqs[2].tokens_out) == reqs[2].max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# registration-time compiled-HLO validation
+# ---------------------------------------------------------------------------
+
+BAD_HLO = """
+HloModule synth
+
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  ROOT %ar = f32[64,64]{1,0} all-reduce(%p0), channel_id=1, replica_groups={{0,4},{1,5},{2,6},{3,7}}, use_global_device_ids=true, to_apply=%add
+}
+"""
+
+
+def test_verify_engine_hlo_fail_closed_on_forbidden_axis(fp32_model):
+    """A compiled module whose collectives cross a forbidden axis is
+    rejected, no matter what the declared plan claims."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.set_route_constraint("phi", PINNED)
+    cluster.register("e0", _mk(model, params), plan=PINNED)
+    # on the (2,2,2) production topology, groups {0,4}... cross axis 0
+    with pytest.raises(ValueError, match="fail-closed"):
+        cluster.verify_engine_hlo("e0", hlo_text=BAD_HLO,
+                                  mesh_shape=(2, 2, 2),
+                                  axis_names=("pod", "data", "model"))
+    # the engine's real compiled decode (single device, no collectives)
+    # passes the same check
+    assert "collectives checked" in cluster.verify_engine_hlo("e0")
+
+
+def test_register_checks_compiled_hlo_not_just_plan(fp32_model, monkeypatch):
+    """register() fails closed — and does NOT register — when the
+    compiled artifact contradicts the declared plan."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.set_route_constraint("phi", PINNED)
+    monkeypatch.setattr(ServingEngine, "decode_hlo_text",
+                        lambda self: BAD_HLO)
+    # attribute the synthetic module's collectives on the production
+    # topology, where its replica groups cross the forbidden pod axis
+    import repro.core.validator as validator
+    real = validator.check_hlo_axes
+    monkeypatch.setattr(
+        validator, "check_hlo_axes",
+        lambda text, axes, shape, names: real(text, axes, (2, 2, 2),
+                                              ("pod", "data", "model")))
+    with pytest.raises(ValueError, match="compiled-HLO"):
+        cluster.register("bad", _mk(model, params), plan=PINNED)
+    assert "bad" not in cluster.engines()
+    # opting out (or no applicable constraint) registers fine
+    cluster.register("ok", _mk(model, params), plan=PINNED,
+                     verify_hlo=False)
+    assert "ok" in cluster.engines()
+
+
+def test_constraint_installed_after_register_quarantines_bad_engine(
+        fp32_model, monkeypatch):
+    """The register-then-constrain order is fail-closed too:
+    set_route_constraint re-validates claim-satisfying engines and
+    quarantines (derouts) any whose compiled artifact disproves the
+    declared plan."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(12)
+    cluster = ServingCluster()
+    cluster.register("bad", _mk(model, params), plan=PINNED)   # no routes yet
+    cluster.register("open", _mk(model, params), plan=default_plan())
+    monkeypatch.setattr(ServingEngine, "decode_hlo_text",
+                        lambda self: BAD_HLO)
+    import repro.core.validator as validator
+    real = validator.check_hlo_axes
+    monkeypatch.setattr(
+        validator, "check_hlo_axes",
+        lambda text, axes, shape, names: real(text, axes, (2, 2, 2),
+                                              ("pod", "data", "model")))
+    with pytest.raises(ValueError, match="fail-closed"):
+        cluster.set_route_constraint("phi", PINNED)
+    # constraint installed, engine registered but unroutable: phi traffic
+    # fails closed instead of landing on the disproven claim
+    assert "phi" in cluster.route_constraints()
+    assert "bad" in cluster.engines()
+    with pytest.raises(RoutingError):
+        cluster.submit(_req(rng, cfg, 0, {"data-type": "phi"}))
+    # unconstrained traffic still routes (to the open engine)
+    assert cluster.submit(_req(rng, cfg, 1)) == "open"
+
+
+def test_spawn_engine_verifies_aot_compiled_hlo(fp32_model):
+    """spawn_engine re-uses the PREPARE-phase executable for the check:
+    a compliant spawn passes and joins the pool."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.set_route_constraint("phi", PINNED)
+    report = cluster.spawn_engine("phi-0", _mk(model, params), plan=PINNED,
+                                  labels={"data-type": "phi"})
+    assert report.event == "spawn"
+    assert "phi-0" in cluster.engines_for_label("phi")
