@@ -1,10 +1,15 @@
 PY ?= python
 
-.PHONY: test ci example bench-reconfig bench-elastic bench-migration \
-        bench-json docs
+.PHONY: test test-stress ci example bench-reconfig bench-elastic \
+        bench-migration bench-overlap bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
+
+# the concurrency suite (threaded submitters vs async PREPARE commits),
+# with faulthandler armed so a wedged run dumps every thread's stack
+test-stress:
+	PYTHONFAULTHANDLER=1 $(PY) -m pytest -x -q tests/test_concurrent_prepare.py
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_intents.py
@@ -18,8 +23,11 @@ bench-elastic:
 bench-migration:
 	PYTHONPATH=src:. $(PY) benchmarks/live_migration.py
 
+bench-overlap:
+	PYTHONPATH=src:. $(PY) benchmarks/overlap_prepare.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap
 
 docs:
 	$(PY) scripts/run_doc_examples.py

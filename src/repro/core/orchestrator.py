@@ -83,6 +83,7 @@ class Orchestrator:
     def submit(self, text: str,
                hlo_modules: Optional[Dict[str, str]] = None,
                apply_to: Optional[object] = None,
+               async_reconfig: bool = False,
                ) -> OrchestrationResult:
         """Run the six-step loop for one intent.
 
@@ -97,6 +98,13 @@ class Orchestrator:
         (``policy.scale_bounds``) are additionally pinned, so an intent
         like "keep at least two engines for phi traffic" sizes the
         cluster's elastic floor/ceiling for that label.
+
+        With ``async_reconfig`` the runtime step rides the cluster's
+        concurrent-PREPARE path: `submit` returns as soon as the intent
+        is validated and the background compiles are staged, and
+        `result.reports` holds per-engine `PrepareTicket`s whose
+        `DowntimeReport`s finalize when the swaps commit at the cluster's
+        next step boundaries (serving continues throughout).
         """
         timings: Dict[str, float] = {}
 
@@ -145,8 +153,10 @@ class Orchestrator:
         reports: Dict[str, object] = {}
         if applied and apply_to is not None:
             t0 = time.time()
+            kw = {"async_prepare": True} if async_reconfig else {}
             reports = apply_to.apply_policy(policy,
-                                            components=self.components)
+                                            components=self.components,
+                                            **kw)
             timings["reconfigure"] = time.time() - t0
 
         return OrchestrationResult(

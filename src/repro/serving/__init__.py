@@ -21,3 +21,8 @@ from repro.serving.migration import (  # noqa: F401
     MigrationRecord,
     SlotSnapshot,
 )
+from repro.serving.prepare import (  # noqa: F401
+    PrepareCancelled,
+    PrepareTicket,
+    PrepareWorker,
+)

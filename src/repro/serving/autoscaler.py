@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.cluster import DowntimeReport, ServingCluster
 from repro.serving.engine import ServingEngine
+from repro.serving.prepare import FAILED, SWAPPED, PrepareTicket
 from repro.sharding.plan import (
     ShardingPlan,
     merge_restrictions,
@@ -384,10 +385,19 @@ class Autoscaler:
         tracker: load tracker (default `LoadTracker()`).
         bounds: initial per-label (min, max) engine counts; extended by
             `set_bounds` or intent application (`apply_policy`).
+        async_spawn: issue spawns through `spawn_engine_async`, so a
+            scale-up's AOT compile never stalls the tick loop — the new
+            engine joins the pool at a later step boundary. While a
+            label's spawn is in flight, further spawn decisions for it
+            are suppressed (capacity that is already being built is not
+            re-requested every tick). Retire/rebalance stay synchronous:
+            they move no compile work.
 
     Attributes:
         events: ``[(ScaleDecision, DowntimeReport), ...]`` for every
-            executed scale event, in order.
+            executed scale event, in order. With ``async_spawn``, a
+            spawn's entry is appended at the tick that observes its
+            commit.
         trajectory: per-tick ``{label: engine count, "total": n}``
             snapshots (the benchmark's engine-count trajectory).
     """
@@ -396,14 +406,25 @@ class Autoscaler:
                  factory: Callable[[str], ServingEngine], *,
                  policy: Optional[ElasticPolicy] = None,
                  tracker: Optional[LoadTracker] = None,
-                 bounds: Optional[Dict[str, Bounds]] = None):
+                 bounds: Optional[Dict[str, Bounds]] = None,
+                 async_spawn: bool = False):
         self.cluster = cluster
         self.factory = factory
         self.policy = policy or ElasticPolicy()
         self.tracker = tracker or LoadTracker()
         self.bounds: Dict[str, Bounds] = dict(bounds or {})
+        self.async_spawn = async_spawn
         self.events: List[Tuple[ScaleDecision, DowntimeReport]] = []
+        # async spawns whose background PREPARE failed: (decision, error)
+        # — surfaced here instead of silently vanishing from the loop
+        self.failures: List[Tuple[ScaleDecision, BaseException]] = []
         self.trajectory: List[Dict[str, int]] = []
+        # spawn decisions whose background PREPARE is still in flight
+        self._pending: List[Tuple[ScaleDecision, PrepareTicket]] = []
+        # label -> ticks to hold off respawning after a FAILED async
+        # spawn (a deterministic PREPARE failure must not become one
+        # expensive failing background compile per tick, forever)
+        self._spawn_backoff: Dict[str, int] = {}
         self._spawn_seq = 0
 
     # ------------------------------------------------------------------
@@ -419,22 +440,26 @@ class Autoscaler:
             raise ValueError(f"invalid bounds for {label!r}: ({lo}, {hi})")
         self.bounds[label] = (lo, hi)
 
-    def apply_policy(self, policy, components: Sequence = ()
+    def apply_policy(self, policy, components: Sequence = (), *,
+                     async_prepare: bool = False
                      ) -> Dict[str, DowntimeReport]:
         """Intent hook: `Orchestrator.submit(text, apply_to=autoscaler)`.
 
         Installs the compiled policy's per-label scaling bounds
         (``policy.scale_bounds``), then delegates route-constraint
         installation + engine reconfiguration to the underlying cluster's
-        `apply_policy`. Bounds take effect on the next `tick()` — a pinned
+        `apply_policy` (``async_prepare`` rides the concurrent-PREPARE
+        path there). Bounds take effect on the next `tick()` — a pinned
         floor spawns immediately there.
 
         Returns:
-            {engine name: DowntimeReport} for engines the cluster swapped.
+            {engine name: DowntimeReport} for engines the cluster swapped
+            (`PrepareTicket`s when ``async_prepare``).
         """
         for label, (lo, hi) in getattr(policy, "scale_bounds", {}).items():
             self.set_bounds(label, lo, hi)
-        return self.cluster.apply_policy(policy, components=components)
+        return self.cluster.apply_policy(policy, components=components,
+                                         async_prepare=async_prepare)
 
     # ------------------------------------------------------------------
     def _plan_for(self, label: str, base: ShardingPlan) -> ShardingPlan:
@@ -446,18 +471,23 @@ class Autoscaler:
             return base
         return merge_restrictions(base, required)
 
+    def _spawn_name(self, label: str) -> str:
+        """A fresh engine name: skip names already live in the cluster OR
+        reserved by an in-flight async spawn (a previous scaler instance
+        or a manual registration may own them)."""
+        taken = set(self.cluster.engines()) | set(self.cluster.pending_spawns())
+        name = f"{label}-as{self._spawn_seq}"
+        while name in taken:
+            self._spawn_seq += 1
+            name = f"{label}-as{self._spawn_seq}"
+        self._spawn_seq += 1
+        return name
+
     def _execute(self, d: ScaleDecision) -> DowntimeReport:
         if d.kind == "spawn":
             engine = self.factory(d.label)
-            # skip names already live in the cluster (a previous scaler
-            # instance or a manual registration may own them)
-            name = f"{d.label}-as{self._spawn_seq}"
-            while name in self.cluster.engines():
-                self._spawn_seq += 1
-                name = f"{d.label}-as{self._spawn_seq}"
-            self._spawn_seq += 1
             report = self.cluster.spawn_engine(
-                name, engine,
+                self._spawn_name(d.label), engine,
                 plan=self._plan_for(d.label, engine.plan),
                 labels={self.cluster.ROUTE_KEY: d.label},
                 prefill_lengths=self.cluster.label_prompt_lengths(d.label))
@@ -473,6 +503,38 @@ class Autoscaler:
             raise ValueError(f"unknown decision kind {d.kind!r}")
         return report
 
+    def _spawn_async(self, d: ScaleDecision) -> PrepareTicket:
+        """Issue one spawn through the concurrent-PREPARE path: the AOT
+        compile runs on the `PrepareWorker`; the tick loop never waits."""
+        engine = self.factory(d.label)
+        return self.cluster.spawn_engine_async(
+            self._spawn_name(d.label), engine,
+            plan=self._plan_for(d.label, engine.plan),
+            labels={self.cluster.ROUTE_KEY: d.label},
+            prefill_lengths=self.cluster.label_prompt_lengths(d.label))
+
+    def _reap_pending(self) -> None:
+        """Fold committed async spawns into ``events``; a FAILED spawn is
+        recorded in ``failures`` and its label backs off for ``cooldown``
+        ticks (cancelled tickets just drop — no capacity was promised)."""
+        if not self._pending:
+            return
+        self.cluster.commit_ready()        # tick == a safe step boundary
+        keep: List[Tuple[ScaleDecision, PrepareTicket]] = []
+        for d, t in self._pending:
+            if t.state == SWAPPED:
+                self.events.append((d, t.report))
+            elif t.state == FAILED:
+                self.failures.append((d, t.error))
+                self._spawn_backoff[d.label] = max(self.policy.cooldown, 1)
+            elif not t.done():
+                keep.append((d, t))
+        self._pending = keep
+
+    def pending_spawns(self) -> List[ScaleDecision]:
+        """Spawn decisions whose background PREPARE is still in flight."""
+        return [d for d, t in self._pending if not t.done()]
+
     def tick(self, dt: float = 1.0) -> List[ScaleDecision]:
         """One control-loop iteration: observe load, decide, execute.
 
@@ -483,16 +545,32 @@ class Autoscaler:
         Returns:
             The decisions executed this tick (empty most ticks). Every
             executed decision's `DowntimeReport` is appended to
-            ``self.events``; a per-label engine-count snapshot is appended
-            to ``self.trajectory``.
+            ``self.events`` (for async spawns: at the tick observing the
+            commit); a per-label engine-count snapshot is appended to
+            ``self.trajectory``.
         """
+        for label in list(self._spawn_backoff):
+            self._spawn_backoff[label] -= 1
+            if self._spawn_backoff[label] <= 0:
+                del self._spawn_backoff[label]
+        self._reap_pending()
         self.tracker.observe(self.cluster, dt)
         decisions = self.policy.decide(self.tracker, self.cluster,
                                        self.bounds)
+        inflight = {d.label for d, t in self._pending if not t.done()}
+        inflight |= set(self._spawn_backoff)
+        executed: List[ScaleDecision] = []
         for d in decisions:
-            self.events.append((d, self._execute(d)))
+            if d.kind == "spawn" and d.label in inflight:
+                continue      # that capacity is already being prepared
+            if d.kind == "spawn" and self.async_spawn:
+                self._pending.append((d, self._spawn_async(d)))
+                inflight.add(d.label)
+            else:
+                self.events.append((d, self._execute(d)))
+            executed.append(d)
         snap = {label: len(self.cluster.engines_for_label(label))
                 for label in self.tracker.labels() if label != "*"}
         snap["total"] = len(self.cluster.engines())
         self.trajectory.append(snap)
-        return decisions
+        return executed

@@ -16,6 +16,14 @@ This is the runtime the orchestrator programs (ROADMAP north-star layer):
           pool -> install executables — no compilation in this window;
       RESUME.
 
+    PREPARE is truly CONCURRENT with serving: `reconfigure_async` /
+    `spawn_engine_async` return a `PrepareTicket` immediately, the
+    compile runs on the background `PrepareWorker` (repro.serving.prepare)
+    while requests keep flowing, and the swap commits at the next safe
+    step boundary. A newer plan for the same engine supersedes (cancels)
+    the older pending ticket — its executables are never installed. The
+    sync `reconfigure`/`spawn_engine` run the SAME state machine inline.
+
     The returned `DowntimeReport` is finalized automatically: metrics_after
     snapshots at resume and is refreshed with the post-swap completion
     window by the next `run()`/`step()` that retires requests.
@@ -40,6 +48,7 @@ docs/reconfiguration.md for the lifecycle state machine.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -56,6 +65,14 @@ from repro.serving.migration import (
     MigrationRecord,
     migrate_one,
     needed_capacity,
+)
+from repro.serving.prepare import (
+    CANCELLED,
+    FAILED,
+    READY,
+    PrepareTicket,
+    PrepareWorker,
+    default_worker,
 )
 from repro.sharding.plan import (
     ShardingPlan,
@@ -132,6 +149,12 @@ class _EngineEntry:
     # was installed later): the engine is unroutable until a reconfigure
     # passes verification — fail-closed beats serving on a disproven claim
     quarantined: bool = False
+    # the pending-swap state machine (one ticket per engine; a newer plan
+    # supersedes — i.e. cancels — the old ticket before it is applied)
+    pending_ticket: Optional[PrepareTicket] = None
+    # True only inside the blocking SWAP window of a commit; the router
+    # must never choose a mid-swap engine (asserted by the stress tests)
+    swapping: bool = False
 
     # plan and labels read the live engine — one source of truth, so
     # updates after registration are visible to the router
@@ -176,12 +199,40 @@ class ServingCluster:
     # age out and cluster-level aggregates become windowed approximations
     RETIRED_DONE_CAP = 10_000
 
-    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None, *,
+                 prepare_worker: Optional[PrepareWorker] = None):
         self.mesh = mesh or _default_mesh()
         self._entries: Dict[str, _EngineEntry] = {}
         self._routes: Dict[str, ShardingPlan] = {}   # label value -> required
         self.history: List[DowntimeReport] = []
         self.rejected: List[Request] = []
+        # serializes the control plane (routing decisions, swap commits,
+        # registry mutation) against request threads: a submit observes
+        # the cluster strictly before or strictly after a swap, never
+        # mid-window. Reentrant: commits call back into routing helpers.
+        self._lock = threading.RLock()
+        # serializes engine-state surgery (swap commits, KV migration,
+        # queue redistribution) against in-flight decode steps: any of
+        # these may be driven from a control thread (e.g. an autoscaler
+        # loop calling `commit_ready()`/`retire_engine`) while another
+        # thread is inside `step()` — surgery landing mid-decode would
+        # let the step's output clobber freshly migrated state.
+        # Reentrant: a spawn commit redistributes queues under the lock
+        # it already holds. Ordering: _lock is always taken BEFORE
+        # _step_lock, never the reverse.
+        self._step_lock = threading.RLock()
+        # fast-path flag for the per-step commit hook: False until an
+        # async PREPARE is staged, so pure-sync serving never pays the
+        # pending-ticket scan on its hot path
+        self._prepare_dirty = False
+        # background-PREPARE machinery: worker pool (lazily the process
+        # default) + spawn tickets for engines not yet in the registry
+        self._prepare_worker = prepare_worker
+        self._pending_spawns: Dict[str, PrepareTicket] = {}
+        # routing decisions that picked an engine inside its blocking swap
+        # window; structurally 0 (the lock serializes) — the concurrency
+        # stress tests assert it stays that way
+        self.midswap_routes = 0
         # completions of engines that have since been retired — retained so
         # cluster-level metrics never lose traffic to a scale-down
         self._retired_done: List[Request] = []
@@ -218,23 +269,29 @@ class ServingCluster:
                 register-then-constrain order pays nothing).
 
         Raises:
-            ValueError: if ``name`` is already registered, or (fail-closed)
-                the compiled HLO violates an applicable route constraint —
+            ValueError: if ``name`` is already registered (or reserved by
+                an in-flight `spawn_engine_async`), or (fail-closed) the
+                compiled HLO violates an applicable route constraint —
                 the engine is NOT registered in that case.
         """
-        if name in self._entries:
-            raise ValueError(f"engine {name!r} already registered")
-        if plan is not None:
-            engine.plan = plan
-        if labels:
-            engine.labels.update(labels)
-        self._entries[name] = _EngineEntry(name, engine)
-        if verify_hlo:
-            try:
-                self.verify_engine_hlo(name)
-            except ValueError:
-                del self._entries[name]
-                raise
+        with self._lock:
+            self._drop_dead_spawns()
+            if name in self._entries or name in self._pending_spawns:
+                raise ValueError(f"engine {name!r} already registered")
+            if plan is not None:
+                engine.plan = plan
+            if labels:
+                engine.labels.update(labels)
+            # insert + verify atomically: the router must never observe
+            # (and queue onto) an engine whose registration is about to
+            # be rolled back fail-closed
+            self._entries[name] = _EngineEntry(name, engine)
+            if verify_hlo:
+                try:
+                    self.verify_engine_hlo(name)
+                except ValueError:
+                    del self._entries[name]
+                    raise
 
     def verify_engine_hlo(self, name: str, *, hlo_text: Optional[str] = None,
                           mesh_shape: Optional[Sequence[int]] = None,
@@ -300,11 +357,13 @@ class ServingCluster:
 
     def engines(self) -> List[str]:
         """Names of all registered engines (including draining ones)."""
-        return list(self._entries)
+        with self._lock:
+            return list(self._entries)
 
     def draining(self) -> List[str]:
         """Names of engines currently draining toward retirement."""
-        return [n for n, e in self._entries.items() if e.draining]
+        with self._lock:
+            return [n for n, e in self._entries.items() if e.draining]
 
     def route_constraints(self) -> Dict[str, ShardingPlan]:
         """Installed route constraints: label value -> required plan."""
@@ -360,19 +419,21 @@ class ServingCluster:
         """Engines allowed to serve ``req``: tenancy labels must not
         contradict, the engine's plan must satisfy the label's route
         constraint (if any), and the engine must not be draining."""
-        route_val = req.labels.get(self.ROUTE_KEY)
-        required = self._routes.get(route_val) if route_val else None
-        return [e.name for e in self._entries.values()
-                if self._entry_eligible(e, req.labels, required)]
+        with self._lock:
+            route_val = req.labels.get(self.ROUTE_KEY)
+            required = self._routes.get(route_val) if route_val else None
+            return [e.name for e in self._entries.values()
+                    if self._entry_eligible(e, req.labels, required)]
 
     def engines_for_label(self, value: str) -> List[str]:
         """Non-draining engines that could serve traffic labeled
         ``data-type=value`` under the current route constraints (the
         autoscaler's per-label capacity view)."""
-        required = self._routes.get(value)
-        return [e.name for e in self._entries.values()
-                if self._entry_eligible(e, {self.ROUTE_KEY: value},
-                                        required)]
+        with self._lock:
+            required = self._routes.get(value)
+            return [e.name for e in self._entries.values()
+                    if self._entry_eligible(e, {self.ROUTE_KEY: value},
+                                            required)]
 
     def route(self, req: Request) -> str:
         """Pick the least-loaded eligible engine for ``req``.
@@ -386,17 +447,27 @@ class ServingCluster:
             RoutingError: if no engine qualifies (fail-closed); the request
                 is recorded in ``self.rejected``.
         """
-        names = self.eligible(req)
-        if not names:
-            self.rejected.append(req)
-            raise RoutingError(
-                f"no compliant engine for request {req.rid} "
-                f"(labels={req.labels}, constraint="
-                f"{self._routes.get(req.labels.get(self.ROUTE_KEY))!r}) — "
-                "failing closed")
-        running = [n for n in names if not self._entries[n].engine.paused]
-        return min(running or names,
-                   key=lambda n: self._entries[n].engine.load)
+        with self._lock:
+            names = self.eligible(req)
+            if not names:
+                self.rejected.append(req)
+                raise RoutingError(
+                    f"no compliant engine for request {req.rid} "
+                    f"(labels={req.labels}, constraint="
+                    f"{self._routes.get(req.labels.get(self.ROUTE_KEY))!r}) "
+                    "— failing closed")
+            # an engine inside its blocking swap window is avoided while
+            # any alternative exists (queueing on it is still legal — a
+            # paused engine queues — but the lock means this is unreachable
+            # in practice; the counter proves it to the stress tests)
+            avail = [n for n in names if not self._entries[n].swapping]
+            running = [n for n in (avail or names)
+                       if not self._entries[n].engine.paused]
+            chosen = min(running or avail or names,
+                         key=lambda n: self._entries[n].engine.load)
+            if self._entries[chosen].swapping:
+                self.midswap_routes += 1
+            return chosen
 
     def submit(self, req: Request) -> str:
         """Route + enqueue; returns the chosen engine name.
@@ -408,27 +479,30 @@ class ServingCluster:
         Raises:
             RoutingError: if no engine qualifies (fail-closed).
         """
-        value = req.labels.get(self.ROUTE_KEY, "*")
-        self._arrivals[value] = self._arrivals.get(value, 0) + 1
-        self._length_seq += 1
-        self._label_lengths.setdefault(value, {})[len(req.prompt)] = \
-            self._length_seq
-        name = self.route(req)
-        self._entries[name].engine.submit(req)
-        return name
+        with self._lock:
+            value = req.labels.get(self.ROUTE_KEY, "*")
+            self._arrivals[value] = self._arrivals.get(value, 0) + 1
+            self._length_seq += 1
+            self._label_lengths.setdefault(value, {})[len(req.prompt)] = \
+                self._length_seq
+            name = self.route(req)
+            self._entries[name].engine.submit(req)
+            return name
 
     def arrivals(self) -> Dict[str, int]:
         """Cumulative per-label submission counts (``"*"`` = unlabeled),
         including fail-closed rejections. The `LoadTracker` differences
         these to form arrival rates."""
-        return dict(self._arrivals)
+        with self._lock:
+            return dict(self._arrivals)
 
     def label_prompt_lengths(self, value: str,
                              cap: int = ServingEngine.MAX_AOT_PREFILL
                              ) -> List[int]:
         """Most recently seen distinct prompt lengths for a label (at most
         ``cap``), for AOT-compiling a spawned engine against live shapes."""
-        seen = self._label_lengths.get(value, {})
+        with self._lock:
+            seen = dict(self._label_lengths.get(value, {}))
         recent = sorted(seen, key=seen.get)[-cap:]
         return sorted(recent)
 
@@ -439,31 +513,55 @@ class ServingCluster:
         """One decode step across all running engines (draining engines
         keep stepping — they must serve out their queues). Returns the
         number of active engine-steps; reaps any engine that finished
-        draining."""
+        draining.
+
+        A step is the SAFE BOUNDARY of the concurrent-PREPARE state
+        machine: any pending swap whose background compile has finished
+        (ticket READY) is committed here, before the engines step."""
+        self._commit_ready()
         n = 0
-        for e in list(self._entries.values()):
-            if not e.engine.paused:
-                n += e.engine.step()
-        self._reap_drained()
+        with self._step_lock:     # a commit never lands mid-decode
+            for e in list(self._entries.values()):
+                if not e.engine.paused:
+                    n += e.engine.step()
+        with self._lock:
+            self._reap_drained()
         return n
 
-    def run(self, max_steps: int = 10_000) -> None:
+    def run(self, max_steps: int = 10_000, *,
+            wait_pending: bool = False) -> None:
         """Serve until every *running* engine's queue and slots are empty.
 
         Work queued on a paused engine stays queued (nothing is dropped)
         and is served by the `run()` after that engine's `resume()`.
         Draining engines are stepped until empty, then reaped. Pending
-        `DowntimeReport`s are re-finalized with the post-swap window."""
-        for _ in range(max_steps):
+        `DowntimeReport`s are re-finalized with the post-swap window.
+
+        Args:
+            max_steps: decode-step budget (idle waiting does not count).
+            wait_pending: also wait for in-flight background PREPAREs —
+                the loop keeps serving while the worker compiles and only
+                returns once every pending ticket reached a terminal
+                state (its swap committed at a step boundary)."""
+        steps = 0
+        while steps < max_steps:
+            with self._lock:   # registry may be mutated by a commit
+                entries = list(self._entries.values())
             busy = any(
                 e.engine.queue or any(r is not None
                                       for r in e.engine.slot_req)
-                for e in self._entries.values() if not e.engine.paused)
-            if not busy:
+                for e in entries if not e.engine.paused)
+            if busy:
+                self.step()                # commits READY swaps itself
+                steps += 1
+            elif wait_pending and self.prepare_pending():
+                time.sleep(0.001)          # idle but a compile is in flight
+                self._commit_ready()
+            else:
                 break
-            self.step()
-        self._reap_drained()
-        self._refresh_reports()
+        with self._lock:
+            self._reap_drained()
+            self._refresh_reports()
 
     def metrics(self, name: Optional[str] = None) -> Dict[str, float]:
         """TTFT/TPOT summary (full `METRIC_KEYS` set, NaN when undefined).
@@ -479,18 +577,20 @@ class ServingCluster:
         """
         if name is not None:
             return self._entries[name].engine.metrics()
-        done: List[Request] = list(self._retired_done)
-        for e in self._entries.values():
-            done.extend(e.engine.done)
+        with self._lock:
+            done: List[Request] = list(self._retired_done)
+            for e in self._entries.values():
+                done.extend(e.engine.done)
         return compute_metrics(done)
 
     def _known_labels(self, extra: Sequence[str] = ()) -> set:
-        vals = set(extra) | set(self._routes) | set(self._arrivals)
-        for e in self._entries.values():
-            v = e.labels.get(self.ROUTE_KEY)
-            if v:
-                vals.add(v)
-        return vals
+        with self._lock:
+            vals = set(extra) | set(self._routes) | set(self._arrivals)
+            for e in self._entries.values():
+                v = e.labels.get(self.ROUTE_KEY)
+                if v:
+                    vals.add(v)
+            return vals
 
     def metrics_by_label(self, extra_labels: Sequence[str] = ()
                          ) -> Dict[str, Dict[str, float]]:
@@ -502,9 +602,10 @@ class ServingCluster:
         so the `LoadTracker` can index unconditionally. Unlabeled traffic
         aggregates under ``"*"``.
         """
-        done: List[Request] = list(self._retired_done)
-        for e in self._entries.values():
-            done.extend(e.engine.done)
+        with self._lock:
+            done: List[Request] = list(self._retired_done)
+            for e in self._entries.values():
+                done.extend(e.engine.done)
         groups: Dict[str, List[Request]] = {}
         for r in done:
             groups.setdefault(r.labels.get(self.ROUTE_KEY, "*"), []).append(r)
@@ -516,23 +617,132 @@ class ServingCluster:
         """Queued + resident request counts per label across all engines
         (zero-filled over the same label universe as `metrics_by_label`)."""
         out: Dict[str, int] = {v: 0 for v in self._known_labels(extra_labels)}
-        for e in self._entries.values():
-            live = list(e.engine.queue) + [r for r in e.engine.slot_req
-                                           if r is not None]
-            for r in live:
-                v = r.labels.get(self.ROUTE_KEY, "*")
-                out[v] = out.get(v, 0) + 1
+        with self._lock:
+            for e in self._entries.values():
+                live = list(e.engine.queue) + [r for r in e.engine.slot_req
+                                               if r is not None]
+                for r in live:
+                    v = r.labels.get(self.ROUTE_KEY, "*")
+                    out[v] = out.get(v, 0) + 1
         return out
 
     # ------------------------------------------------------------------
     # online reconfiguration (compile-ahead + blocking swap)
+    #
+    # One pending-swap state machine serves every caller: the sync paths
+    # (`reconfigure`, `spawn_engine`, `rebalance`, `apply_policy`) stage
+    # a ticket, run PREPARE inline and commit immediately; the async
+    # paths (`reconfigure_async`, `spawn_engine_async`) hand PREPARE to
+    # the `PrepareWorker` and the swap commits at the next safe step
+    # boundary (`step()` / `run()` / `commit_ready()`).
     # ------------------------------------------------------------------
+    def _worker(self) -> PrepareWorker:
+        if self._prepare_worker is None:
+            self._prepare_worker = default_worker()
+        return self._prepare_worker
+
+    def _prepare_closure(self, engine: ServingEngine, plan: ShardingPlan,
+                         lengths: Sequence[int], prefill_buckets: bool,
+                         shardings: Optional[Dict[str, Any]] = None,
+                         warm: Optional[Any] = None):
+        """THE PREPARE body (one copy for reconfigure and spawn): run the
+        optional out-of-process warmer, materialize shardings, AOT-compile
+        — returns the payload dict `_commit_ticket` installs."""
+        def _prepare() -> Dict[str, Any]:
+            if warm is not None:
+                warm()
+            sh = shardings
+            if sh is None:
+                sh = plan_to_shardings(
+                    engine.model.cfg, plan, self.mesh,
+                    n_slots=engine.n_slots)
+            executables, n_compiled = engine.aot_executables(
+                sh, prefill_lengths=lengths,
+                prefill_buckets=prefill_buckets)
+            return {"shardings": sh, "executables": executables,
+                    "n_compiled": n_compiled}
+        return _prepare
+
+    def _stage_reconfigure(self, name: str, plan: ShardingPlan, *,
+                           shardings: Optional[Dict[str, Any]],
+                           prefill_lengths: Sequence[int],
+                           prefill_buckets: bool,
+                           inline: bool,
+                           warm: Optional[Any] = None) -> PrepareTicket:
+        """Create the pending-swap ticket for an engine (superseding any
+        older pending ticket) and start its PREPARE."""
+        with self._lock:
+            entry = self._entries[name]
+            if entry.draining:
+                raise ValueError(f"engine {name!r} is draining — a "
+                                 "retiring engine cannot be reconfigured")
+            eng = entry.engine
+            # snapshot on THIS thread: the worker must never iterate the
+            # live seen-lengths dict while request threads mutate it
+            lengths = tuple(prefill_lengths) or eng.recent_prompt_lengths()
+            ticket = PrepareTicket(name, "reconfigure", plan)
+            if entry.pending_ticket is not None:
+                # a newer plan supersedes the old pending swap — its
+                # executables (finished or not) are never installed
+                entry.pending_ticket.cancel(superseded_by=ticket)
+            entry.pending_ticket = ticket
+            self._prepare_dirty = True
+        prepare = self._prepare_closure(eng, plan, lengths, prefill_buckets,
+                                        shardings=shardings, warm=warm)
+        if inline:
+            PrepareWorker.run_inline(ticket, prepare)
+        else:
+            self._worker().submit(ticket, prepare)
+        return ticket
+
+    def reconfigure_async(self, name: str, plan: ShardingPlan, *,
+                          shardings: Optional[Dict[str, Any]] = None,
+                          prefill_lengths: Sequence[int] = (),
+                          prefill_buckets: bool = False,
+                          warm: Optional[Any] = None,
+                          ) -> PrepareTicket:
+        """Swap a live engine onto ``plan`` WITHOUT blocking the caller:
+        PREPARE runs on the background `PrepareWorker` while serving
+        continues, and the blocking SWAP commits at the next safe step
+        boundary after the compile finishes.
+
+        If the engine already has a pending (uncommitted) swap, the older
+        ticket is CANCELLED — superseded by this one — and its
+        executables are never installed.
+
+        Args: as `reconfigure`, plus:
+            warm: optional zero-arg callable the worker runs BEFORE the
+                in-process compile. On accelerator hosts compilation is
+                host-side work and never contends with device decode; on
+                CPU-only hosts pass a warmer that compiles the same
+                modules in a SUBPROCESS against JAX's persistent
+                compilation cache, so the in-process compile (which must
+                hold the GIL through tracing/lowering) becomes a cheap
+                cache hit — see benchmarks/overlap_prepare.py for the
+                worked pattern.
+
+        Returns:
+            The `PrepareTicket`; poll ``ticket.done()`` while stepping
+            (or ``cluster.run(wait_pending=True)``), then
+            ``ticket.result()`` for the `DowntimeReport`.
+
+        Raises:
+            KeyError: if ``name`` is not registered.
+            ValueError: if the engine is draining toward retirement.
+        """
+        return self._stage_reconfigure(
+            name, plan, shardings=shardings,
+            prefill_lengths=prefill_lengths,
+            prefill_buckets=prefill_buckets, inline=False, warm=warm)
+
     def reconfigure(self, name: str, plan: ShardingPlan, *,
                     shardings: Optional[Dict[str, Any]] = None,
                     prefill_lengths: Sequence[int] = (),
                     prefill_buckets: bool = False,
                     ) -> DowntimeReport:
-        """Swap a live engine onto ``plan`` (PREPARE / SWAP / RESUME).
+        """Swap a live engine onto ``plan`` (PREPARE / SWAP / RESUME),
+        blocking until the swap committed (the async path is
+        `reconfigure_async`; both run the same state machine).
 
         Args:
             name: the engine to reconfigure.
@@ -551,74 +761,314 @@ class ServingCluster:
         Raises:
             KeyError: if ``name`` is not registered.
             ValueError: if the engine is draining toward retirement — a
-                retiring engine never pays a swap window.
+                retiring engine never pays a swap window — or the
+                post-swap compiled-HLO verification failed (the engine
+                is quarantined, fail-closed).
+            PrepareCancelled: a concurrent caller superseded this swap
+                (issued a newer plan) or retired the engine before the
+                commit — nothing was installed.
         """
-        entry = self._entries[name]
-        if entry.draining:
-            raise ValueError(f"engine {name!r} is draining — a retiring "
-                             "engine cannot be reconfigured")
-        eng = entry.engine
-        # a still-pending previous report gets its honest final window now
-        # (possibly empty — completed=0/NaN — if no traffic ran under it),
-        # rather than being silently dropped by the overwrite below
-        self._finalize_pending(entry)
-        # window since the previous swap (everything, on the first one), so
-        # repeated reconfigurations compare like-for-like traffic windows
-        metrics_before = compute_metrics(
-            [r for r in eng.done if r.t_done >= entry.swap_t])
-
-        # ---- 1. PREPARE (background — serving continues) ----
-        t0 = time.time()
-        if shardings is None:
-            shardings = plan_to_shardings(
-                eng.model.cfg, plan, self.mesh, n_slots=eng.n_slots)
-        executables, n_compiled = eng.aot_executables(
-            shardings, prefill_lengths=prefill_lengths,
-            prefill_buckets=prefill_buckets)
-        prepare_s = time.time() - t0
-
-        # ---- 2. SWAP (blocking window — no compilation here) ----
-        t0 = time.time()
-        eng.pause()
-        try:
-            eng.drain()
-            migrate_bytes = eng.swap_plan(plan, shardings=shardings,
-                                          executables=executables)
-        finally:
-            # a failed swap must never strand the engine paused — traffic
-            # routed to it would otherwise sit queued with no error
-            eng.resume()
-        downtime_s = time.time() - t0
-
-        # ---- 3. RESUME + auto-finalized report ----
-        report = DowntimeReport(
-            prepare_s=prepare_s, downtime_s=downtime_s,
-            migrate_bytes=migrate_bytes,
-            metrics_before=metrics_before,
-            # auto-finalized to the empty post-swap window (full key set);
-            # _refresh_reports replaces it with real post-swap traffic
-            metrics_after=compute_metrics([]),
-            engine=name, compiled_in_prepare=n_compiled)
-        entry.pending_report = report
-        entry.swap_t = time.time()
-        self.history.append(report)
-
-        # the freshly installed executable must prove whatever route
-        # constraints the new plan claims (clears a quarantine on pass;
-        # quarantines on failure — fail-closed, the plan stays installed
-        # but the router skips the engine). The report above is recorded
-        # either way: the blocking window was really paid.
-        try:
-            self.verify_engine_hlo(name)
-        except ValueError:
-            entry.quarantined = True
-            raise
-        entry.quarantined = False
+        ticket = self._stage_reconfigure(
+            name, plan, shardings=shardings,
+            prefill_lengths=prefill_lengths,
+            prefill_buckets=prefill_buckets, inline=True)
+        if ticket.state == FAILED:         # PREPARE raised: propagate as-is
+            with self._lock:
+                entry = self._entries.get(name)
+                if entry is not None and entry.pending_ticket is ticket:
+                    entry.pending_ticket = None
+            raise ticket.error
+        report = self._commit_ticket(ticket)
+        if report is None:
+            # superseded/cancelled (result() raises PrepareCancelled), or
+            # a concurrently stepping thread won the commit race — then
+            # result() returns that thread's report, re-raising any
+            # post-swap verification failure it recorded (fail-closed,
+            # same contract as the direct-commit path above)
+            report = ticket.result()
         return report
+
+    def _commit_ticket(self, ticket: PrepareTicket
+                       ) -> Optional[DowntimeReport]:
+        """Commit one READY ticket's blocking swap; returns None when the
+        ticket is not READY (or its target vanished, abandoning it).
+
+        Raises:
+            ValueError: the post-swap compiled-HLO verification failed —
+                the swap WAS paid and its report recorded, but the engine
+                is quarantined (fail-closed routing). For a spawn the
+                engine is rolled back out of the pool instead and the
+                ticket marked FAILED.
+        """
+        payload = ticket._take_for_commit()
+        if payload is None:
+            return None
+        if ticket.kind == "spawn":
+            return self._commit_spawn(ticket, payload)
+        with self._lock:
+            entry = self._entries.get(ticket.engine)
+            if (entry is None or entry.draining
+                    or entry.pending_ticket is not ticket):
+                ticket._abandon()          # retired/superseded meanwhile
+                return None
+            eng = entry.engine
+            # a still-pending previous report gets its honest final window
+            # now (possibly empty) rather than being silently dropped
+            self._finalize_pending(entry)
+            # window since the previous swap (everything, on the first),
+            # so repeated reconfigurations compare like-for-like windows
+            metrics_before = compute_metrics(
+                [r for r in eng.done if r.t_done >= entry.swap_t])
+
+            # ---- SWAP (blocking window — no compilation here) ----
+            entry.swapping = True
+            t0 = time.time()
+            try:
+                with self._step_lock:   # never lands mid-decode-step
+                    eng.pause()
+                    try:
+                        eng.drain()
+                        migrate_bytes = eng.swap_plan(
+                            ticket.plan, shardings=payload["shardings"],
+                            executables=payload["executables"])
+                    finally:
+                        # a failed swap must never strand the engine
+                        # paused — traffic routed to it would otherwise
+                        # sit queued forever
+                        eng.resume()
+            except BaseException as err:
+                # a failed install must never wedge the state machine:
+                # the ticket fails (result() re-raises this), the engine
+                # keeps serving under its old plan/executables
+                entry.pending_ticket = None
+                ticket._commit_failed(err)
+                raise
+            finally:
+                entry.swapping = False
+            downtime_s = time.time() - t0
+
+            # ---- RESUME + auto-finalized report ----
+            report = DowntimeReport(
+                prepare_s=ticket.prepare_s, downtime_s=downtime_s,
+                migrate_bytes=migrate_bytes,
+                metrics_before=metrics_before,
+                # auto-finalized to the empty post-swap window (full key
+                # set); _refresh_reports swaps in real post-swap traffic
+                metrics_after=compute_metrics([]),
+                engine=ticket.engine, compiled_in_prepare=payload["n_compiled"])
+            entry.pending_report = report
+            entry.swap_t = time.time()
+            entry.pending_ticket = None
+            self.history.append(report)
+
+            # the freshly installed executable must prove whatever route
+            # constraints the new plan claims (clears a quarantine on
+            # pass; quarantines on failure — fail-closed, the plan stays
+            # installed but the router skips the engine). The report is
+            # recorded either way: the blocking window was really paid.
+            # Verified BEFORE the ticket wakes its waiters, so a racing
+            # caller can never observe SWAPPED with the error still unset.
+            verify_error: Optional[ValueError] = None
+            try:
+                self.verify_engine_hlo(ticket.engine)
+                entry.quarantined = False
+            except ValueError as err:
+                entry.quarantined = True
+                ticket.error = err
+                verify_error = err
+            ticket._committed(report)
+            if verify_error is not None:
+                raise verify_error
+            return report
+
+    def _commit_ready(self) -> List[DowntimeReport]:
+        """Commit every READY pending swap (the safe-step-boundary hook
+        `step()`/`run()` call). Terminal leftovers (cancelled/failed
+        tickets) are unlinked. Verification failures quarantine the
+        engine and are recorded on the ticket, never raised here — the
+        serving loop must keep turning."""
+        if not self._prepare_dirty:        # pure-sync serving: free
+            return []
+        out: List[DowntimeReport] = []
+        with self._lock:
+            pending = [(e, e.pending_ticket)
+                       for e in list(self._entries.values())
+                       if e.pending_ticket is not None]
+            spawns = list(self._pending_spawns.items())
+            if not pending and not spawns:
+                self._prepare_dirty = False
+                return []
+        for entry, t in pending:
+            if t.state in (CANCELLED, FAILED):
+                with self._lock:
+                    if entry.pending_ticket is t:
+                        entry.pending_ticket = None
+            elif t.state == READY:
+                try:
+                    report = self._commit_ticket(t)
+                except Exception:
+                    # recorded on the ticket: either FAILED (install
+                    # error — report stays None) or SWAPPED + quarantined
+                    # (verify failure after a really-paid window)
+                    report = t.report
+                if report is not None:
+                    out.append(report)
+        for name, t in spawns:
+            if t.state in (CANCELLED, FAILED):
+                with self._lock:
+                    if self._pending_spawns.get(name) is t:
+                        del self._pending_spawns[name]
+            elif t.state == READY:
+                try:
+                    report = self._commit_ticket(t)
+                except Exception:
+                    report = None          # rolled back; ticket FAILED
+                if report is not None:
+                    out.append(report)
+        return out
+
+    def commit_ready(self) -> List[DowntimeReport]:
+        """Public step-boundary hook: commit every pending swap whose
+        background PREPARE has finished. Returns the committed reports
+        (usually empty — `step()`/`run()` already call this)."""
+        return self._commit_ready()
+
+    def prepare_pending(self) -> List[PrepareTicket]:
+        """Tickets still in flight (PREPARING or READY-but-uncommitted),
+        reconfigures and spawns alike. Empty == nothing pending."""
+        with self._lock:
+            out = [e.pending_ticket for e in self._entries.values()
+                   if e.pending_ticket is not None
+                   and not e.pending_ticket.done()]
+            out.extend(t for t in self._pending_spawns.values()
+                       if not t.done())
+            return out
 
     # ------------------------------------------------------------------
     # elastic lifecycle (spawn / retire / rebalance) — autoscaler hooks
     # ------------------------------------------------------------------
+    def _stage_spawn(self, name: str, engine: ServingEngine, *,
+                     plan: Optional[ShardingPlan],
+                     labels: Optional[Dict[str, str]],
+                     prefill_lengths: Sequence[int],
+                     prefill_buckets: bool,
+                     inline: bool,
+                     warm: Optional[Any] = None) -> PrepareTicket:
+        with self._lock:
+            self._drop_dead_spawns()
+            if name in self._entries or name in self._pending_spawns:
+                raise ValueError(f"engine {name!r} already registered")
+            if plan is not None:
+                engine.plan = plan
+            if labels:
+                engine.labels.update(labels)
+            ticket = PrepareTicket(name, "spawn", engine.plan,
+                                   engine_obj=engine)
+            self._pending_spawns[name] = ticket
+            self._prepare_dirty = True
+        prepare = self._prepare_closure(engine, engine.plan,
+                                        tuple(prefill_lengths),
+                                        prefill_buckets, warm=warm)
+        if inline:
+            PrepareWorker.run_inline(ticket, prepare)
+        else:
+            self._worker().submit(ticket, prepare)
+        return ticket
+
+    def _commit_spawn(self, ticket: PrepareTicket,
+                      payload: Dict[str, Any]) -> Optional[DowntimeReport]:
+        """Install a READY spawn and join it to the routing pool."""
+        with self._lock:
+            name = ticket.engine
+            if self._pending_spawns.get(name) is not ticket \
+                    or name in self._entries:
+                ticket._abandon()          # cancelled/replaced meanwhile
+                return None
+            engine: ServingEngine = ticket._engine_obj
+
+            # ---- install + join the routing pool ----
+            # under the step lock: joining the pool redistributes queued
+            # work across live engines, which must not interleave with a
+            # decode step admitting from those same queues
+            t0 = time.time()
+            with self._step_lock:
+                engine.pause()
+                try:
+                    migrate_bytes = engine.swap_plan(
+                        engine.plan, shardings=payload["shardings"],
+                        executables=payload["executables"])
+                except BaseException as err:
+                    # never wedge the state machine on a failed install:
+                    # the spawn fails (result() re-raises), nothing
+                    # joined the pool
+                    del self._pending_spawns[name]
+                    ticket._commit_failed(err)
+                    raise
+                finally:
+                    engine.resume()
+                entry = _EngineEntry(name, engine)
+                self._entries[name] = entry
+                try:
+                    # the compiled artifact (already in hand from
+                    # PREPARE) must prove the route constraints its plan
+                    # claims
+                    self.verify_engine_hlo(name)
+                except ValueError as err:
+                    del self._entries[name]
+                    del self._pending_spawns[name]
+                    ticket._commit_failed(err)
+                    raise
+                downtime_s = time.time() - t0
+
+                report = DowntimeReport(
+                    prepare_s=ticket.prepare_s, downtime_s=downtime_s,
+                    migrate_bytes=migrate_bytes,
+                    metrics_before=compute_metrics([]),
+                    metrics_after=compute_metrics([]),
+                    engine=name, compiled_in_prepare=payload["n_compiled"],
+                    event="spawn")
+                entry.pending_report = report
+                entry.swap_t = time.time()
+                del self._pending_spawns[name]
+                self.history.append(report)
+                ticket._committed(report)
+                # new capacity takes its share of the backlog at once
+                if engine.labels.get(self.ROUTE_KEY):
+                    self.redistribute_queued(engine.labels[self.ROUTE_KEY])
+                else:
+                    for value in self._known_labels():
+                        self.redistribute_queued(value)
+            return report
+
+    def spawn_engine_async(self, name: str, engine: ServingEngine, *,
+                           plan: Optional[ShardingPlan] = None,
+                           labels: Optional[Dict[str, str]] = None,
+                           prefill_lengths: Sequence[int] = (),
+                           prefill_buckets: bool = False,
+                           warm: Optional[Any] = None,
+                           ) -> PrepareTicket:
+        """Bring a NEW engine online WITHOUT blocking the caller: its
+        PREPARE-phase AOT compile runs on the background `PrepareWorker`
+        and the engine joins the routing pool at the next safe step
+        boundary after the compile finishes (a scale-up never stalls the
+        tick loop). Until then the engine is invisible to routing; the
+        reserved name is listed by `pending_spawns`.
+
+        Args: as `spawn_engine`; ``warm`` as in `reconfigure_async` (the
+        out-of-process compile-cache warmer for CPU-only hosts).
+
+        Returns:
+            The `PrepareTicket` (``kind="spawn"``); ``ticket.result()``
+            is the spawn's `DowntimeReport` once committed.
+
+        Raises:
+            ValueError: ``name`` is registered or already pending.
+        """
+        return self._stage_spawn(
+            name, engine, plan=plan, labels=labels,
+            prefill_lengths=prefill_lengths,
+            prefill_buckets=prefill_buckets, inline=False, warm=warm)
+
     def spawn_engine(self, name: str, engine: ServingEngine, *,
                      plan: Optional[ShardingPlan] = None,
                      labels: Optional[Dict[str, str]] = None,
@@ -632,6 +1082,8 @@ class ServingCluster:
         BEFORE it joins the routing pool — a spawned engine never JITs on
         the serving path. Existing engines keep serving throughout; the
         report's ``downtime_s`` only covers the spawn's own install window.
+        (`spawn_engine_async` is the non-blocking variant; both run the
+        same pending-swap state machine.)
 
         Args:
             name: unique engine name.
@@ -656,57 +1108,34 @@ class ServingCluster:
                 constraint (`verify_engine_hlo` — the spawn is rolled
                 back).
         """
-        if name in self._entries:
-            raise ValueError(f"engine {name!r} already registered")
-        if plan is not None:
-            engine.plan = plan
-        if labels:
-            engine.labels.update(labels)
-
-        # ---- PREPARE (cluster keeps serving; the new engine is offline) ----
-        t0 = time.time()
-        shardings = plan_to_shardings(
-            engine.model.cfg, engine.plan, self.mesh, n_slots=engine.n_slots)
-        executables, n_compiled = engine.aot_executables(
-            shardings, prefill_lengths=prefill_lengths,
-            prefill_buckets=prefill_buckets)
-        prepare_s = time.time() - t0
-
-        # ---- install + join the routing pool ----
-        t0 = time.time()
-        engine.pause()
-        try:
-            migrate_bytes = engine.swap_plan(
-                engine.plan, shardings=shardings, executables=executables)
-        finally:
-            engine.resume()
-        entry = _EngineEntry(name, engine)
-        self._entries[name] = entry
-        try:
-            # the compiled artifact (already in hand from PREPARE) must
-            # prove the route constraints its plan claims to satisfy
-            self.verify_engine_hlo(name)
-        except ValueError:
-            del self._entries[name]
-            raise
-        downtime_s = time.time() - t0
-
-        report = DowntimeReport(
-            prepare_s=prepare_s, downtime_s=downtime_s,
-            migrate_bytes=migrate_bytes,
-            metrics_before=compute_metrics([]),
-            metrics_after=compute_metrics([]),
-            engine=name, compiled_in_prepare=n_compiled, event="spawn")
-        entry.pending_report = report
-        entry.swap_t = time.time()
-        self.history.append(report)
-        # new capacity takes its share of the existing backlog at once
-        if engine.labels.get(self.ROUTE_KEY):
-            self.redistribute_queued(engine.labels[self.ROUTE_KEY])
-        else:
-            for value in self._known_labels():
-                self.redistribute_queued(value)
+        ticket = self._stage_spawn(
+            name, engine, plan=plan, labels=labels,
+            prefill_lengths=prefill_lengths,
+            prefill_buckets=prefill_buckets, inline=True)
+        if ticket.state == FAILED:         # PREPARE raised: propagate as-is
+            with self._lock:
+                if self._pending_spawns.get(name) is ticket:
+                    del self._pending_spawns[name]
+            raise ticket.error
+        report = self._commit_ticket(ticket)
+        if report is None:                 # cancelled before our commit
+            return ticket.result()         # raises PrepareCancelled
         return report
+
+    def _drop_dead_spawns(self) -> None:
+        """Unlink CANCELLED/FAILED spawn reservations (requires _lock):
+        a failed spawn must not squat on its name until the next step
+        boundary happens to sweep it."""
+        for n, t in list(self._pending_spawns.items()):
+            if t.state in (CANCELLED, FAILED):
+                del self._pending_spawns[n]
+
+    def pending_spawns(self) -> List[str]:
+        """Names reserved by in-flight `spawn_engine_async` tickets (the
+        engines are NOT yet in the routing pool)."""
+        with self._lock:
+            self._drop_dead_spawns()
+            return list(self._pending_spawns)
 
     def migrate_requests(self, src: str, dst: str,
                          rids: Optional[Sequence[int]] = None
@@ -750,6 +1179,12 @@ class ServingCluster:
         """
         if src == dst:
             raise ValueError("source and destination are the same engine")
+        with self._lock:
+            return self._migrate_locked(src, dst, rids)
+
+    def _migrate_locked(self, src: str, dst: str,
+                        rids: Optional[Sequence[int]]
+                        ) -> List[MigrationRecord]:
         se, de = self._entries[src], self._entries[dst]
         if de.draining:
             raise ValueError(f"destination {dst!r} is draining — a "
@@ -794,17 +1229,23 @@ class ServingCluster:
                 f"{de.engine.free_slots} free — failing closed, nothing "
                 "moved")
         # ---- transfer
-        # compile-ahead: the pool-surgery ops must already be warm when
-        # the per-request pause clock starts (nothing compiles inside it)
-        se.engine.warm_migration()
-        de.engine.warm_migration()
-        # device barrier: pending decode work on either side must retire
-        # before export — waiting for it is drain cost (counted by the
-        # caller's blocking window), not per-request transfer cost
-        se.engine.drain()
-        de.engine.drain()
-        return [migrate_one(se.engine, de.engine, rid, src=src, dst=dst)
-                for rid in rids]
+        # under the step lock: KV surgery must never interleave with a
+        # decode step writing the same pools from the serving thread
+        with self._step_lock:
+            # compile-ahead: the pool-surgery ops must already be warm
+            # when the per-request pause clock starts (nothing compiles
+            # inside it)
+            se.engine.warm_migration()
+            de.engine.warm_migration()
+            # device barrier: pending decode work on either side must
+            # retire before export — waiting for it is drain cost
+            # (counted by the caller's blocking window), not per-request
+            # transfer cost
+            se.engine.drain()
+            de.engine.drain()
+            return [migrate_one(se.engine, de.engine, rid, src=src,
+                                dst=dst)
+                    for rid in rids]
 
     def _relocate_for_retirement(self, entry: _EngineEntry
                                  ) -> List[MigrationRecord]:
@@ -890,9 +1331,18 @@ class ServingCluster:
         if mode not in ("drain", "migrate"):
             raise ValueError(f"unknown retirement mode {mode!r} "
                              "(expected 'drain' or 'migrate')")
+        with self._lock:
+            return self._retire_locked(name, mode)
+
+    def _retire_locked(self, name: str, mode: str) -> DowntimeReport:
         entry = self._entries[name]
         if entry.draining:
             raise ValueError(f"engine {name!r} is already draining")
+        if entry.pending_ticket is not None:
+            # a retiring engine never swaps: the pending background
+            # PREPARE is cancelled and its executables never installed
+            entry.pending_ticket.cancel()
+            entry.pending_ticket = None
         if entry.engine.paused:
             entry.engine.resume()
         self._finalize_pending(entry)
@@ -919,7 +1369,11 @@ class ServingCluster:
                     e.engine.warm_migration()
             t0 = time.perf_counter()
             records = self._relocate_for_retirement(entry)
-            downtime_s = time.perf_counter() - t0
+            # honest accounting: when nothing could legally move (zero
+            # eligible peers) the retirement falls back to pure draining,
+            # which never blocks anyone — downtime is 0, not the cost of
+            # discovering there was nowhere to go
+            downtime_s = time.perf_counter() - t0 if records else 0.0
         report = DowntimeReport(
             prepare_s=0.0, downtime_s=downtime_s,
             migrate_bytes=sum(m.bytes_moved for m in records),
@@ -969,35 +1423,40 @@ class ServingCluster:
         Returns:
             The number of requests moved through the router.
         """
-        moved: List[Tuple[_EngineEntry, Request]] = []
-        for e in self._entries.values():
-            keep: List[Request] = []
-            for r in e.engine.queue:
-                if r.labels.get(self.ROUTE_KEY, "*") == value:
-                    moved.append((e, r))
-                else:
-                    keep.append(r)
-            e.engine.queue[:] = keep
-        for src, r in moved:
-            try:
-                name = self.route(r)
-            except RoutingError:
-                self.rejected.pop()      # a requeue miss is not a rejection
-                src.engine.queue.append(r)
-                continue
-            dest = self._entries[name].engine
-            # the destination must learn the prompt length, or a later
-            # default-lengths reconfigure would omit it from the AOT set
-            # and JIT prefill on the serving path
-            dest.note_prompt_length(len(r.prompt))
-            dest.queue.append(r)
-        return len(moved)
+        # both locks: queue surgery must not race request threads'
+        # submits (_lock) nor a decode step admitting from the same
+        # queues on the serving thread (_step_lock)
+        with self._lock, self._step_lock:
+            moved: List[Tuple[_EngineEntry, Request]] = []
+            for e in self._entries.values():
+                keep: List[Request] = []
+                for r in e.engine.queue:
+                    if r.labels.get(self.ROUTE_KEY, "*") == value:
+                        moved.append((e, r))
+                    else:
+                        keep.append(r)
+                e.engine.queue[:] = keep
+            for src, r in moved:
+                try:
+                    name = self.route(r)
+                except RoutingError:
+                    self.rejected.pop()  # a requeue miss is no rejection
+                    src.engine.queue.append(r)
+                    continue
+                dest = self._entries[name].engine
+                # the destination must learn the prompt length, or a
+                # later default-lengths reconfigure would omit it from
+                # the AOT set and JIT prefill on the serving path
+                dest.note_prompt_length(len(r.prompt))
+                dest.queue.append(r)
+            return len(moved)
 
     def pending_reports(self) -> List[str]:
         """Engine names whose latest `DowntimeReport` still awaits its
         post-event traffic window (empty list == all reports finalized)."""
-        return [n for n, e in self._entries.items()
-                if e.pending_report is not None]
+        with self._lock:
+            return [n for n, e in self._entries.items()
+                    if e.pending_report is not None]
 
     def _finalize_pending(self, entry: _EngineEntry) -> None:
         """Close an entry's pending report with its honest final window
@@ -1038,7 +1497,8 @@ class ServingCluster:
     # ------------------------------------------------------------------
     # intent application (called by Orchestrator.submit(apply_to=...))
     # ------------------------------------------------------------------
-    def apply_policy(self, policy, components: Sequence = ()
+    def apply_policy(self, policy, components: Sequence = (), *,
+                     async_prepare: bool = False
                      ) -> Dict[str, DowntimeReport]:
         """Program the cluster from a validated `CompiledPolicy`:
 
@@ -1048,7 +1508,13 @@ class ServingCluster:
         2. reconfigure every engine that could serve a constrained label
            but whose current plan does not satisfy the constraint.
 
-        Returns {engine name: DowntimeReport} for engines that were swapped.
+        With ``async_prepare`` the swaps ride the concurrent-PREPARE path
+        (`reconfigure_async`): serving continues while the worker
+        compiles and each swap commits at the next step boundary.
+
+        Returns {engine name: DowntimeReport} for engines that were
+        swapped — or {engine name: PrepareTicket} when ``async_prepare``
+        (each ticket's ``report`` finalizes on commit).
         """
         by_name = {c.name: c for c in components}
         merged: Dict[str, Dict[str, set]] = {}
@@ -1097,5 +1563,8 @@ class ServingCluster:
             if not unsatisfied:
                 continue
             new_plan = merge_restrictions(e.plan, *unsatisfied)
-            reports[e.name] = self.reconfigure(e.name, new_plan)
+            if async_prepare:
+                reports[e.name] = self.reconfigure_async(e.name, new_plan)
+            else:
+                reports[e.name] = self.reconfigure(e.name, new_plan)
         return reports

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -178,6 +179,10 @@ class ServingEngine:
         # a property of (model, s_max) — constant for the engine's life
         self._batch_axes: Optional[PyTree] = None
         self._migration_warm = False
+        # guards executable installation vs the serving path's executable
+        # selection: a background PREPARE may commit (swap_plan) from a
+        # control thread while step()/_admit() pick executables
+        self._exec_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -236,29 +241,31 @@ class ServingEngine:
                 self.cache = jax.device_put(self.cache, shardings["cache"])
             jax.block_until_ready(jax.tree.leaves(self.params))
             jax.block_until_ready(jax.tree.leaves(self.cache))
-            # executables compiled for the old layout are stale
-            self._prefill_exec = {}
-            self._decode_exec = None
-            self._bucket_exec = {}
-            self._bucket_lengths = []
+            with self._exec_lock:
+                # executables compiled for the old layout are stale
+                self._prefill_exec = {}
+                self._decode_exec = None
+                self._bucket_exec = {}
+                self._bucket_lengths = []
             self._migration_warm = False   # pool-surgery ops too
         if executables:
-            pf = executables.get("prefill")
-            if isinstance(pf, dict):
-                self._prefill_exec = dict(pf)
-            elif pf is not None:
-                self._prefill = pf
-                self._prefill_exec = {}
-            bk = executables.get("prefill_buckets")
-            if bk is not None:
-                self._bucket_exec = dict(bk)
-                self._bucket_lengths = sorted(self._bucket_exec)
-            de = executables.get("decode")
-            if isinstance(de, jax.stages.Compiled):
-                self._decode_exec = de
-            elif de is not None:          # a jit-wrapped callable: replace
-                self._decode = de         # the fallback outright
-                self._decode_exec = None
+            with self._exec_lock:
+                pf = executables.get("prefill")
+                if isinstance(pf, dict):
+                    self._prefill_exec = dict(pf)
+                elif pf is not None:
+                    self._prefill = pf
+                    self._prefill_exec = {}
+                bk = executables.get("prefill_buckets")
+                if bk is not None:
+                    self._bucket_exec = dict(bk)
+                    self._bucket_lengths = sorted(self._bucket_exec)
+                de = executables.get("decode")
+                if isinstance(de, jax.stages.Compiled):
+                    self._decode_exec = de
+                elif de is not None:      # a jit-wrapped callable: replace
+                    self._decode = de     # the fallback outright
+                    self._decode_exec = None
         if plan is not None:
             self.plan = plan
         return migrated
@@ -281,6 +288,17 @@ class ServingEngine:
             return False
         from repro.models.lm import layer_kinds   # local: avoid cycles
         return all(mixer in ("attn", "mla") for mixer, _ in layer_kinds(cfg))
+
+    def recent_prompt_lengths(self, cap: Optional[int] = None
+                              ) -> Tuple[int, ...]:
+        """Snapshot of the most recently seen distinct prompt lengths
+        (at most ``cap``, default `MAX_AOT_PREFILL`), sorted ascending.
+
+        A SNAPSHOT, not a live view: safe to hand to a background PREPARE
+        thread while request threads keep recording new lengths."""
+        cap = cap or self.MAX_AOT_PREFILL
+        seen = dict(self.seen_prompt_lengths)    # atomic copy under the GIL
+        return tuple(sorted(sorted(seen, key=seen.get)[-cap:]))
 
     def bucket_lengths(self) -> List[int]:
         """The padded-prefill bucket ladder: powers of two from
@@ -345,9 +363,7 @@ class ServingEngine:
             lengths = sorted(set(prefill_lengths))
         else:
             # most recently seen distinct lengths, capped (see MAX_AOT_PREFILL)
-            recent = sorted(self.seen_prompt_lengths,
-                            key=self.seen_prompt_lengths.get)
-            lengths = sorted(recent[-self.MAX_AOT_PREFILL:])
+            lengths = list(self.recent_prompt_lengths())
         for S in lengths:
             prefill[S] = jax.jit(self.model.prefill) \
                 .lower(p_sds, batch_sds(S, padded=False)).compile()
@@ -369,13 +385,18 @@ class ServingEngine:
         Reuses the installed AOT executable when present; otherwise
         compiles decode once for the live layout and installs it, so the
         check never forces a later JIT on the serving path."""
-        if self._decode_exec is None:
+        with self._exec_lock:
+            exec_ = self._decode_exec
+        if exec_ is None:
             tok = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
             pos = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
-            self._decode_exec = jax.jit(self.model.decode_step,
-                                        donate_argnums=(2,)) \
+            exec_ = jax.jit(self.model.decode_step,
+                            donate_argnums=(2,)) \
                 .lower(self.params, tok, self.cache, pos).compile()
-        return self._decode_exec.as_text()
+            with self._exec_lock:
+                if self._decode_exec is None:
+                    self._decode_exec = exec_
+        return exec_.as_text()
 
     # ------------------------------------------------------------------
     # serving
@@ -420,19 +441,22 @@ class ServingEngine:
             S = len(req.prompt)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             # exact-length AOT executable first; else the smallest padded
-            # bucket that holds the prompt; JIT fallback last
-            prefill = self._prefill_exec.get(S)
+            # bucket that holds the prompt; JIT fallback last. Selected
+            # under the exec lock: a background PREPARE commit must never
+            # be observed half-installed.
             batch: Dict[str, Any] = {"tokens": prompt}
-            if prefill is None:
-                bucket = next((b for b in self._bucket_lengths if b >= S),
-                              None)
-                if bucket is not None:
-                    batch = {"tokens": jnp.pad(prompt,
-                                               ((0, 0), (0, bucket - S))),
-                             "true_len": jnp.asarray(S, jnp.int32)}
-                    prefill = self._bucket_exec[bucket]
-                else:
-                    prefill = self._prefill
+            with self._exec_lock:
+                prefill = self._prefill_exec.get(S)
+                if prefill is None:
+                    bucket = next((b for b in self._bucket_lengths
+                                   if b >= S), None)
+                    if bucket is not None:
+                        batch = {"tokens": jnp.pad(
+                                     prompt, ((0, 0), (0, bucket - S))),
+                                 "true_len": jnp.asarray(S, jnp.int32)}
+                        prefill = self._bucket_exec[bucket]
+                    else:
+                        prefill = self._prefill
             if self.model.cfg.pos_type == "mrope":
                 Sp = batch["tokens"].shape[1]
                 batch["positions"] = jnp.broadcast_to(
@@ -589,7 +613,8 @@ class ServingEngine:
         # per-slot positions (inactive slots write harmlessly at index 0 —
         # their slot is re-prefilled before reuse)
         pos = jnp.asarray(self.slot_pos, dtype=jnp.int32)
-        decode = self._decode_exec or self._decode
+        with self._exec_lock:
+            decode = self._decode_exec or self._decode
         logits, self.cache = decode(self.params, jnp.asarray(tokens),
                                     self.cache, pos)
         logits = np.asarray(logits[:, : self.vocab])

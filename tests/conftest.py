@@ -1,8 +1,27 @@
-"""Shared fixtures. NB: no XLA_FLAGS here — tests run on the single real CPU
-device; only launch/dryrun.py forces 512 placeholder devices."""
-import os
+"""Shared fixtures + the serving test harness.
+
+NB: no XLA_FLAGS here — tests run on the single real CPU device; only
+launch/dryrun.py forces 512 placeholder devices.
+
+The serving harness deduplicates the setup that was copy-pasted across
+test_cluster/test_autoscaler/test_migration:
+
+  * ``fp32_model``      session-scoped tiny fp32 model (one build + init
+                        for the whole suite);
+  * ``make_request``    labeled request factory (accepts a bare label
+                        string or a full labels dict);
+  * ``make_engine``     tiny `ServingEngine` builder;
+  * ``baseline_streams``  oracle token streams of an uninterrupted run;
+  * ``drive_trace``     request-trace driver (submit/step interleaving);
+  * ``FakeClock`` / ``fake_clock``  deterministic clock installed into
+                        the serving modules, so timing-derived assertions
+                        (TTFT/TPOT stamps, downtime windows) are exact.
+"""
+import dataclasses
+import threading
 
 import jax
+import numpy as np
 import pytest
 
 jax.config.update("jax_enable_x64", False)
@@ -11,3 +30,134 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# tiny-model cluster builders
+# ---------------------------------------------------------------------------
+
+
+def build_tiny_model(arch="minitron_4b"):
+    """(cfg, model, params) for a reduced fp32 config — the serving
+    tests' standard substrate."""
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(get_reduced_config(arch),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="session")
+def fp32_model():
+    """The shared tiny serving model, built once per test session."""
+    return build_tiny_model()
+
+
+def make_request(rng, cfg, rid, labels=None, *, n=6, new=4):
+    """One labeled `Request` with a random prompt of length ``n``.
+
+    ``labels`` may be a full dict or a bare ``data-type`` value string.
+    """
+    from repro.serving import Request
+
+    if isinstance(labels, str):
+        labels = {"data-type": labels}
+    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
+                   .astype(np.int32), max_new_tokens=new,
+                   labels=labels or {})
+
+
+def make_engine(model, params, *, n_slots=2, s_max=32, **kw):
+    """A tiny `ServingEngine` with the suite's standard pool sizing."""
+    from repro.serving import ServingEngine
+
+    return ServingEngine(model, params, n_slots=n_slots, s_max=s_max, **kw)
+
+
+def baseline_streams(model, params, prompts, new, *, n_slots=4, s_max=32):
+    """Token streams of an unmigrated/uninterrupted run over ``prompts``
+    (the oracle the reconfiguration/migration tests compare against)."""
+    from repro.serving import Request
+
+    eng = make_engine(model, params, n_slots=n_slots, s_max=s_max)
+    reqs = [Request(i, p, max_new_tokens=new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.rid: list(r.tokens_out) for r in reqs}
+
+
+def drive_trace(cluster, requests, *, steps_between=1, drain=True):
+    """Submit ``requests`` one by one, interleaving ``steps_between``
+    decode steps after each (a deterministic open-loop trace driver).
+
+    Returns the engine name the router chose per request (None where
+    routing failed closed — the request is in ``cluster.rejected``).
+    """
+    from repro.serving import RoutingError
+
+    placed = []
+    for r in requests:
+        try:
+            placed.append(cluster.submit(r))
+        except RoutingError:
+            placed.append(None)
+        for _ in range(steps_between):
+            cluster.step()
+    if drain:
+        cluster.run()
+    return placed
+
+
+# ---------------------------------------------------------------------------
+# deterministic fake clock
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    """Drop-in for the ``time`` module inside the serving layer: every
+    read advances the clock by ``tick`` seconds, so timestamps are
+    strictly increasing AND fully deterministic (no wall-clock jitter in
+    TTFT/TPOT/downtime assertions). Thread-safe."""
+
+    def __init__(self, start=1_000.0, tick=1e-3):
+        self._now = float(start)
+        self.tick = float(tick)
+        self._lock = threading.Lock()
+
+    def time(self):
+        with self._lock:
+            self._now += self.tick
+            return self._now
+
+    perf_counter = time
+
+    def sleep(self, dt):
+        self.advance(dt)
+
+    def advance(self, dt):
+        """Jump the clock forward without a read."""
+        with self._lock:
+            self._now += float(dt)
+
+    @property
+    def now(self):
+        with self._lock:
+            return self._now
+
+
+@pytest.fixture
+def fake_clock(monkeypatch):
+    """Install a `FakeClock` as the ``time`` module of the serving layer
+    (engine/cluster/migration stamp requests and windows through it)."""
+    import repro.serving.cluster as cluster_mod
+    import repro.serving.engine as engine_mod
+    import repro.serving.migration as migration_mod
+
+    clock = FakeClock()
+    for mod in (engine_mod, cluster_mod, migration_mod):
+        monkeypatch.setattr(mod, "time", clock)
+    return clock

@@ -2,47 +2,29 @@
 overload, retire strictly after drain, anti-flapping hysteresis, auto-
 finalized DowntimeReports for every scale event, intent-pinned scaling
 bounds (Orchestrator.submit(apply_to=autoscaler)), and the per-label
-cluster-metrics aggregation the LoadTracker depends on."""
-import dataclasses
+cluster-metrics aggregation the LoadTracker depends on.
 
-import jax
+Uses the shared serving harness from conftest (``fp32_model`` session
+fixture, `make_request`/`make_engine`); this file's traces default to
+``max_new_tokens=3``."""
 import numpy as np
 import pytest
+from conftest import make_engine as _mk
+from conftest import make_request
 
-from repro.configs import get_reduced_config
 from repro.core import Orchestrator
-from repro.models import build_model
 from repro.serving import (
     METRIC_KEYS,
     Autoscaler,
     ElasticPolicy,
     LoadTracker,
-    Request,
     ServingCluster,
-    ServingEngine,
 )
 from repro.sharding import ShardingPlan, plan_satisfies
 
 
-@pytest.fixture(scope="module")
-def fp32_model():
-    cfg = dataclasses.replace(get_reduced_config("minitron_4b"),
-                              param_dtype="float32", activ_dtype="float32")
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
 def _req(rng, cfg, rid, label=None, n=6, new=3):
-    labels = {"data-type": label} if label else {}
-    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
-                   .astype(np.int32), max_new_tokens=new, labels=labels)
-
-
-def _mk(model, params, **kw):
-    kw.setdefault("n_slots", 2)
-    kw.setdefault("s_max", 32)
-    return ServingEngine(model, params, **kw)
+    return make_request(rng, cfg, rid, label, n=n, new=new)
 
 
 # ---------------------------------------------------------------------------

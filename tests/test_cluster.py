@@ -1,16 +1,14 @@
 """ServingCluster runtime tests: label-based fail-closed routing, the
 pause/drain/swap/resume lifecycle, and the end-to-end intent ->
-validate -> reconfigure -> serve round-trip."""
-import dataclasses
+validate -> reconfigure -> serve round-trip.
 
-import jax
-import jax.numpy as jnp
+Uses the shared serving harness from conftest (``fp32_model`` session
+fixture, `make_request`)."""
 import numpy as np
 import pytest
+from conftest import make_request as _req
 
-from repro.configs import get_reduced_config
 from repro.core import Orchestrator
-from repro.models import build_model
 from repro.serving import (
     METRIC_KEYS,
     EngineStateError,
@@ -20,21 +18,6 @@ from repro.serving import (
     ServingEngine,
 )
 from repro.sharding import ShardingPlan, default_plan, plan_satisfies
-
-
-@pytest.fixture(scope="module")
-def fp32_model():
-    cfg = dataclasses.replace(get_reduced_config("minitron_4b"),
-                              param_dtype="float32", activ_dtype="float32")
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
-def _req(rng, cfg, rid, labels=None, n=6, new=4):
-    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
-                   .astype(np.int32), max_new_tokens=new,
-                   labels=labels or {})
 
 
 PINNED = ShardingPlan(device_constraints=(("pod", 0),),
@@ -79,6 +62,32 @@ def test_labeled_routing_lands_only_on_compliant_engines(fp32_model):
     # unconstrained traffic balances onto the idle engine
     name = cluster.submit(_req(rng, cfg, 10, {"data-type": "general"}))
     assert name == "open"
+
+
+def test_trace_driver_interleaves_routing_and_fail_closed(fp32_model):
+    """The shared request-trace driver (conftest.drive_trace) interleaves
+    submits with decode steps, records per-request placements, and maps
+    fail-closed rejections to None without aborting the trace."""
+    from conftest import drive_trace
+
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("pinned", ServingEngine(model, params, n_slots=2,
+                                             s_max=32), plan=PINNED)
+    cluster.set_route_constraint("phi", PHI_CONSTRAINT)
+    cluster.set_route_constraint("audio", ShardingPlan(
+        device_constraints=(("pod", 1),)))      # nothing satisfies this
+    rng = np.random.default_rng(20)
+    trace = [_req(rng, cfg, 0, {"data-type": "phi"}, new=3),
+             _req(rng, cfg, 1, {"data-type": "audio"}, new=3),
+             _req(rng, cfg, 2, {"data-type": "phi"}, new=3)]
+
+    placed = drive_trace(cluster, trace, steps_between=1)
+    assert placed == ["pinned", None, "pinned"]
+    assert [r.rid for r in cluster.rejected] == [1]
+    # the trace drained: every routable request completed in full
+    assert cluster.metrics()["completed"] == 2
+    assert all(len(trace[i].tokens_out) == 3 for i in (0, 2))
 
 
 def test_unroutable_request_fails_closed(fp32_model):

@@ -1,0 +1,397 @@
+"""Concurrent PREPARE: background compilation overlapped with live serving.
+
+Covers the pending-swap state machine (PREPARING -> READY -> SWAPPED with
+cancellation/supersession — a superseded ticket's executables are provably
+never installed), the non-blocking `reconfigure_async`/`spawn_engine_async`
+paths committing at step boundaries, the autoscaler's async spawns, the
+orchestrator riding the async path, and a multi-threaded stress run (N
+submitter threads against in-flight reconfigures/spawns: no routing to an
+engine mid-swap, no dropped requests, every DowntimeReport finalized).
+
+Run the stress tests standalone with faulthandler armed:
+
+    make test-stress      # PYTHONFAULTHANDLER=1 pytest tests/test_concurrent_prepare.py
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from conftest import make_engine, make_request
+
+from repro.core import Orchestrator
+from repro.serving import (
+    METRIC_KEYS,
+    Autoscaler,
+    LoadTracker,
+    PrepareCancelled,
+    ServingCluster,
+)
+from repro.sharding import ShardingPlan, default_plan
+
+PINNED = ShardingPlan(device_constraints=(("pod", 0),),
+                      forbidden_collective_axes=("pod",))
+
+# generous wall-clock cap for "serve until the background compile lands"
+# loops — they normally finish in a few seconds
+DEADLINE_S = 300.0
+
+
+def _serve_until_done(cluster, ticket, deadline_s=DEADLINE_S):
+    """Keep stepping (serving continues) until the ticket is terminal;
+    the swap commits inside `step()` at a safe boundary. Returns decode
+    steps served while the ticket was still pending."""
+    served = 0
+    t0 = time.monotonic()
+    while not ticket.done():
+        assert time.monotonic() - t0 < deadline_s, \
+            f"ticket stuck: {ticket!r}"
+        n = cluster.step()
+        served += n
+        if n == 0:
+            time.sleep(0.002)      # idle but the worker is still compiling
+    return served
+
+
+# ---------------------------------------------------------------------------
+# the async lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_reconfigure_async_overlaps_serving_and_is_token_exact(fp32_model):
+    """The headline property: reconfigure_async returns immediately,
+    serving continues through PREPARE, the swap commits at a step
+    boundary, and the token streams match an uninterrupted run."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+               for _ in range(6)]
+    from conftest import baseline_streams
+    expect = baseline_streams(model, params, prompts, new=6, n_slots=2)
+
+    cluster = ServingCluster()
+    cluster.register("e0", make_engine(model, params))
+    from repro.serving import Request
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    for r in reqs[:4]:
+        cluster.submit(r)
+    cluster.step()
+
+    ticket = cluster.reconfigure_async("e0", PINNED, prefill_lengths=(6,))
+    assert not ticket.done()                      # returned immediately
+    assert cluster.prepare_pending() == [ticket]
+    _serve_until_done(cluster, ticket)
+    assert ticket.state == "swapped"
+
+    report = ticket.result()
+    assert report.engine == "e0" and report.event == "reconfigure"
+    assert report.compiled_in_prepare >= 1
+    assert report.downtime_s < report.prepare_s   # window never compiles
+    assert cluster.engine("e0").plan is PINNED
+
+    for r in reqs[4:]:                            # post-swap traffic
+        cluster.submit(r)
+    cluster.run()
+    assert cluster.pending_reports() == []        # report finalized
+    assert set(report.metrics_after) == set(METRIC_KEYS)
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+
+def test_superseded_pending_swap_never_installs_executables(fp32_model):
+    """Supersession is provable: let ticket A finish its compile (READY),
+    supersede it with B before any step boundary — A must be CANCELLED
+    and exactly ONE swap_plan installation may ever happen (B's)."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    eng = make_engine(model, params)
+    cluster.register("e0", eng)
+
+    installs = []
+    real_swap = eng.swap_plan
+    eng.swap_plan = lambda *a, **kw: (installs.append(kw.get("executables")),
+                                      real_swap(*a, **kw))[1]
+
+    ticket_a = cluster.reconfigure_async("e0", default_plan(),
+                                         prefill_lengths=(6,))
+    assert ticket_a.wait_ready(DEADLINE_S)        # compile FINISHED...
+    assert ticket_a.state == "ready"              # ...but not committed
+    ticket_b = cluster.reconfigure_async("e0", PINNED, prefill_lengths=(7,))
+    assert ticket_a.state == "cancelled"          # superseded by B
+    assert ticket_a.superseded_by is ticket_b
+
+    _serve_until_done(cluster, ticket_b)
+    assert ticket_b.state == "swapped"
+    assert cluster.engine("e0").plan is PINNED
+    assert len(installs) == 1                     # A's executables: never
+    with pytest.raises(PrepareCancelled):
+        ticket_a.result()
+    # superseding a READY ticket leaves no stale pending state behind
+    assert cluster.prepare_pending() == []
+
+
+def test_ticket_cancel_before_commit_keeps_old_plan(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("e0", make_engine(model, params))
+    old_plan = cluster.engine("e0").plan
+
+    ticket = cluster.reconfigure_async("e0", PINNED)
+    assert ticket.cancel()
+    cluster.run(wait_pending=True)
+    assert cluster.engine("e0").plan is old_plan
+    assert cluster.prepare_pending() == []
+    assert ticket.state == "cancelled"
+    assert not ticket.cancel()                    # idempotently terminal
+
+
+def test_retire_cancels_pending_ticket(fp32_model):
+    """A retiring engine never swaps: retirement cancels its pending
+    background PREPARE."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("e0", make_engine(model, params))
+    cluster.register("e1", make_engine(model, params))
+    ticket = cluster.reconfigure_async("e0", PINNED)
+    cluster.retire_engine("e0")
+    assert ticket.state == "cancelled"
+    cluster.run(wait_pending=True)
+    assert "e0" not in cluster.engines()
+
+
+def test_spawn_engine_async_joins_pool_only_at_commit(fp32_model):
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(1)
+    cluster = ServingCluster()
+    cluster.register("base", make_engine(model, params))
+    for rid in range(4):
+        cluster.submit(make_request(rng, cfg, rid, "phi", new=3))
+
+    ticket = cluster.spawn_engine_async(
+        "phi-1", make_engine(model, params), labels={"data-type": "phi"},
+        prefill_lengths=cluster.label_prompt_lengths("phi"))
+    # invisible to routing until its swap commits; the name is reserved
+    assert "phi-1" not in cluster.engines()
+    assert cluster.pending_spawns() == ["phi-1"]
+    with pytest.raises(ValueError):
+        cluster.spawn_engine_async("phi-1", make_engine(model, params))
+    with pytest.raises(ValueError):       # register honors the reservation
+        cluster.register("phi-1", make_engine(model, params))
+
+    _serve_until_done(cluster, ticket)
+    assert ticket.state == "swapped"
+    assert "phi-1" in cluster.engines()
+    report = ticket.result()
+    assert report.event == "spawn" and report.compiled_in_prepare >= 1
+    # post-commit traffic closes the spawn's metrics_after window (the
+    # pre-spawn wave may have fully drained before the commit landed)
+    for rid in range(10, 14):
+        cluster.submit(make_request(rng, cfg, rid, "phi", new=3))
+    cluster.run()
+    assert cluster.pending_reports() == []
+    assert report.metrics_after["completed"] > 0
+
+
+def test_autoscaler_async_spawn_never_stalls_tick_and_never_doubles(
+        fp32_model):
+    """With async_spawn the tick that decides a spawn returns without
+    compiling; while the label's spawn is in flight, further spawn
+    decisions for it are suppressed (no capacity double-request)."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", make_engine(model, params))
+    scaler = Autoscaler(cluster, lambda label: make_engine(model, params),
+                        tracker=LoadTracker(alpha=1.0), async_spawn=True)
+    # the unlabeled base engine already serves phi: floor 2 forces one
+    # dedicated spawn
+    scaler.set_bounds("phi", 2)
+
+    t0 = time.monotonic()
+    decisions = scaler.tick()
+    tick_s = time.monotonic() - t0
+    assert [d.kind for d in decisions] == ["spawn"]
+    assert len(scaler.pending_spawns()) == 1
+    # the tick staged the compile but did not wait for it
+    ticket = scaler._pending[0][1]
+    if not ticket.done():
+        assert tick_s < ticket.prepare_s + 1.0 or ticket.prepare_s == 0.0
+
+    # while in flight: the floor is still unmet but no second spawn fires
+    for _ in range(3):
+        for d in scaler.tick():
+            assert not (d.kind == "spawn" and d.label == "phi")
+        cluster.step()
+
+    deadline = time.monotonic() + DEADLINE_S
+    while scaler.pending_spawns() and time.monotonic() < deadline:
+        cluster.step()
+        time.sleep(0.002)
+        scaler.tick()
+    assert len(cluster.engines_for_label("phi")) == 2
+    spawn_events = [(d, r) for d, r in scaler.events if d.kind == "spawn"]
+    assert len(spawn_events) == 1                 # exactly one spawn
+    assert spawn_events[0][1].event == "spawn"    # with its real report
+
+
+def test_failed_spawn_releases_its_name_reservation(fp32_model):
+    """A spawn whose PREPARE fails (or is cancelled) must not squat on
+    its engine name: register/spawn under the same name work again
+    without waiting for a step boundary to sweep the dead ticket."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    eng = make_engine(model, params)
+    eng.aot_executables = lambda *a, **kw: (_ for _ in ()).throw(
+        RuntimeError("boom"))
+    ticket = cluster.spawn_engine_async("phi-1", eng)
+    assert ticket.wait(DEADLINE_S) and ticket.state == "failed"
+    with pytest.raises(RuntimeError, match="boom"):
+        ticket.result()
+    assert cluster.pending_spawns() == []      # reservation released
+    cluster.register("phi-1", make_engine(model, params))
+    assert "phi-1" in cluster.engines()
+
+
+def test_autoscaler_failed_async_spawn_surfaces_and_backs_off(fp32_model):
+    """A FAILED background spawn must land in ``scaler.failures`` (never
+    silently vanish) and hold the label off for ``cooldown`` ticks — a
+    deterministic PREPARE failure must not loop one doomed compile per
+    tick forever."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", make_engine(model, params))
+
+    def broken_factory(label):
+        eng = make_engine(model, params)
+        eng.aot_executables = lambda *a, **kw: (_ for _ in ()).throw(
+            RuntimeError("compile backend exploded"))
+        return eng
+
+    scaler = Autoscaler(cluster, broken_factory,
+                        tracker=LoadTracker(alpha=1.0), async_spawn=True)
+    scaler.set_bounds("phi", 2)
+
+    decisions = scaler.tick()             # stages the doomed spawn
+    assert [d.kind for d in decisions] == ["spawn"]
+    scaler._pending[0][1].wait(DEADLINE_S)
+
+    respawns = 0
+    for _ in range(scaler.policy.cooldown):
+        respawns += sum(d.kind == "spawn" for d in scaler.tick())
+    assert respawns == 0                  # backoff held the label
+    assert len(scaler.failures) == 1      # surfaced exactly once
+    d, err = scaler.failures[0]
+    assert d.label == "phi" and "exploded" in str(err)
+    assert scaler.events == []            # no phantom capacity reported
+
+
+def test_orchestrator_async_reconfig_finalizes_on_commit(fp32_model):
+    """submit(apply_to=cluster, async_reconfig=True) returns tickets;
+    serving continues, the swap commits at a step boundary, and the
+    DowntimeReport finalizes with post-swap traffic."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(2)
+    cluster = ServingCluster()
+    cluster.register("edge0", make_engine(model, params))
+    for rid in range(2):
+        cluster.submit(make_request(rng, cfg, rid, "phi", new=3))
+
+    orch = Orchestrator()
+    res = orch.submit("Phi traffic must remain inside the pod.",
+                      apply_to=cluster, async_reconfig=True)
+    assert res.success
+    ticket = res.reports["edge0"]
+    assert not isinstance(ticket, dict)
+    assert hasattr(ticket, "state")               # a PrepareTicket
+    _serve_until_done(cluster, ticket)
+    report = ticket.result()
+    assert report.engine == "edge0"
+    assert "pod" in cluster.engine("edge0").plan.forbidden_collective_axes
+
+    cluster.submit(make_request(rng, cfg, 100, "phi", new=3))
+    cluster.run()
+    assert cluster.pending_reports() == []
+    # the pre-swap wave may drain before OR after the commit (the compile
+    # races real serving) — the invariant is that the post-swap window
+    # finalized and saw at least the post-commit request
+    assert report.metrics_after["completed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# multi-threaded stress
+# ---------------------------------------------------------------------------
+
+
+N_THREADS = 4
+PER_THREAD = 10
+
+
+def test_stress_concurrent_submit_reconfigure_spawn(fp32_model):
+    """N submitter threads race against reconfigure_async (twice — the
+    second supersedes the first), spawn_engine_async, and the serving
+    loop. Invariants: no request is ever routed to an engine inside its
+    blocking swap window, nothing is dropped or rejected, every ticket
+    terminates, and every DowntimeReport finalizes."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("e0", make_engine(model, params, n_slots=2))
+    cluster.register("e1", make_engine(model, params, n_slots=2))
+
+    reqs = [[] for _ in range(N_THREADS)]
+    errors = []
+
+    def submitter(tid):
+        rng = np.random.default_rng(100 + tid)
+        try:
+            for i in range(PER_THREAD):
+                r = make_request(rng, cfg, tid * 1000 + i, new=3)
+                reqs[tid].append(r)
+                cluster.submit(r)
+                time.sleep(0.001)
+        except Exception as e:            # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=submitter, args=(tid,))
+               for tid in range(N_THREADS)]
+    for t in threads:
+        t.start()
+
+    # fire the async control-plane storm while the submitters run
+    t_a = cluster.reconfigure_async("e0", default_plan(), prefill_lengths=(6,))
+    t_b = cluster.reconfigure_async("e0", PINNED, prefill_lengths=(6,))
+    t_spawn = cluster.spawn_engine_async("e2", make_engine(model, params),
+                                         prefill_lengths=(6,))
+    tickets = [t_b, t_spawn]
+
+    deadline = time.monotonic() + DEADLINE_S
+    while (any(t.is_alive() for t in threads)
+           or not all(t.done() for t in tickets)):
+        assert time.monotonic() < deadline, "stress run wedged"
+        if cluster.step() == 0:
+            time.sleep(0.001)
+    for t in threads:
+        t.join()
+    cluster.run(wait_pending=True)
+
+    assert errors == []
+    # 1. the superseded swap was cancelled; the rest committed
+    assert t_a.state == "cancelled"
+    assert t_b.state == "swapped" and t_spawn.state == "swapped"
+    assert cluster.engine("e0").plan is PINNED
+    assert "e2" in cluster.engines()
+    # 2. no routing decision ever chose an engine mid-swap
+    assert cluster.midswap_routes == 0
+    # 3. no dropped requests: everything submitted completed exactly once
+    submitted = [r for per_thread in reqs for r in per_thread]
+    assert len(submitted) == N_THREADS * PER_THREAD
+    assert cluster.rejected == []
+    assert cluster.metrics()["completed"] == len(submitted)
+    assert all(len(r.tokens_out) == r.max_new_tokens for r in submitted)
+    # 4. every report finalized after the post-event windows closed
+    rng = np.random.default_rng(999)
+    for rid in range(4):                  # post-swap wave on every engine
+        cluster.submit(make_request(rng, cfg, 5000 + rid, new=2))
+    cluster.run()
+    assert cluster.pending_reports() == []
+    for report in cluster.history:
+        assert set(report.metrics_before) == set(METRIC_KEYS)
+        assert set(report.metrics_after) == set(METRIC_KEYS)
+        assert report.downtime_s < report.prepare_s or report.prepare_s == 0.0

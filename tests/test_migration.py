@@ -1,13 +1,19 @@
 """Live in-flight request migration: export/import state transfer,
 fail-closed edge cases (capacity, labels, route constraints), the
 migrate-mode retirement fast path, padded-bucket AOT prefill, and the
-registration-time compiled-HLO validator hook."""
+registration-time compiled-HLO validator hook.
+
+Uses the shared serving harness from conftest (``fp32_model`` session
+fixture, `make_request`/`make_engine`/`baseline_streams`); this file's
+traces default to ``max_new_tokens=5``."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import baseline_streams as _baseline_streams
+from conftest import make_engine as _mk
+from conftest import make_request
 
 from repro.configs import get_reduced_config
 from repro.models import build_model
@@ -24,33 +30,8 @@ from repro.serving import (
 from repro.sharding import ShardingPlan, default_plan
 
 
-@pytest.fixture(scope="module")
-def fp32_model():
-    cfg = dataclasses.replace(get_reduced_config("minitron_4b"),
-                              param_dtype="float32", activ_dtype="float32")
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
 def _req(rng, cfg, rid, labels=None, n=6, new=5):
-    return Request(rid, rng.integers(2, cfg.vocab_size, size=n)
-                   .astype(np.int32), max_new_tokens=new,
-                   labels=labels or {})
-
-
-def _mk(model, params, n_slots=2, s_max=32, **kw):
-    return ServingEngine(model, params, n_slots=n_slots, s_max=s_max, **kw)
-
-
-def _baseline_streams(model, params, prompts, new, n_slots=4, s_max=32):
-    """Token streams of an unmigrated run over the same prompts."""
-    eng = ServingEngine(model, params, n_slots=n_slots, s_max=s_max)
-    reqs = [Request(i, p, max_new_tokens=new) for i, p in enumerate(prompts)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run()
-    return {r.rid: list(r.tokens_out) for r in reqs}
+    return make_request(rng, cfg, rid, labels, n=n, new=new)
 
 
 PINNED = ShardingPlan(device_constraints=(("pod", 0),),
@@ -226,6 +207,38 @@ def test_retire_migrate_falls_back_to_drain_without_peer(fp32_model):
     cluster.run()
     assert "phi-0" not in cluster.engines()  # drained, then reaped
     assert len(req.tokens_out) == req.max_new_tokens
+
+
+def test_retire_migrate_zero_peers_falls_back_to_drain(fp32_model,
+                                                       fake_clock):
+    """Regression: migrate-mode retirement on a cluster with NO other
+    engine at all must fall back to draining instead of erroring, and
+    the report's downtime must be honestly 0 — discovering there was
+    nowhere to go blocks nobody. The fake clock makes the window
+    deterministic: any nonzero accounting would be exact, not jitter."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(20)
+    cluster = ServingCluster()
+    cluster.register("only", _mk(model, params))
+    req = _req(rng, cfg, 0)
+    cluster.engine("only").submit(req)
+    cluster.step()                           # resident mid-decode
+
+    report = cluster.retire_engine("only", mode="migrate")
+    assert report.event == "retire"
+    assert report.migrations == ()           # zero eligible peers
+    assert report.downtime_s == 0.0          # honest: the drain path
+    assert report.migrate_bytes == 0
+    assert cluster.draining() == ["only"]    # drains in place instead
+    cluster.run()
+    assert "only" not in cluster.engines()   # reaped once empty
+    assert len(req.tokens_out) == req.max_new_tokens
+    assert cluster.metrics()["completed"] == 1
+    # deterministic stamps under the fake clock: the request's TTFT/TPOT
+    # are exact multiples of the clock tick, never wall-clock jitter
+    assert req.t_done > req.t_first > req.t_submit
+    ticks = (req.t_done - req.t_submit) / fake_clock.tick
+    assert abs(ticks - round(ticks)) < 1e-6
 
 
 def test_drain_mode_retirement_unchanged(fp32_model):

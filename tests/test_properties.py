@@ -1,0 +1,164 @@
+"""Property tests (real hypothesis when installed, else the deterministic
+shim in tests/_hypothesis_compat.py) for the two pure invariant kernels
+the serving runtime leans on:
+
+  * `sharding.merge_restrictions` — the single source of the constraint
+    merge semantics: argument-order independence and fail-closed
+    degradation of conflicting device pins;
+  * the migration budget clamp (`serving/migration.needed_capacity`) —
+    a migrated stream can NEVER extend beyond what the source pool could
+    have produced, no matter how roomy the target is.
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import Request
+from repro.serving.migration import needed_capacity, required_capacity
+from repro.sharding import ShardingPlan, merge_restrictions, plan_satisfies
+
+settings.register_profile("repo", max_examples=50)
+settings.load_profile("repo")
+
+AXES = ("pod", "data", "model")
+
+
+@st.composite
+def plans(draw):
+    """Restriction-only ShardingPlans over the production axis names."""
+    pins = tuple((ax, draw(st.integers(0, 2)))
+                 for ax in AXES if draw(st.booleans()))
+    forbidden = tuple(ax for ax in AXES if draw(st.booleans()))
+    return ShardingPlan(device_constraints=pins,
+                        forbidden_collective_axes=forbidden)
+
+
+# ---------------------------------------------------------------------------
+# merge_restrictions
+# ---------------------------------------------------------------------------
+
+
+@given(base=plans(), r1=plans(), r2=plans())
+def test_merge_restrictions_commutes_over_required_plans(base, r1, r2):
+    """The merged outcome must not depend on the order constraints were
+    presented (apply_policy merges ALL unsatisfied constraints at once;
+    a different dict ordering must not change the resulting plan)."""
+    assert merge_restrictions(base, r1, r2) == merge_restrictions(base, r2, r1)
+
+
+@given(base=plans(), r1=plans(), r2=plans())
+def test_merge_restrictions_conflicts_fail_closed(base, r1, r2):
+    """Pins that disagree on an axis (with the base or between required
+    plans) must degrade to forbidding that axis with NO pin: an engine
+    asked to be in two places at once satisfies neither pinned
+    constraint and the label rejects at routing time — never a silently
+    chosen winner."""
+    merged = merge_restrictions(base, r1, r2)
+    merged_pins = dict(merged.device_constraints)
+    sources = [dict(base.device_constraints), dict(r1.device_constraints),
+               dict(r2.device_constraints)]
+    for ax in AXES:
+        coords = {src[ax] for src in sources if ax in src}
+        if len(coords) > 1:               # conflicting pins
+            assert ax not in merged_pins
+            assert ax in merged.forbidden_collective_axes
+        elif len(coords) == 1:            # agreeing pins survive verbatim
+            assert merged_pins.get(ax) == coords.pop()
+    # forbidden axes only ever accumulate
+    for src in (base, r1, r2):
+        assert set(src.forbidden_collective_axes) \
+            <= set(merged.forbidden_collective_axes)
+    # fail-closed end to end: a required plan whose pin was degraded is
+    # NOT satisfied by the merge result
+    for req in (r1, r2):
+        degraded = [ax for ax, c in req.device_constraints
+                    if dict(merged.device_constraints).get(ax) != c]
+        if degraded:
+            assert not plan_satisfies(merged, req)
+
+
+@given(base=plans(), req=plans())
+def test_merge_restrictions_satisfies_when_no_conflict(base, req):
+    """Absent pin conflicts, merging a required plan into a base must
+    produce a plan that actually satisfies it (this is what makes
+    apply_policy's single-swap-per-engine strategy sound)."""
+    base_pins = dict(base.device_constraints)
+    conflict = any(base_pins.get(ax) not in (None, c)
+                   for ax, c in req.device_constraints)
+    merged = merge_restrictions(base, req)
+    if not conflict:
+        assert plan_satisfies(merged, req)
+
+
+# ---------------------------------------------------------------------------
+# migration budget clamp (serving/migration.py)
+# ---------------------------------------------------------------------------
+
+
+def _decoding_state(prompt_len, extra, max_new):
+    """A consistent mid-decode request: prefill emitted one token at
+    pos=prompt_len; ``extra`` decode steps followed."""
+    req = Request(0, np.zeros(prompt_len, np.int32), max_new_tokens=max_new)
+    req.tokens_out = [1] * (extra + 1)
+    return req, prompt_len + extra
+
+
+@given(prompt_len=st.integers(1, 40), extra=st.integers(0, 40),
+       max_new=st.integers(1, 80), src_s_max=st.integers(8, 64))
+def test_budget_clamp_decoding_never_extends_stream(prompt_len, extra,
+                                                    max_new, src_s_max):
+    """For any mid-decode state valid on the source pool, the capacity
+    requirement never exceeds the source's own ``s_max`` — so a roomier
+    target can never emit a token the unmigrated run would not have."""
+    prompt_len = min(prompt_len, src_s_max - 2)
+    extra = min(extra, src_s_max - 2 - prompt_len, max(max_new - 1, 0))
+    req, pos = _decoding_state(prompt_len, extra, max_new)
+
+    need = needed_capacity(req, "decoding", pos, src_s_max)
+    assert need <= src_s_max              # the source itself always fits
+    assert need >= pos + 1                # state already written fits too
+    # the clamped remaining budget obeys BOTH the request's own budget
+    # and the source pool's stop rule (slot_pos >= s_max - 1)
+    rem = need - pos - 1
+    assert 0 <= rem <= max(max_new - len(req.tokens_out), 0)
+    assert pos + rem <= src_s_max - 1
+    # total stream length never exceeds the unmigrated run's
+    assert len(req.tokens_out) + rem <= max(max_new, len(req.tokens_out))
+
+
+@given(prompt_len=st.integers(1, 40), max_new=st.integers(1, 80),
+       src_s_max=st.integers(8, 64))
+def test_budget_clamp_queued_never_extends_stream(prompt_len, max_new,
+                                                  src_s_max):
+    """Queued (not yet prefilled) requests carry the same guarantee: the
+    requirement covers prompt + clamped generation, within the source."""
+    prompt_len = min(prompt_len, src_s_max - 1)
+    req = Request(0, np.zeros(prompt_len, np.int32), max_new_tokens=max_new)
+
+    need = needed_capacity(req, "queued", prompt_len, src_s_max)
+    assert prompt_len + 1 <= need <= src_s_max
+    rem = need - prompt_len
+    assert rem <= max(max_new, 1)
+
+
+@given(prompt_len=st.integers(1, 30), extra=st.integers(0, 30),
+       max_new=st.integers(1, 60),
+       src_s_max=st.integers(8, 64), dst_s_max=st.integers(8, 64))
+def test_budget_clamp_import_decision_is_monotone(prompt_len, extra,
+                                                  max_new, src_s_max,
+                                                  dst_s_max):
+    """`required_capacity` (what import_slot fails closed on) equals the
+    pre-flight `needed_capacity`, and a target at least as roomy as the
+    source is ALWAYS admissible — migration onto equal-or-bigger pools
+    cannot fail the capacity check."""
+    from repro.serving.migration import SlotSnapshot
+
+    prompt_len = min(prompt_len, src_s_max - 2)
+    extra = min(extra, src_s_max - 2 - prompt_len, max(max_new - 1, 0))
+    req, pos = _decoding_state(prompt_len, extra, max_new)
+    need = needed_capacity(req, "decoding", pos, src_s_max)
+
+    snap = SlotSnapshot(rid=0, request=req, phase="decoding", pos=pos,
+                        kv=None, src_s_max=src_s_max)
+    assert required_capacity(snap) == need
+    if dst_s_max >= src_s_max:
+        assert need <= dst_s_max          # equal-or-bigger always admits
