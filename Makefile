@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: test test-stress ci example bench-reconfig bench-elastic \
-        bench-migration bench-overlap bench-json docs
+        bench-migration bench-overlap bench-planner bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,8 +26,11 @@ bench-migration:
 bench-overlap:
 	PYTHONPATH=src:. $(PY) benchmarks/overlap_prepare.py
 
+bench-planner:
+	PYTHONPATH=src:. $(PY) benchmarks/plan_search.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner
 
 docs:
 	$(PY) scripts/run_doc_examples.py

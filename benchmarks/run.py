@@ -19,14 +19,19 @@ artifact (see DESIGN.md §7 for the index):
   overlap_*           — concurrent PREPARE: background compilation
                         overlapped with serving (wall-clock + throughput
                         + downtime contract)
+  planner_*           — workload-aware configuration planner vs the
+                        threshold ElasticPolicy (SLO attainment at
+                        engine-seconds), plus the heterogeneous
+                        A100-vs-L40s configuration choice
 
 Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_reconfig.json`` (reconfigure + migration),
-``benchmarks/BENCH_elastic.json`` (autoscaling trajectory), and
-``benchmarks/BENCH_overlap.json`` (concurrent-PREPARE contract), so the
+``benchmarks/BENCH_elastic.json`` (autoscaling trajectory),
+``benchmarks/BENCH_overlap.json`` (concurrent-PREPARE contract), and
+``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract), so the
 perf trajectory is tracked across PRs. CI produces them via
 
-    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap
+    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner
 
 (``--only`` substring-matches bench function names; no flag runs all.)
 """
@@ -81,6 +86,11 @@ def _write_artifacts() -> None:
         path.write_text(
             json.dumps(_jsonable(ARTIFACTS["overlap"]), indent=2) + "\n")
         emit("_artifact_overlap_json", str(path))
+    if "planner" in ARTIFACTS:
+        path = ART_DIR / "BENCH_planner.json"
+        path.write_text(
+            json.dumps(_jsonable(ARTIFACTS["planner"]), indent=2) + "\n")
+        emit("_artifact_planner_json", str(path))
 
 
 # ---------------------------------------------------------------------------
@@ -232,6 +242,19 @@ def bench_overlap_prepare() -> None:
     ARTIFACTS["overlap"] = bench(emit=emit)
 
 
+def bench_planner_search() -> None:
+    """Workload-aware configuration planner: SLO attainment >= the
+    threshold ElasticPolicy at <= its engine-seconds on a shifting
+    two-label trace; the same demand picks different configurations on
+    A100-like vs L40s-like pools; the switch executes through the
+    ticketed async machinery inside the 50 ms swap budget."""
+    try:
+        from benchmarks.plan_search import bench_plan_search as bench
+    except ImportError:
+        from plan_search import bench_plan_search as bench
+    ARTIFACTS["planner"] = bench(emit=emit)
+
+
 def bench_roofline_table() -> None:
     """Summarize the dry-run records (single-pod mesh) — §Roofline."""
     d = Path("experiments/dryrun")
@@ -282,6 +305,7 @@ BENCHES = [
     bench_live_migration,
     bench_elastic_scaling,
     bench_overlap_prepare,
+    bench_planner_search,
     bench_kernel_latency,
     bench_roofline_table,
 ]

@@ -19,6 +19,7 @@ from repro.core.intents import (  # noqa: F401
     PlacementConstraint,
     RoutingConstraint,
     ScalingConstraint,
+    ServiceLevelConstraint,
     satisfies,
 )
 from repro.core.interpreter import (  # noqa: F401

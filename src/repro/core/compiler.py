@@ -23,6 +23,7 @@ from repro.core.intents import (
     Intent,
     PlacementConstraint,
     RoutingConstraint,
+    tighten_bound,
 )
 from repro.core.labels import Fabric, match_labels
 from repro.sharding.plan import ShardingPlan
@@ -39,6 +40,11 @@ class CompiledPolicy:
     # data-type label -> (min, max) serving-engine counts; consumed by
     # repro.serving.autoscaler.Autoscaler.apply_policy (max None = unbounded)
     scale_bounds: Dict[str, Tuple[int, Optional[int]]] = \
+        dataclasses.field(default_factory=dict)
+    # data-type label -> (max TTFT s, max TPOT s) service-level targets;
+    # consumed by repro.planner.WorkloadPlanner.apply_policy (the Φ_L
+    # planning objective; None = no target on that metric)
+    slo_targets: Dict[str, Tuple[Optional[float], Optional[float]]] = \
         dataclasses.field(default_factory=dict)
 
 
@@ -222,7 +228,39 @@ def compile_intent(
                 continue
             scale_bounds[value] = (lo, hi)
 
+    # ---- service levels (runtime latency layer) — per-label SLO targets ----
+    slo_targets: Dict[str, Tuple[Optional[float], Optional[float]]] = {}
+    for lc in intent.service:
+        matched = [c for c in components if c.matches(lc.sel())]
+        if not matched:
+            errors.append(f"unenforceable: no workload matches {lc.sel()}")
+            continue
+        if (lc.max_ttft_s is not None and lc.max_ttft_s <= 0) or \
+                (lc.max_tpot_s is not None and lc.max_tpot_s <= 0):
+            errors.append(f"non-positive service-level target for "
+                          f"{lc.sel()}: ttft={lc.max_ttft_s} "
+                          f"tpot={lc.max_tpot_s}")
+            continue
+        # targets attach to the routing label (data-type) of the matched
+        # workload class — the key the planner sizes capacity on
+        values = {lc.sel().get("data-type")
+                  or c.labels.get("data-type") for c in matched}
+        values.discard(None)
+        if not values:
+            errors.append(f"unenforceable: service-level selector "
+                          f"{lc.sel()} resolves to no data-type routing "
+                          "label")
+            continue
+        for value in sorted(values):
+            # several clauses can land on one label: INTERSECT (the
+            # tighter target wins — last-wins would silently relax an
+            # earlier promise)
+            ttft, tpot = slo_targets.get(value, (None, None))
+            slo_targets[value] = (tighten_bound(ttft, lc.max_ttft_s),
+                                  tighten_bound(tpot, lc.max_tpot_s))
+
     config = Configuration(placement=placement, paths=paths)
     return CompiledPolicy(intent=intent, config=config, manifests=manifests,
                           flow_rules=flow_rules, plan_updates=plan_updates,
-                          errors=errors, scale_bounds=scale_bounds)
+                          errors=errors, scale_bounds=scale_bounds,
+                          slo_targets=slo_targets)

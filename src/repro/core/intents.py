@@ -107,6 +107,35 @@ class ScalingConstraint:
         return dict(self.selector)
 
 
+def tighten_bound(old: Optional[float], new: Optional[float]
+                  ) -> Optional[float]:
+    """Intersection of two optional upper bounds (the tighter wins) —
+    the merge rule for repeated service-level targets on one label,
+    shared by the compiler and the planner."""
+    if old is None:
+        return new
+    if new is None:
+        return old
+    return min(old, new)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceLevelConstraint:
+    """Φ_L (runtime extension): the serving fabric must keep the latency
+    of the workload class matching `selector` within the given targets
+    ("keep TTFT under 200 ms for phi traffic"). Compiled into per-label
+    planner objectives (`CompiledPolicy.slo_targets`) and enforced by
+    `repro.planner.WorkloadPlanner`, which sizes and places capacity so
+    the cost-model-predicted TTFT/TPOT stay inside the targets."""
+
+    selector: Tuple[Tuple[str, str], ...]     # component-label predicate
+    max_ttft_s: Optional[float] = None        # time-to-first-token target
+    max_tpot_s: Optional[float] = None        # per-output-token target
+
+    def sel(self) -> Dict[str, str]:
+        return dict(self.selector)
+
+
 @dataclasses.dataclass(frozen=True)
 class Intent:
     text: str
@@ -115,6 +144,7 @@ class Intent:
     placement: Tuple[PlacementConstraint, ...] = ()
     routing: Tuple[RoutingConstraint, ...] = ()
     scaling: Tuple[ScalingConstraint, ...] = ()
+    service: Tuple[ServiceLevelConstraint, ...] = ()
     # intents referencing labels absent from the fabric are *unenforceable*
     # and must fail closed (paper Table 6, row 1)
     expect_unenforceable: bool = False

@@ -38,6 +38,7 @@ from repro.core.intents import (
     PlacementConstraint,
     RoutingConstraint,
     ScalingConstraint,
+    ServiceLevelConstraint,
 )
 from repro.core.labels import Fabric, REGIONS
 
@@ -82,6 +83,19 @@ VENDORS = ("huawei", "cisco", "juniper", "arista")
 # serving engines for phi traffic")
 SCALING_NOUNS = ("engine", "engines", "replica", "replicas",
                  "instance", "instances")
+
+# service-level metric phrases ("keep TTFT under 200 ms for phi traffic",
+# "per-token latency below 20 milliseconds")
+SLO_METRICS = {
+    "ttft": ("ttft", "time to first token", "time-to-first-token",
+             "first token", "first-token"),
+    "tpot": ("tpot", "time per output token", "per-token latency",
+             "per token latency", "token latency", "decode latency"),
+}
+# "<metric> under 200 ms" / "below 0.2 seconds" / "within 150ms"
+_SLO_NUM = r"(\d+(?:\.\d+)?)\s*(ms|milliseconds?|s|sec|seconds?)\b"
+_SLO_RE = re.compile(
+    r"(?:under|below|within|less than|at most|<=?)\s+" + _SLO_NUM)
 WORD_NUMS = {"one": 1, "two": 2, "three": 3, "four": 4, "five": 5,
              "six": 6, "seven": 7, "eight": 8, "nine": 9, "ten": 10}
 # trailing \b keeps teen words from misparsing to their prefix
@@ -174,6 +188,7 @@ class DeterministicInterpreter:
         placement: List[PlacementConstraint] = []
         routing: List[RoutingConstraint] = []
         scaling: List[ScalingConstraint] = []
+        service: List[ServiceLevelConstraint] = []
 
         # --- clause splitting (the paper's countermeasure to first-clause
         # capture: decompose multi-clause sentences) ---
@@ -184,18 +199,20 @@ class DeterministicInterpreter:
         for clause in clauses:
             # a clause can carry capacity AND placement/routing predicates
             # ("at least two patient instances in the cloud zone") — parse
-            # all three grammars; each only emits when its own predicates
+            # all four grammars; each only emits when its own predicates
             # are present, so a pure capacity clause adds nothing else
             scaling += self._scaling_clauses(clause)
+            service += self._service_clauses(clause)
             placement += self._placement_clauses(clause)
             routing += self._routing_clauses(clause)
 
         # fold whole-sentence context for clauses the splitter separated from
         # their subjects
-        if not placement and not routing and not scaling:
+        if not placement and not routing and not scaling and not service:
             placement += self._placement_clauses(low)
             routing += self._routing_clauses(low)
             scaling += self._scaling_clauses(low)
+            service += self._service_clauses(low)
 
         routing = self._merge_orphan_routing(routing, low)
 
@@ -204,6 +221,7 @@ class DeterministicInterpreter:
             "placement": [dataclasses.asdict(p) for p in placement],
             "routing": [dataclasses.asdict(r) for r in routing],
             "scaling": [dataclasses.asdict(s) for s in scaling],
+            "service": [dataclasses.asdict(s) for s in service],
         }
         snapshot = json.dumps(sorted(fabric.label_inventory().items(),
                                      key=str), default=str)
@@ -213,10 +231,10 @@ class DeterministicInterpreter:
         intent = Intent(
             text=text, domain=domain,
             complexity="complex" if (len(placement) + len(routing)
-                                     + len(scaling) > 1
+                                     + len(scaling) + len(service) > 1
                                      or domain == "hybrid") else "simple",
             placement=tuple(placement), routing=tuple(routing),
-            scaling=tuple(scaling))
+            scaling=tuple(scaling), service=tuple(service))
         return InterpretResult(
             intent=intent, classified_domain=domain, state_requests=state,
             directives=directives, prompt_tokens=prompt_tokens,
@@ -322,6 +340,64 @@ class DeterministicInterpreter:
             return []      # capacity clause with no workload subject
         return [ScalingConstraint(selector=tuple(sorted(selector.items())),
                                   min_engines=lo or 0, max_engines=hi)]
+
+    # ---- service-level clause grammar (latency targets: planner SLOs) ----
+    def _service_clauses(self, clause: str) -> List[ServiceLevelConstraint]:
+        """Parse latency-target clauses ("keep TTFT under 200 ms for phi
+        traffic") into `ServiceLevelConstraint`s. A clause only emits
+        when BOTH a recognized metric phrase and a bounded number with a
+        time unit are present; the workload subject resolves through the
+        same app/data-type ontology the other grammars use.
+
+        Each metric binds to the first bound stated AFTER its own phrase
+        ("TTFT under 200 ms and TPOT under 20 ms" must not relax TPOT to
+        200 ms), and TTFT phrase spans are masked before TPOT matching
+        ("first token latency" is a TTFT phrasing, not a per-token
+        target)."""
+        ttft_spans = [(m.start(), m.end())
+                      for p in SLO_METRICS["ttft"]
+                      for m in re.finditer(re.escape(p), clause)]
+        positions: Dict[str, int] = {}
+        if ttft_spans:
+            positions["ttft"] = min(s for s, _ in ttft_spans)
+        tpot_hits = [m.start()
+                     for p in SLO_METRICS["tpot"]
+                     for m in re.finditer(re.escape(p), clause)
+                     if not any(s <= m.start() < e for s, e in ttft_spans)]
+        if tpot_hits:
+            positions["tpot"] = min(tpot_hits)
+        if not positions:
+            return []
+        bounds = list(_SLO_RE.finditer(clause))
+        if not bounds:
+            return []
+
+        def seconds(m) -> float:
+            v = float(m.group(1))
+            return v / 1e3 if m.group(2).startswith("m") else v
+
+        targets: Dict[str, float] = {}
+        for metric, pos in positions.items():
+            after = [b for b in bounds if b.start() > pos]
+            v = seconds(after[0] if after else bounds[0])
+            if v > 0:
+                targets[metric] = v
+        if not targets:
+            return []
+
+        subjects = _find_any(clause, ONTOLOGY_APP)
+        data_types = _find_any(clause, ONTOLOGY_DATA)
+        selector: Dict[str, str] = {}
+        if subjects:
+            selector["app"] = subjects[0]
+        elif data_types:
+            selector["data-type"] = data_types[0]
+        else:
+            return []      # latency clause with no workload subject
+        return [ServiceLevelConstraint(
+            selector=tuple(sorted(selector.items())),
+            max_ttft_s=targets.get("ttft"),
+            max_tpot_s=targets.get("tpot"))]
 
     def _merge_orphan_routing(self, routing: List[RoutingConstraint],
                               full_text: str) -> List[RoutingConstraint]:

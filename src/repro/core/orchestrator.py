@@ -42,6 +42,10 @@ class FabricState:
     # scaling intents (the HPA-manifest analogue)
     scale_bounds: Dict[str, Tuple[int, Optional[int]]] = \
         dataclasses.field(default_factory=dict)
+    # data-type label -> (max TTFT s, max TPOT s) committed by
+    # service-level intents (the planner-objective analogue)
+    slo_targets: Dict[str, Tuple[Optional[float], Optional[float]]] = \
+        dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -144,6 +148,7 @@ class Orchestrator:
             self.state.manifests.extend(policy.manifests)
             self.state.plans.update(policy.plan_updates)
             self.state.scale_bounds.update(policy.scale_bounds)
+            self.state.slo_targets.update(policy.slo_targets)
             applied = True
         if self.stabilization_s:
             time.sleep(self.stabilization_s)

@@ -127,6 +127,23 @@ def validate(policy: CompiledPolicy, fabric: Fabric,
             else f"inconsistent bounds min={sc.min_engines} "
                  f"max={sc.max_engines}"))
 
+    # ---- service-level checks (runtime latency targets) ----
+    for i, lc in enumerate(intent.service):
+        matched = [c for c in components if c.matches(lc.sel())]
+        ok = bool(matched)
+        checks.append(Check(
+            f"service[{i}]/workload-exists", ok,
+            f"{len(matched)} component(s) match {lc.sel()}" if ok
+            else f"no component matches selector {lc.sel()} (unenforceable)"))
+        sane = ((lc.max_ttft_s is None or lc.max_ttft_s > 0)
+                and (lc.max_tpot_s is None or lc.max_tpot_s > 0)
+                and not (lc.max_ttft_s is None and lc.max_tpot_s is None))
+        checks.append(Check(
+            f"service[{i}]/targets-sane", sane,
+            f"ttft<={lc.max_ttft_s} tpot<={lc.max_tpot_s}" if sane
+            else f"degenerate service-level targets ttft={lc.max_ttft_s} "
+                 f"tpot={lc.max_tpot_s}"))
+
     if not checks:
         checks.append(Check("no-constraints", False,
                             "intent produced no enforceable constraints"))

@@ -1,0 +1,47 @@
+"""Workload-aware configuration planner: cost-model-driven selection of
+the optimal serving configuration on heterogeneous device pools.
+
+    catalog    DeviceProfile roofline descriptions (A100 / L40S /
+               host-calibrated) attachable per engine or mesh slice;
+    estimator  compiled-HLO cost features through the device roofline ->
+               TTFT / TPOT / throughput / memory estimates;
+    search     candidate enumeration (count x plan variant x profile),
+               fail-closed pruning, demand-forecast scoring;
+    planner    WorkloadPlanner: typed PlanAction sequences with dwell +
+               switching-cost hysteresis, executed through the cluster's
+               ticketed async machinery.
+
+See docs/planner.md for the cost model and a worked intent -> plan
+example.
+"""
+from repro.planner.catalog import (  # noqa: F401
+    A100,
+    DEVICE_CATALOG,
+    L40S,
+    DeviceProfile,
+    calibrate_host_profile,
+    get_profile,
+    register_profile,
+)
+from repro.planner.estimator import (  # noqa: F401
+    CostEstimate,
+    CostFeatures,
+    TrafficMix,
+    estimate,
+    features_from_engine,
+    features_from_hlo,
+)
+from repro.planner.search import (  # noqa: F401
+    Assignment,
+    EngineSpec,
+    LabelDemand,
+    ScoredCandidate,
+    best_candidate,
+    demand_from_tracker,
+    eligible_specs,
+    score_current,
+)
+from repro.planner.planner import (  # noqa: F401
+    PlanAction,
+    WorkloadPlanner,
+)

@@ -1,0 +1,478 @@
+"""`WorkloadPlanner`: demand forecast -> typed `PlanAction` sequence,
+executed through the cluster's ticketed async machinery.
+
+This is the piece that makes the repo *choose* configurations instead of
+only executing them: the threshold `ElasticPolicy` reacts to queue depth
+and is blind to hardware heterogeneity and latency targets; the planner
+runs the `search` over (engine count x plan variant x device profile)
+candidates, scored by the compiled-HLO `estimator`, against the
+`LoadTracker`'s demand forecast and the intent-compiled service-level
+targets (Φ_L) and scale bounds (Φ_S).
+
+Switching discipline (the planner must not flap):
+
+  * DWELL — after executing any action, no further plan changes for
+    ``dwell`` planning rounds (floor violations and infeasibility are
+    exempt: a mandatory floor is enforced immediately);
+  * AMORTIZATION — a switch that only saves cost (no violation fixed)
+    must pay for itself: predicted engine-cost saving over ``horizon_s``
+    must exceed the estimated switching cost (observed PREPARE times
+    from the cluster's own `DowntimeReport` history, plus a migration
+    estimate), times a safety ``switch_margin``;
+  * TICKET-AWARENESS — capacity whose background PREPARE is already in
+    flight (`ServingCluster.pending_spawn_labels`) counts as existing,
+    so a slow compile never triggers duplicate spawns.
+
+Execution maps actions onto the existing state machines — nothing new
+runs in a blocking window: spawn -> `spawn_engine_async`, reconfigure ->
+`reconfigure_async`, retire -> `retire_engine` (migrate mode when peers
+can hold the in-flight work), migrate -> `migrate_requests`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.planner.catalog import DeviceProfile
+from repro.planner.estimator import CostFeatures, features_from_engine
+from repro.planner.search import (
+    Bounds,
+    EngineSpec,
+    LabelDemand,
+    ScoredCandidate,
+    best_candidate,
+    demand_from_tracker,
+    score_current,
+)
+from repro.serving.cluster import ServingCluster
+from repro.sharding.plan import plan_satisfies
+
+SLOTargets = Dict[str, Tuple[Optional[float], Optional[float]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanAction:
+    """One typed reconfiguration step emitted by the planner.
+
+    Attributes:
+        kind: ``"spawn" | "retire" | "reconfigure" | "migrate"``.
+        label: the workload label the action serves.
+        engine: target engine name (source engine for ``migrate``;
+            empty for a spawn — the planner names spawned engines).
+        target: destination engine for ``migrate``.
+        spec: the `EngineSpec` to instantiate (spawn / reconfigure).
+        profile: the device profile the engine is placed on.
+        mode: retirement mode (``"drain"`` / ``"migrate"``).
+        reason: human-readable justification (telemetry).
+    """
+
+    kind: str
+    label: str
+    engine: str = ""
+    target: str = ""
+    spec: Optional[EngineSpec] = None
+    profile: Optional[DeviceProfile] = None
+    mode: str = "drain"
+    reason: str = ""
+
+
+class WorkloadPlanner:
+    """Cost-model-driven configuration planner over a `ServingCluster`.
+
+    Args:
+        cluster: the cluster to plan for.
+        engine_factory: ``factory(spec, label) -> ServingEngine`` building
+            a fresh engine shaped by ``spec`` (the planner installs the
+            label and the spec's merged plan itself).
+        specs: candidate `EngineSpec` variants (plan variants from the
+            compiler x slot sizings).
+        profiles: the heterogeneous device pool (catalog profiles); the
+            first entry is the default assumed for engines the planner
+            did not place (see `attach_profile`).
+        slo_targets: initial per-label ``(max_ttft_s, max_tpot_s)``
+            targets; extended by intent application (`apply_policy`).
+        tick_s: duration of one control-loop tick in seconds (converts
+            the tracker's per-tick EWMA rates into per-second demand).
+        new_tokens: generation-length prior for the forecast.
+        min_rate: forecast rates at or below this floor (req/s) count as
+            zero demand (see `search.demand_from_tracker`).
+        rho_max: utilization ceiling (see `search.best_candidate`).
+        dwell: planning rounds to hold still after executing actions.
+        horizon_s: amortization horizon for pure cost-saving switches.
+        switch_margin: safety multiplier on the switching cost.
+        max_engines_per_label: enumeration cap for unbounded labels.
+    """
+
+    def __init__(self, cluster: ServingCluster,
+                 engine_factory: Callable[[EngineSpec, str], object], *,
+                 specs: Sequence[EngineSpec],
+                 profiles: Sequence[DeviceProfile],
+                 slo_targets: Optional[SLOTargets] = None,
+                 tick_s: float = 1.0,
+                 new_tokens: float = 16.0,
+                 min_rate: float = 0.0,
+                 rho_max: float = 0.85,
+                 dwell: int = 2,
+                 horizon_s: float = 60.0,
+                 switch_margin: float = 1.5,
+                 max_engines_per_label: int = 4):
+        if not specs:
+            raise ValueError("WorkloadPlanner needs at least one EngineSpec")
+        if not profiles:
+            raise ValueError("WorkloadPlanner needs at least one profile")
+        self.cluster = cluster
+        self.engine_factory = engine_factory
+        self.specs = list(specs)
+        self.profiles = list(profiles)
+        self.slo_targets: SLOTargets = dict(slo_targets or {})
+        self.bounds: Dict[str, Bounds] = {}
+        self.tick_s = tick_s
+        self.new_tokens = new_tokens
+        self.min_rate = min_rate
+        self.rho_max = rho_max
+        self.dwell = max(0, dwell)
+        self.horizon_s = horizon_s
+        self.switch_margin = switch_margin
+        self.max_engines_per_label = max_engines_per_label
+        # engine name -> the profile it runs on (heterogeneity attachment)
+        self._engine_profile: Dict[str, DeviceProfile] = {}
+        # engine name -> the spec it was spawned/reconfigured with
+        self._engine_spec: Dict[str, EngineSpec] = {}
+        self._features: Dict[Tuple, CostFeatures] = {}
+        self._since_exec = self.dwell       # first plan() may act at once
+        self._seq = 0
+        # every (action, result) ever executed, in order (telemetry)
+        self.log: List[Tuple[PlanAction, object]] = []
+
+    # ------------------------------------------------------------------
+    # intent application (Orchestrator.submit(apply_to=planner))
+    # ------------------------------------------------------------------
+    def set_slo_target(self, label: str, max_ttft_s: Optional[float],
+                       max_tpot_s: Optional[float]) -> None:
+        """Pin a service-level target; repeated pins INTERSECT (the
+        tighter target wins, mirroring scale-bound merge semantics)."""
+        from repro.core.intents import tighten_bound
+        old_ttft, old_tpot = self.slo_targets.get(label, (None, None))
+        self.slo_targets[label] = (
+            tighten_bound(old_ttft, max_ttft_s),
+            tighten_bound(old_tpot, max_tpot_s))
+
+    def apply_policy(self, policy, components: Sequence = (), *,
+                     async_prepare: bool = False) -> Dict[str, object]:
+        """Intent hook: `Orchestrator.submit(text, apply_to=planner)`.
+
+        Installs the compiled policy's service-level targets
+        (``policy.slo_targets`` — the Φ_L objective) and per-label scale
+        bounds (Φ_S), then delegates route-constraint installation and
+        engine reconfiguration to the cluster's `apply_policy`.
+        """
+        for label, (ttft_s, tpot_s) in getattr(policy, "slo_targets",
+                                               {}).items():
+            self.set_slo_target(label, ttft_s, tpot_s)
+        for label, (lo, hi) in getattr(policy, "scale_bounds", {}).items():
+            self.bounds[label] = (lo, hi)
+        return self.cluster.apply_policy(policy, components=components,
+                                         async_prepare=async_prepare)
+
+    def attach_profile(self, engine: str, profile: DeviceProfile) -> None:
+        """Declare which device class ``engine`` runs on (engines the
+        planner spawns are attached automatically)."""
+        self._engine_profile[engine] = profile
+
+    # ------------------------------------------------------------------
+    # cost features (cached per spec shape)
+    # ------------------------------------------------------------------
+    def features_for(self, spec: EngineSpec) -> CostFeatures:
+        """Compiled-HLO cost features for a spec, cached by its SHAPE
+        (n_slots, s_max, parallelism layout). Restriction fields are
+        normalized out of the key: pins move arrays, they do not change
+        the single-host probe module the features are read from. The
+        first call per shape compiles one probe decode module."""
+        key = (spec.n_slots, spec.s_max,
+               spec.plan.with_(device_constraints=(),
+                               forbidden_collective_axes=()))
+        if key not in self._features:
+            probe = self.engine_factory(spec, "*")
+            self._features[key] = features_from_engine(probe,
+                                                       self.cluster.mesh)
+        return self._features[key]
+
+    # ------------------------------------------------------------------
+    # observation
+    # ------------------------------------------------------------------
+    def forecast(self, tracker) -> Dict[str, LabelDemand]:
+        """The demand forecast from a `LoadTracker` (see
+        `search.demand_from_tracker`)."""
+        return demand_from_tracker(tracker, self.cluster,
+                                   tick_s=self.tick_s,
+                                   new_tokens=self.new_tokens,
+                                   min_rate=self.min_rate)
+
+    def _dedicated(self, label: str) -> List[str]:
+        """Non-draining engines dedicated to ``label``."""
+        out = []
+        for name in self.cluster.engines():
+            try:
+                eng = self.cluster.engine(name)
+            except KeyError:
+                continue
+            if (eng.labels.get(self.cluster.ROUTE_KEY) == label
+                    and name not in self.cluster.draining()):
+                out.append(name)
+        return out
+
+    def _spec_of(self, name: str) -> EngineSpec:
+        if name in self._engine_spec:
+            return self._engine_spec[name]
+        eng = self.cluster.engine(name)
+        return EngineSpec(plan=eng.plan, n_slots=eng.n_slots,
+                          s_max=eng.s_max)
+
+    def _profile_of(self, name: str) -> DeviceProfile:
+        return self._engine_profile.get(name, self.profiles[0])
+
+    def current_config(self) -> Dict[str, Tuple[EngineSpec, DeviceProfile,
+                                                int]]:
+        """The deployed per-label configuration: (spec, profile, count)
+        over dedicated engines, with capacity whose background PREPARE is
+        in flight COUNTED AS DEPLOYED (ticket-awareness: a compiling
+        spawn must suppress duplicate spawns)."""
+        pending = self.cluster.pending_spawn_labels()
+        out: Dict[str, Tuple[EngineSpec, DeviceProfile, int]] = {}
+        labels = set(pending)
+        for name in self.cluster.engines():
+            lbl = self.cluster.engine(name).labels.get(
+                self.cluster.ROUTE_KEY)
+            if lbl:
+                labels.add(lbl)
+        for label in labels:
+            names = self._dedicated(label)
+            count = len(names) + pending.get(label, 0)
+            spec = self._spec_of(names[0]) if names else self.specs[0]
+            profile = self._profile_of(names[0]) if names \
+                else self.profiles[0]
+            out[label] = (spec, profile, count)
+        return out
+
+    # ------------------------------------------------------------------
+    # planning
+    # ------------------------------------------------------------------
+    def propose(self, demand: Mapping[str, LabelDemand],
+                bounds: Optional[Mapping[str, Bounds]] = None
+                ) -> ScoredCandidate:
+        """Run the configuration search for ``demand`` (no hysteresis —
+        the raw optimum; `plan` wraps this with the switching
+        discipline)."""
+        merged_bounds = dict(self.bounds)
+        merged_bounds.update(bounds or {})
+        route_required = {
+            label: self.cluster.required_for(
+                {self.cluster.ROUTE_KEY: label})
+            for label in set(demand) | set(merged_bounds)}
+        return best_candidate(
+            demand, self.slo_targets, specs=self.specs,
+            profiles=self.profiles, features_fn=self.features_for,
+            bounds=merged_bounds, route_required=route_required,
+            rho_max=self.rho_max,
+            max_engines_per_label=self.max_engines_per_label)
+
+    def _switch_cost_s(self, n_events: int) -> float:
+        """Estimated cost of executing ``n_events`` reconfigurations:
+        the cluster's own observed PREPARE times (mean over history,
+        1 s prior when none observed yet) per event."""
+        prepares = [r.prepare_s for r in self.cluster.history
+                    if r.prepare_s > 0]
+        per = (sum(prepares) / len(prepares)) if prepares else 1.0
+        return per * n_events
+
+    def plan(self, demand: Mapping[str, LabelDemand],
+             bounds: Optional[Mapping[str, Bounds]] = None
+             ) -> List[PlanAction]:
+        """Turn a demand forecast into the action sequence that moves the
+        cluster to the best configuration — or an empty list when
+        hysteresis says hold still.
+
+        Pure decision logic: nothing is executed (see `execute`).
+        """
+        self._since_exec += 1
+        merged_bounds = dict(self.bounds)
+        merged_bounds.update(bounds or {})
+        best = self.propose(demand, merged_bounds)
+        current = self.current_config()
+        cur_score = score_current(
+            current, demand, self.slo_targets,
+            features_fn=self.features_for, rho_max=self.rho_max)
+        actions = self._diff(best, current, demand, merged_bounds)
+        if not actions:
+            return []
+
+        mandatory = best.violations < cur_score.violations \
+            or any("floor" in a.reason or "infeasible" in a.reason
+                   or "constraint" in a.reason for a in actions)
+        if not mandatory:
+            if self._since_exec <= self.dwell:
+                return []               # dwell: recently acted
+            # pure cost-saving switch must amortize its switching cost
+            saving = (cur_score.cost - best.cost) * self.horizon_s
+            if saving <= self._switch_cost_s(len(actions)) \
+                    * self.switch_margin:
+                return []
+        return actions
+
+    def _diff(self, best: ScoredCandidate,
+              current: Mapping[str, Tuple[EngineSpec, DeviceProfile, int]],
+              demand: Mapping[str, LabelDemand],
+              bounds: Optional[Mapping[str, Bounds]] = None
+              ) -> List[PlanAction]:
+        bounds = dict(self.bounds if bounds is None else bounds)
+        actions: List[PlanAction] = []
+        pending = self.cluster.pending_spawn_labels()
+        labels = sorted(set(best.config) | set(current))
+        for label in labels:
+            want = best.config.get(label)
+            cur_spec, cur_prof, cur_n = current.get(
+                label, (None, None, 0))
+            want_n = want.count if want else 0
+            live = self._dedicated(label)
+            # count includes pending spawns; only live engines can be
+            # retired or reconfigured
+            if want_n > cur_n:
+                lo, _ = bounds.get(label, (0, None))
+                for _ in range(want_n - cur_n):
+                    why = (f"below floor: {cur_n} < min {lo}"
+                           if cur_n < lo else
+                           f"demand {demand.get(label, LabelDemand(0.0)).rate:.2f} req/s "
+                           f"needs {want_n} x {want.profile.name}")
+                    actions.append(PlanAction(
+                        "spawn", label, spec=want.spec,
+                        profile=want.profile, reason=why))
+            elif want_n < cur_n:
+                excess = cur_n - want_n
+                # retire live engines only (pending tickets expire into
+                # capacity the next round re-evaluates)
+                for name in self._retire_order(live)[:excess]:
+                    mode = "migrate" if self._can_migrate(name, live) \
+                        else "drain"
+                    actions.append(PlanAction(
+                        "retire", label, engine=name, mode=mode,
+                        reason=f"demand needs only {want_n} engine(s)"))
+            elif want is not None and live and pending.get(label, 0) == 0:
+                # same count: reconfigure engines whose plan no longer
+                # matches the chosen spec. An engine whose DEPLOYED plan
+                # fails the label's route constraint is unroutable
+                # (fail-closed) — that reconfigure is mandatory, not a
+                # cost optimization.
+                required = self.cluster.required_for(
+                    {self.cluster.ROUTE_KEY: label})
+                for name in live:
+                    deployed = self.cluster.engine(name).plan
+                    if self._spec_of(name).plan == want.spec.plan \
+                            and (required is None
+                                 or plan_satisfies(deployed, required)):
+                        continue
+                    stale = required is not None \
+                        and not plan_satisfies(deployed, required)
+                    actions.append(PlanAction(
+                        "reconfigure", label, engine=name,
+                        spec=want.spec, profile=want.profile,
+                        reason="route constraint no longer satisfied"
+                               if stale else "plan variant changed"))
+        for label in best.infeasible:
+            actions.append(PlanAction(
+                "hold", label,
+                reason="infeasible: no spec satisfies the route "
+                       "constraint (fail-closed)"))
+        return actions
+
+    def _retire_order(self, names: List[str]) -> List[str]:
+        """Retire the least-loaded engines first (cheapest to move)."""
+        return sorted(names, key=lambda n: self.cluster.engine(n).load)
+
+    def _can_migrate(self, name: str, peers: List[str]) -> bool:
+        """Can ``name``'s in-flight work fit its peers' free slots?  If
+        yes, a migrate-mode retirement reaps immediately instead of
+        waiting out the longest decode."""
+        eng = self.cluster.engine(name)
+        resident = sum(r is not None for r in eng.slot_req)
+        if resident == 0 and not eng.queue:
+            return False               # drain is already instant
+        free = sum(self.cluster.engine(p).free_slots
+                   for p in peers if p != name
+                   and not self.cluster.engine(p).paused)
+        return free >= resident
+
+    # ------------------------------------------------------------------
+    # execution (through the ticketed async machinery)
+    # ------------------------------------------------------------------
+    def _spawn_name(self, label: str) -> str:
+        taken = set(self.cluster.engines()) \
+            | set(self.cluster.pending_spawns())
+        name = f"{label}-pl{self._seq}"
+        while name in taken:
+            self._seq += 1
+            name = f"{label}-pl{self._seq}"
+        self._seq += 1
+        return name
+
+    def execute(self, actions: Sequence[PlanAction], *,
+                async_spawn: bool = True) -> List[Tuple[PlanAction, object]]:
+        """Execute a `plan` through the cluster's existing machinery.
+
+        spawn -> `spawn_engine_async` (sync `spawn_engine` when
+        ``async_spawn=False``), reconfigure -> `reconfigure_async`,
+        retire -> `retire_engine`, migrate -> `migrate_requests`;
+        ``"hold"`` actions (fail-closed infeasibility surfacing) execute
+        nothing.
+
+        Returns:
+            ``[(action, result), ...]`` where result is a
+            `PrepareTicket` for async spawns/reconfigures, a
+            `DowntimeReport` for sync events, or ``None`` for holds.
+            Also appended to ``self.log``.
+        """
+        out: List[Tuple[PlanAction, object]] = []
+        for a in actions:
+            if a.kind == "spawn":
+                engine = self.engine_factory(a.spec, a.label)
+                name = self._spawn_name(a.label)
+                kw = dict(
+                    plan=a.spec.plan,
+                    labels={self.cluster.ROUTE_KEY: a.label},
+                    prefill_lengths=self.cluster.label_prompt_lengths(
+                        a.label))
+                if async_spawn:
+                    res = self.cluster.spawn_engine_async(name, engine,
+                                                          **kw)
+                else:
+                    res = self.cluster.spawn_engine(name, engine, **kw)
+                self._engine_spec[name] = a.spec
+                if a.profile is not None:
+                    self._engine_profile[name] = a.profile
+            elif a.kind == "retire":
+                res = self.cluster.retire_engine(a.engine, mode=a.mode)
+                self._engine_spec.pop(a.engine, None)
+                self._engine_profile.pop(a.engine, None)
+            elif a.kind == "reconfigure":
+                res = self.cluster.reconfigure_async(a.engine, a.spec.plan)
+                self._engine_spec[a.engine] = a.spec
+                if a.profile is not None:
+                    self._engine_profile[a.engine] = a.profile
+            elif a.kind == "migrate":
+                res = self.cluster.migrate_requests(a.engine, a.target)
+            elif a.kind == "hold":
+                res = None
+            else:
+                raise ValueError(f"unknown PlanAction kind {a.kind!r}")
+            out.append((a, res))
+            self.log.append((a, res))
+        if any(a.kind != "hold" for a in actions):
+            self._since_exec = 0
+        return out
+
+    def step(self, tracker, *, async_spawn: bool = True
+             ) -> List[Tuple[PlanAction, object]]:
+        """One standalone planning round: forecast -> plan -> execute.
+        (The `Autoscaler`'s planner mode drives the same three calls from
+        its tick loop so events/trajectory are recorded uniformly.)"""
+        return self.execute(self.plan(self.forecast(tracker)),
+                            async_spawn=async_spawn)

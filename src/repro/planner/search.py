@@ -1,0 +1,327 @@
+"""Configuration search: enumerate candidate cluster configurations and
+score them against a demand forecast.
+
+A candidate assigns, per workload label: an `EngineSpec` (plan variant +
+slot/pool sizing), a `DeviceProfile` (which hardware class serves it —
+this is where heterogeneity enters), and an engine count. The search
+
+  * prunes FAIL-CLOSED: a spec whose plan cannot be made to satisfy the
+    label's route constraint (same `merge_restrictions` semantics the
+    autoscaler uses for spawns) is never a candidate, and engine counts
+    outside the intent-pinned scale bounds are never enumerated;
+  * scores each surviving candidate with the `estimator`: service-level
+    violations first (TTFT/TPOT targets missed, memory that does not fit,
+    utilization above the headroom ceiling), then engine cost
+    (count x devices x the profile's ``cost_rate`` — the engine-seconds
+    objective), then spare headroom as the tie-break;
+  * exploits that the score is separable per label (no cross-label
+    resource coupling in the current model), so the joint optimum is the
+    per-label optimum — documented, and revisited when a shared device
+    pool cap lands.
+
+The demand forecast comes from the `LoadTracker`'s per-label EWMAs
+(`demand_from_tracker`): observed arrival rates and live prompt lengths,
+converted to requests/second by the control loop's tick duration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.planner.catalog import DeviceProfile
+from repro.planner.estimator import (
+    CostEstimate,
+    CostFeatures,
+    TrafficMix,
+    estimate,
+)
+from repro.sharding.plan import (
+    ShardingPlan,
+    merge_restrictions,
+    plan_satisfies,
+)
+
+Bounds = Tuple[int, Optional[int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """One engine shape a candidate may instantiate: a plan variant plus
+    the KV-pool sizing. Hashable — the planner caches compiled-HLO cost
+    features per spec."""
+
+    plan: ShardingPlan
+    n_slots: int = 4
+    s_max: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelDemand:
+    """Forecast demand for one label.
+
+    Attributes:
+        rate: arrivals per second.
+        prompt_len: mean prompt length, tokens.
+        new_tokens: mean generation length, tokens.
+    """
+
+    rate: float
+    prompt_len: float = 64.0
+    new_tokens: float = 16.0
+
+    def mix(self) -> TrafficMix:
+        return TrafficMix(prompt_len=self.prompt_len,
+                          new_tokens=self.new_tokens, rate=self.rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """One label's slice of a candidate configuration."""
+
+    spec: EngineSpec
+    profile: DeviceProfile
+    count: int
+
+
+@dataclasses.dataclass
+class ScoredCandidate:
+    """A fully scored candidate configuration.
+
+    Ordering key (minimize, lexicographic): ``violations`` (graded: SLO
+    misses / misfits count 1 each, overload counts 1 + the excess
+    utilization — see `_violation`), then ``cost`` (engine-seconds
+    weight), then ``-headroom`` (prefer spare capacity among equals).
+    """
+
+    config: Dict[str, Assignment]
+    violations: float
+    cost: float
+    headroom: float
+    per_label: Dict[str, CostEstimate]
+    infeasible: List[str]        # labels no candidate could legally serve
+
+    def sort_key(self) -> Tuple[float, float, float]:
+        return (self.violations, self.cost, -self.headroom)
+
+
+def demand_from_tracker(tracker, cluster, *, tick_s: float = 1.0,
+                        new_tokens: float = 16.0,
+                        default_prompt_len: float = 64.0,
+                        min_rate: float = 0.0
+                        ) -> Dict[str, LabelDemand]:
+    """Derive the per-label demand forecast from a `LoadTracker`.
+
+    The tracker's EWMAs are per control-loop tick; ``tick_s`` converts
+    them to per-second rates (virtual-time loops pass their virtual tick
+    duration). Prompt lengths come from the cluster's recently seen
+    per-label lengths; generation length is the caller's prior (the
+    runtime does not observe a request's budget until it completes).
+    The ``"*"`` unlabeled bucket never owns capacity and is excluded,
+    matching the autoscaler's convention.
+
+    ``min_rate``: rates at or below this floor (per second) forecast as
+    ZERO demand — an EWMA decays geometrically and never quite reaches
+    0, so without a floor a burst's tail would hold its last engine
+    forever (the planner's analogue of `ElasticPolicy.retire_rate`).
+    """
+    if tick_s <= 0:
+        raise ValueError(f"tick_s must be positive, got {tick_s}")
+    out: Dict[str, LabelDemand] = {}
+    for label in tracker.labels():
+        if label == "*":
+            continue
+        lengths = cluster.label_prompt_lengths(label)
+        prompt = (sum(lengths) / len(lengths)) if lengths \
+            else default_prompt_len
+        rate = tracker.rate(label) / tick_s
+        if rate <= min_rate:
+            rate = 0.0
+        out[label] = LabelDemand(rate=rate, prompt_len=prompt,
+                                 new_tokens=new_tokens)
+    return out
+
+
+def eligible_specs(specs: Sequence[EngineSpec],
+                   required: Optional[ShardingPlan]
+                   ) -> List[EngineSpec]:
+    """Fail-closed pruning: keep only specs whose plan, merged with the
+    label's route constraint, actually satisfies it (a spec whose device
+    pins conflict with the constraint degrades to unroutable under
+    `merge_restrictions` — it must never be proposed). The surviving
+    specs carry the MERGED plan, so a spawned engine is immediately
+    routing-eligible."""
+    if required is None:
+        return list(specs)
+    out = []
+    for spec in specs:
+        merged = merge_restrictions(spec.plan, required)
+        if plan_satisfies(merged, required):
+            out.append(dataclasses.replace(spec, plan=merged))
+    return out
+
+
+def _count_range(bounds: Bounds, max_engines: int) -> range:
+    """Counts to enumerate: ``max_engines`` caps only UNBOUNDED labels —
+    an explicit intent-pinned max is honored as stated."""
+    lo, hi = bounds
+    if hi is None:
+        hi = max_engines
+    return range(max(lo, 0), max(hi, lo) + 1)
+
+
+def _violation(est: CostEstimate,
+               targets: Tuple[Optional[float], Optional[float]],
+               rho_max: float) -> float:
+    """Graded violation score for one label's estimate. Zero when the
+    SLO targets hold and utilization stays under the headroom ceiling.
+    Overload contributes 1 PLUS the (clipped) excess utilization, so
+    when every enumerable count violates, the search still prefers the
+    configuration that covers the MOST demand — a binary score would
+    tie all violators and let the cost term scale capacity DOWN exactly
+    when demand spikes past the ceiling."""
+    viol = 0.0
+    if not est.meets(*targets):
+        viol += 1.0
+    if est.utilization > rho_max:
+        viol += 1.0 + min(est.utilization - rho_max, 9.0)
+    return viol
+
+
+def best_candidate(
+    demand: Mapping[str, LabelDemand],
+    targets: Mapping[str, Tuple[Optional[float], Optional[float]]],
+    *,
+    specs: Sequence[EngineSpec],
+    profiles: Sequence[DeviceProfile],
+    features_fn: Callable[[EngineSpec], CostFeatures],
+    bounds: Optional[Mapping[str, Bounds]] = None,
+    default_bounds: Bounds = (0, 4),
+    route_required: Optional[Mapping[str, ShardingPlan]] = None,
+    rho_max: float = 0.85,
+    max_engines_per_label: int = 4,
+) -> ScoredCandidate:
+    """Pick the best configuration for the forecast demand.
+
+    Args:
+        demand: per-label `LabelDemand` (the forecast).
+        targets: per-label ``(max_ttft_s, max_tpot_s)`` service-level
+            targets (missing label / None entry == no target).
+        specs: candidate `EngineSpec` plan/sizing variants.
+        profiles: candidate `DeviceProfile`s (the heterogeneous pool).
+        features_fn: spec -> `CostFeatures` (the planner's cached
+            compiled-HLO extraction; the search itself never compiles).
+        bounds: per-label intent-pinned (min, max) engine counts.
+        default_bounds: bounds for labels not pinned.
+        route_required: per-label route-constraint plans (fail-closed
+            spec pruning).
+        rho_max: utilization ceiling — demand above it counts as a
+            violation even without an explicit SLO, so the search sizes
+            capacity to demand like the threshold policy does, but
+            model-driven.
+        max_engines_per_label: enumeration cap when a label's max bound
+            is unbounded.
+
+    Returns:
+        The best `ScoredCandidate`. Labels with demand but no legally
+        servable spec are listed in ``infeasible`` (fail-closed: the
+        planner surfaces them instead of proposing a non-compliant
+        engine) and receive no assignment.
+    """
+    bounds = dict(bounds or {})
+    route_required = dict(route_required or {})
+    labels = sorted(set(demand) | set(bounds))
+
+    config: Dict[str, Assignment] = {}
+    per_label: Dict[str, CostEstimate] = {}
+    infeasible: List[str] = []
+    violations = 0
+    cost = 0.0
+    headroom = 0.0
+
+    for label in labels:
+        d = demand.get(label, LabelDemand(rate=0.0))
+        lo_hi = bounds.get(label, default_bounds)
+        cands = eligible_specs(specs, route_required.get(label))
+        if not cands:
+            if d.rate > 0 or lo_hi[0] > 0:
+                infeasible.append(label)
+            continue
+        ttft_t, tpot_t = targets.get(label, (None, None))
+        best: Optional[Tuple[Tuple[float, float, float],
+                             Assignment, CostEstimate]] = None
+        for spec in cands:
+            feats = features_fn(spec)
+            for profile in profiles:
+                for count in _count_range(lo_hi, max_engines_per_label):
+                    if count == 0:
+                        # legal only when nothing demands capacity
+                        if d.rate > 0:
+                            continue
+                        a = Assignment(spec, profile, 0)
+                        key = (0.0, 0.0, 0.0)
+                        if best is None or key < best[0]:
+                            best = (key, a, estimate(feats, profile,
+                                                     d.mix(), engines=1))
+                        continue
+                    est = estimate(feats, profile, d.mix(), engines=count)
+                    viol = _violation(est, (ttft_t, tpot_t), rho_max)
+                    c = count * profile.cost_rate * profile.n_devices
+                    hr = max(0.0, 1.0 - est.utilization)
+                    key = (viol, c, -hr)
+                    if best is None or key < best[0]:
+                        best = (key, Assignment(spec, profile, count), est)
+        if best is None:
+            infeasible.append(label)
+            continue
+        key, assignment, est = best
+        config[label] = assignment
+        per_label[label] = est
+        violations += key[0]
+        cost += key[1]
+        headroom += -key[2]
+
+    return ScoredCandidate(config=config, violations=violations, cost=cost,
+                           headroom=headroom, per_label=per_label,
+                           infeasible=infeasible)
+
+
+def score_current(
+    current: Mapping[str, Tuple[EngineSpec, DeviceProfile, int]],
+    demand: Mapping[str, LabelDemand],
+    targets: Mapping[str, Tuple[Optional[float], Optional[float]]],
+    *,
+    features_fn: Callable[[EngineSpec], CostFeatures],
+    rho_max: float = 0.85,
+) -> ScoredCandidate:
+    """Score the configuration that is ALREADY deployed, with the same
+    objective `best_candidate` uses — the hysteresis comparison's other
+    half."""
+    config: Dict[str, Assignment] = {}
+    per_label: Dict[str, CostEstimate] = {}
+    violations = 0.0
+    cost = 0.0
+    headroom = 0.0
+    # labels with demand but NO deployed capacity at all are violations
+    # of the deployed config (demand.rate > 0 and nothing serves it);
+    # graded like total overload so the comparison scale matches
+    # best_candidate's
+    for label, d in demand.items():
+        if label not in current and d.rate > 0:
+            violations += 2.0 + 9.0
+    for label, (spec, profile, count) in current.items():
+        d = demand.get(label, LabelDemand(rate=0.0))
+        a = Assignment(spec, profile, count)
+        config[label] = a
+        if count == 0:
+            if d.rate > 0:
+                violations += 2.0 + 9.0
+            continue
+        est = estimate(features_fn(spec), profile, d.mix(), engines=count)
+        per_label[label] = est
+        violations += _violation(est, targets.get(label, (None, None)),
+                                 rho_max)
+        cost += count * profile.cost_rate * profile.n_devices
+        headroom += max(0.0, 1.0 - est.utilization)
+    return ScoredCandidate(config=config, violations=violations, cost=cost,
+                           headroom=headroom, per_label=per_label,
+                           infeasible=[])

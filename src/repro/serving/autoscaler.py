@@ -251,7 +251,7 @@ class ElasticPolicy:
         satisfy it (a donor whose device pins conflict with the
         constraint would come out of the swap unroutable for every
         label: worse than a cold spawn, not better)."""
-        required = cluster.route_constraints().get(hot_label)
+        required = cluster.required_for({cluster.ROUTE_KEY: hot_label})
         for other in tracker.labels():
             if other in (hot_label, "*"):
                 continue
@@ -275,6 +275,12 @@ class ElasticPolicy:
         per tick). Pure decision logic — execution is the `Autoscaler`'s
         job.
 
+        TICKET-AWARE: capacity whose background PREPARE is still in
+        flight (`ServingCluster.pending_spawn_labels`) counts toward a
+        label's engine count, so bursty load during a slow compile sizes
+        further scale-ups against what is already being built instead of
+        re-requesting it every tick.
+
         Args:
             tracker: the observed per-label load.
             cluster: the live cluster (capacity + idleness queries only).
@@ -286,10 +292,12 @@ class ElasticPolicy:
         """
         decisions: List[ScaleDecision] = []
         claimed: set = set()          # engines already targeted this tick
+        pending = cluster.pending_spawn_labels()
         labels = [v for v in set(tracker.labels()) | set(bounds) if v != "*"]
         for label in sorted(labels):
             lo, hi = bounds.get(label, self.default_bounds)
-            n = len(cluster.engines_for_label(label))
+            n = len(cluster.engines_for_label(label)) \
+                + pending.get(label, 0)
 
             # a pinned floor is mandatory — enforce before anything else.
             # Backstop: if the PREVIOUS floor spawn added a dedicated
@@ -392,6 +400,14 @@ class Autoscaler:
             are suppressed (capacity that is already being built is not
             re-requested every tick). Retire/rebalance stay synchronous:
             they move no compile work.
+        planner: a `repro.planner.WorkloadPlanner` — PLANNER MODE: the
+            threshold `policy` is replaced by cost-model-driven
+            configuration planning (forecast -> search -> PlanAction
+            diff), executed through the same machinery so ``events`` /
+            ``trajectory`` / ``failures`` record uniformly. The
+            tracker/bounds plumbing (and intent application via
+            `apply_policy`) is shared; ``policy`` is ignored while a
+            planner is installed.
 
     Attributes:
         events: ``[(ScaleDecision, DowntimeReport), ...]`` for every
@@ -407,13 +423,15 @@ class Autoscaler:
                  policy: Optional[ElasticPolicy] = None,
                  tracker: Optional[LoadTracker] = None,
                  bounds: Optional[Dict[str, Bounds]] = None,
-                 async_spawn: bool = False):
+                 async_spawn: bool = False,
+                 planner: Optional[object] = None):
         self.cluster = cluster
         self.factory = factory
         self.policy = policy or ElasticPolicy()
         self.tracker = tracker or LoadTracker()
         self.bounds: Dict[str, Bounds] = dict(bounds or {})
         self.async_spawn = async_spawn
+        self.planner = planner
         self.events: List[Tuple[ScaleDecision, DowntimeReport]] = []
         # async spawns whose background PREPARE failed: (decision, error)
         # — surfaced here instead of silently vanishing from the loop
@@ -458,15 +476,23 @@ class Autoscaler:
         """
         for label, (lo, hi) in getattr(policy, "scale_bounds", {}).items():
             self.set_bounds(label, lo, hi)
+        if self.planner is not None:
+            # planner mode: Φ_L service-level targets + bounds flow into
+            # the planner objective; route-constraint installation and
+            # engine reconfiguration delegate to the cluster through it
+            return self.planner.apply_policy(policy, components=components,
+                                             async_prepare=async_prepare)
         return self.cluster.apply_policy(policy, components=components,
                                          async_prepare=async_prepare)
 
     # ------------------------------------------------------------------
     def _plan_for(self, label: str, base: ShardingPlan) -> ShardingPlan:
-        """Merge the label's route constraint (if any) into ``base`` so a
-        spawned/rebalanced engine is immediately routing-eligible (same
+        """Merge the label's route constraint (if any — data-type AND
+        matching selector constraints) into ``base`` so a spawned/
+        rebalanced engine is immediately routing-eligible (same
         fail-closed merge semantics as cluster `apply_policy` swaps)."""
-        required = self.cluster.route_constraints().get(label)
+        required = self.cluster.required_for(
+            {self.cluster.ROUTE_KEY: label})
         if required is None:
             return base
         return merge_restrictions(base, required)
@@ -555,22 +581,53 @@ class Autoscaler:
                 del self._spawn_backoff[label]
         self._reap_pending()
         self.tracker.observe(self.cluster, dt)
-        decisions = self.policy.decide(self.tracker, self.cluster,
-                                       self.bounds)
-        inflight = {d.label for d, t in self._pending if not t.done()}
-        inflight |= set(self._spawn_backoff)
-        executed: List[ScaleDecision] = []
-        for d in decisions:
-            if d.kind == "spawn" and d.label in inflight:
-                continue      # that capacity is already being prepared
-            if d.kind == "spawn" and self.async_spawn:
-                self._pending.append((d, self._spawn_async(d)))
-                inflight.add(d.label)
-            else:
-                self.events.append((d, self._execute(d)))
-            executed.append(d)
+        if self.planner is not None:
+            executed = self._tick_planner()
+        else:
+            decisions = self.policy.decide(self.tracker, self.cluster,
+                                           self.bounds)
+            inflight = {d.label for d, t in self._pending if not t.done()}
+            inflight |= set(self._spawn_backoff)
+            executed = []
+            for d in decisions:
+                if d.kind == "spawn" and d.label in inflight:
+                    continue  # that capacity is already being prepared
+                if d.kind == "spawn" and self.async_spawn:
+                    self._pending.append((d, self._spawn_async(d)))
+                    inflight.add(d.label)
+                else:
+                    self.events.append((d, self._execute(d)))
+                executed.append(d)
         snap = {label: len(self.cluster.engines_for_label(label))
                 for label in self.tracker.labels() if label != "*"}
         snap["total"] = len(self.cluster.engines())
         self.trajectory.append(snap)
+        return executed
+
+    def _tick_planner(self) -> List[ScaleDecision]:
+        """One planner-mode iteration: forecast -> plan -> execute, with
+        the executed `PlanAction`s recorded as `ScaleDecision`-shaped
+        events (async tickets fold into ``events`` at the tick observing
+        their commit, exactly like threshold-mode spawns)."""
+        demand = self.planner.forecast(self.tracker)
+        backoff = set(self._spawn_backoff)
+        actions = [a for a in self.planner.plan(demand, bounds=self.bounds)
+                   if not (a.kind == "spawn" and a.label in backoff)]
+        executed: List[ScaleDecision] = []
+        for a, res in self.planner.execute(actions,
+                                           async_spawn=self.async_spawn):
+            d = ScaleDecision(a.kind, a.label, engine=a.engine,
+                              reason=a.reason, mode=a.mode)
+            if isinstance(res, PrepareTicket):
+                if not res.done():
+                    self._pending.append((d, res))
+                elif res.state == SWAPPED:
+                    self.events.append((d, res.report))
+                elif res.state == FAILED:
+                    self.failures.append((d, res.error))
+                    self._spawn_backoff[a.label] = max(
+                        getattr(self.policy, "cooldown", 1), 1)
+            elif res is not None:          # sync DowntimeReport
+                self.events.append((d, res))
+            executed.append(d)
         return executed

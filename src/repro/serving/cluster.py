@@ -204,6 +204,13 @@ class ServingCluster:
         self.mesh = mesh or _default_mesh()
         self._entries: Dict[str, _EngineEntry] = {}
         self._routes: Dict[str, ShardingPlan] = {}   # label value -> required
+        # route constraints beyond the single ROUTE_KEY value: each entry
+        # is (selector, required) where selector is a multi-key label
+        # mapping (ALL keys must match the request's labels) or an
+        # arbitrary predicate callable(labels) -> bool. Matching
+        # constraints MERGE with the data-type constraint (fail-closed:
+        # conflicting pins degrade to unroutable axes).
+        self._selector_routes: List[Tuple[Any, ShardingPlan]] = []
         self.history: List[DowntimeReport] = []
         self.rejected: List[Request] = []
         # serializes the control plane (routing decisions, swap commits,
@@ -332,6 +339,14 @@ class ServingCluster:
             if entry.serves({self.ROUTE_KEY: value}) \
                     and plan_satisfies(entry.plan, required):
                 axes |= set(required.forbidden_collective_axes)
+        for sel, required in self._selector_routes:
+            if not plan_satisfies(entry.plan, required):
+                continue
+            # mapping selectors scope by engine tenancy; a predicate's
+            # label space cannot be enumerated — check conservatively
+            # (more proof, never less: fail-closed)
+            if callable(sel) or entry.serves(dict(sel)):
+                axes |= set(required.forbidden_collective_axes)
         if not axes:
             return None
         text = hlo_text if hlo_text is not None \
@@ -366,8 +381,49 @@ class ServingCluster:
             return [n for n, e in self._entries.items() if e.draining]
 
     def route_constraints(self) -> Dict[str, ShardingPlan]:
-        """Installed route constraints: label value -> required plan."""
+        """Installed ``data-type`` route constraints: label value ->
+        required plan (see `route_predicates` for the selector-based
+        ones)."""
         return dict(self._routes)
+
+    def route_predicates(self) -> List[Tuple[Any, ShardingPlan]]:
+        """Installed selector-based route constraints: ``(selector,
+        required plan)`` pairs, where selector is a multi-key label
+        mapping or a predicate callable."""
+        with self._lock:
+            return list(self._selector_routes)
+
+    @staticmethod
+    def _selector_matches(selector: Any, labels: Dict[str, str]) -> bool:
+        """Does a request's label set fall under a selector?  Mapping
+        selectors require EVERY key to be present with the exact value
+        (plain subset semantics — no ontology expansion on request
+        labels); callables are arbitrary predicates over the label
+        dict."""
+        if callable(selector):
+            return bool(selector(dict(labels)))
+        return all(labels.get(k) == v for k, v in dict(selector).items())
+
+    def required_for(self, labels: Dict[str, str]
+                     ) -> Optional[ShardingPlan]:
+        """THE route-constraint lookup: the merged required plan for a
+        request carrying ``labels`` — its ``data-type`` constraint plus
+        every matching selector constraint, merged with the fail-closed
+        `merge_restrictions` semantics (conflicting pins degrade to
+        unroutable axis forbids). ``None`` when nothing applies."""
+        with self._lock:
+            reqs: List[ShardingPlan] = []
+            value = labels.get(self.ROUTE_KEY)
+            if value is not None and value in self._routes:
+                reqs.append(self._routes[value])
+            for sel, required in self._selector_routes:
+                if self._selector_matches(sel, labels):
+                    reqs.append(required)
+        if not reqs:
+            return None
+        if len(reqs) == 1:
+            return reqs[0]
+        return merge_restrictions(ShardingPlan(), *reqs)
 
     def set_route_constraint(self, value: str,
                              required: ShardingPlan, *,
@@ -390,10 +446,50 @@ class ServingCluster:
         self._routes[value] = required
         if not (verify_hlo and required.forbidden_collective_axes):
             return
+        self._reverify_engines({self.ROUTE_KEY: value}, required)
+
+    def set_route_predicate(self, selector, required: ShardingPlan, *,
+                            verify_hlo: bool = True) -> None:
+        """Install a route constraint scoped by a SELECTOR instead of a
+        single ``data-type`` value: requests whose labels fall under
+        ``selector`` may only be served by engines whose plan satisfies
+        ``required`` — fail-closed exactly like `set_route_constraint`
+        (no compliant engine means the request is rejected, never
+        silently served).
+
+        Args:
+            selector: a multi-key label mapping (every key must match
+                the request's labels, e.g. ``{"data-type": "phi",
+                "app": "patient"}``) or an arbitrary predicate
+                ``callable(labels) -> bool``.
+            required: the constraint plan (restriction fields only).
+            verify_hlo: re-validate the compiled HLO of registered
+                engines that would serve under the selector (mapping
+                selectors only — a predicate's label space cannot be
+                enumerated, so its engines are checked conservatively:
+                every engine whose plan claims satisfaction).
+
+        Raises:
+            ValueError: an engine failed compiled-HLO validation (it has
+                been quarantined; the constraint stays installed).
+        """
+        with self._lock:
+            self._selector_routes.append((selector, required))
+        if not (verify_hlo and required.forbidden_collective_axes):
+            return
+        probe = dict(selector) if not callable(selector) else None
+        self._reverify_engines(probe, required)
+
+    def _reverify_engines(self, serve_labels: Optional[Dict[str, str]],
+                          required: ShardingPlan) -> None:
+        """Re-validate compiled HLO of engines affected by a newly
+        installed constraint (``serve_labels=None`` == cannot scope by
+        labels; check every plan-satisfying engine, fail-closed)."""
         errors = []
         for e in list(self._entries.values()):
-            if e.quarantined or not e.serves({self.ROUTE_KEY: value}) \
-                    or not plan_satisfies(e.plan, required):
+            if e.quarantined or not plan_satisfies(e.plan, required):
+                continue
+            if serve_labels is not None and not e.serves(serve_labels):
                 continue
             try:
                 self.verify_engine_hlo(e.name)
@@ -417,11 +513,12 @@ class ServingCluster:
 
     def eligible(self, req: Request) -> List[str]:
         """Engines allowed to serve ``req``: tenancy labels must not
-        contradict, the engine's plan must satisfy the label's route
-        constraint (if any), and the engine must not be draining."""
+        contradict, the engine's plan must satisfy every route
+        constraint matching the request's labels (the ``data-type``
+        constraint AND any selector/predicate constraints, merged), and
+        the engine must not be draining."""
+        required = self.required_for(dict(req.labels))
         with self._lock:
-            route_val = req.labels.get(self.ROUTE_KEY)
-            required = self._routes.get(route_val) if route_val else None
             return [e.name for e in self._entries.values()
                     if self._entry_eligible(e, req.labels, required)]
 
@@ -429,8 +526,8 @@ class ServingCluster:
         """Non-draining engines that could serve traffic labeled
         ``data-type=value`` under the current route constraints (the
         autoscaler's per-label capacity view)."""
+        required = self.required_for({self.ROUTE_KEY: value})
         with self._lock:
-            required = self._routes.get(value)
             return [e.name for e in self._entries.values()
                     if self._entry_eligible(e, {self.ROUTE_KEY: value},
                                             required)]
@@ -586,6 +683,11 @@ class ServingCluster:
     def _known_labels(self, extra: Sequence[str] = ()) -> set:
         with self._lock:
             vals = set(extra) | set(self._routes) | set(self._arrivals)
+            for sel, _ in self._selector_routes:
+                if not callable(sel):
+                    v = dict(sel).get(self.ROUTE_KEY)
+                    if v:
+                        vals.add(v)
             for e in self._entries.values():
                 v = e.labels.get(self.ROUTE_KEY)
                 if v:
@@ -656,6 +758,21 @@ class ServingCluster:
                 sh = plan_to_shardings(
                     engine.model.cfg, plan, self.mesh,
                     n_slots=engine.n_slots)
+            # pre-compile the device_put TRANSFER programs for the
+            # target layout (jax caches them by shape/dtype/sharding):
+            # the blocking swap window migrates the live trees with
+            # these exact transfers and must not pay their first-call
+            # compile — the same compile-ahead discipline the
+            # executables get. Probe trees are freed immediately.
+            import jax.numpy as jnp
+            for key, tree in (("params", engine.params),
+                              ("cache", engine.cache)):
+                if key in sh:
+                    probe = jax.device_put(
+                        jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                                     tree), sh[key])
+                    jax.block_until_ready(jax.tree.leaves(probe))
+                    del probe
             executables, n_compiled = engine.aot_executables(
                 sh, prefill_lengths=lengths,
                 prefill_buckets=prefill_buckets)
@@ -1137,6 +1254,24 @@ class ServingCluster:
             self._drop_dead_spawns()
             return list(self._pending_spawns)
 
+    def pending_spawn_labels(self) -> Dict[str, int]:
+        """In-flight spawn capacity per ``data-type`` label: how many
+        `spawn_engine_async` tickets are still compiling toward each
+        label (unlabeled spawns count under ``"*"``). Capacity that is
+        already being built — the ticket-aware `ElasticPolicy` and the
+        `WorkloadPlanner` count it as existing so bursty load cannot
+        trigger duplicate spawns beyond the suppression window."""
+        with self._lock:
+            self._drop_dead_spawns()
+            out: Dict[str, int] = {}
+            for t in self._pending_spawns.values():
+                if t.done():
+                    continue
+                labels = getattr(t._engine_obj, "labels", {}) or {}
+                v = labels.get(self.ROUTE_KEY, "*")
+                out[v] = out.get(v, 0) + 1
+            return out
+
     def migrate_requests(self, src: str, dst: str,
                          rids: Optional[Sequence[int]] = None
                          ) -> List[MigrationRecord]:
@@ -1210,8 +1345,7 @@ class ServingCluster:
                 pos = len(req.prompt)
             else:
                 raise KeyError(f"request {rid} is not on engine {src!r}")
-            route_val = req.labels.get(self.ROUTE_KEY)
-            required = self._routes.get(route_val) if route_val else None
+            required = self.required_for(dict(req.labels))
             if not self._entry_eligible(de, req.labels, required):
                 raise RoutingError(
                     f"engine {dst!r} may not serve request {rid} "
@@ -1266,8 +1400,7 @@ class ServingCluster:
         extra = {e.name: 0 for e in self._entries.values()}
         assignments: Dict[str, List[int]] = {}
         for req, phase, pos in work:
-            route_val = req.labels.get(self.ROUTE_KEY)
-            required = self._routes.get(route_val) if route_val else None
+            required = self.required_for(dict(req.labels))
             need = needed_capacity(req, phase, pos, eng.s_max)
             cands = [e for e in self._entries.values()
                      if e.name != entry.name
@@ -1362,9 +1495,7 @@ class ServingCluster:
                 if e is entry or e.draining:
                     continue
                 if any(self._entry_eligible(
-                        e, r.labels,
-                        self._routes.get(r.labels[self.ROUTE_KEY])
-                        if r.labels.get(self.ROUTE_KEY) else None)
+                        e, r.labels, self.required_for(dict(r.labels)))
                        for r in inflight):
                     e.engine.warm_migration()
             t0 = time.perf_counter()

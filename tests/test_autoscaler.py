@@ -681,3 +681,43 @@ def test_retire_paused_engine_still_drains(fp32_model):
     cluster.run()
     assert "a" not in cluster.engines()            # reaped once empty
     assert cluster.metrics()["completed"] == 1     # nothing stranded
+
+
+# ---------------------------------------------------------------------------
+# ticket-aware policy: in-flight spawn tickets count as pending capacity
+# ---------------------------------------------------------------------------
+
+
+def test_policy_counts_inflight_spawn_tickets_as_capacity(fp32_model):
+    """While a label's async spawn is still compiling, the policy sizes
+    further scale-ups against live + PENDING capacity: a pinned floor of
+    1 with one ticket in flight emits no second spawn, independent of the
+    autoscaler's suppression backstop."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("base", _mk(model, params))
+    ticket = cluster.spawn_engine_async(
+        "phi-inflight", _mk(model, params), labels={"data-type": "phi"})
+    assert cluster.pending_spawn_labels() == {"phi": 1}
+
+    policy = ElasticPolicy(sustain=1, cooldown=0)
+    tracker = LoadTracker(alpha=1.0)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        cluster.submit(_req(rng, cfg, rid, "phi"))
+    tracker.observe(cluster)
+    decisions = policy.decide(tracker, cluster, {"phi": (1, 4)})
+    assert not any(d.kind == "spawn" and d.label == "phi"
+                   for d in decisions), \
+        f"duplicate spawn despite in-flight ticket: {decisions}"
+
+    # once the ticket commits the pending view empties and the live
+    # engine carries the floor — still no duplicate spawn
+    cluster.run(wait_pending=True)
+    assert ticket.done() and cluster.pending_spawn_labels() == {}
+    tracker.observe(cluster)
+    decisions = policy.decide(tracker, cluster, {"phi": (1, 4)})
+    assert not any(d.kind == "spawn" and d.label == "phi"
+                   for d in decisions)
+    cluster.run()
+    assert cluster.metrics()["completed"] == 3

@@ -249,3 +249,85 @@ def test_e2e_intent_reconfigure_serve_roundtrip(fp32_model):
     assert set(report.metrics_after) == set(METRIC_KEYS)
     assert report.metrics_after["completed"] == 1
     assert report.metrics_after["ttft_mean_s"] > 0
+
+# ---------------------------------------------------------------------------
+# route constraints beyond the data-type label (selector / predicate routes)
+# ---------------------------------------------------------------------------
+
+
+def test_multi_key_selector_route_fail_closed(fp32_model):
+    """A multi-key selector constraint binds only requests carrying ALL
+    its keys; matching requests route fail-closed exactly like data-type
+    constraints."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("pinned", ServingEngine(model, params, n_slots=2,
+                                             s_max=32), plan=PINNED)
+    cluster.register("open", ServingEngine(model, params, n_slots=2,
+                                           s_max=32), plan=default_plan())
+    cluster.set_route_predicate({"data-type": "phi", "app": "patient"},
+                                PHI_CONSTRAINT)
+    rng = np.random.default_rng(0)
+
+    # both keys present -> only the compliant engine qualifies
+    name = cluster.submit(_req(rng, cfg, 0, {"data-type": "phi",
+                                             "app": "patient"}))
+    assert name == "pinned"
+    # one key missing -> the selector does not bind; any engine serves
+    cluster.submit(_req(rng, cfg, 1, {"data-type": "phi"}))
+    assert cluster.engine("open").load + cluster.engine("pinned").load == 2
+
+    # no compliant engine at all -> rejected, never silently served
+    cluster.retire_engine("pinned")
+    cluster.run()
+    with pytest.raises(RoutingError):
+        cluster.submit(_req(rng, cfg, 2, {"data-type": "phi",
+                                          "app": "patient"}))
+    assert cluster.rejected[-1].rid == 2
+
+
+def test_predicate_route_and_merge_with_data_type(fp32_model):
+    """An arbitrary label predicate routes fail-closed, and a request
+    matching BOTH a data-type constraint and a predicate constraint must
+    satisfy their MERGE (conflicting pins degrade to unroutable)."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("pinned", ServingEngine(model, params, n_slots=2,
+                                             s_max=32), plan=PINNED)
+    cluster.set_route_predicate(
+        lambda labels: labels.get("tier") == "gold",
+        ShardingPlan(device_constraints=(("pod", 0),)))
+    rng = np.random.default_rng(0)
+    assert cluster.submit(_req(rng, cfg, 0, {"tier": "gold"})) == "pinned"
+
+    # merged requirement: data-type wants pod 1, predicate wants pod 0 —
+    # the conflict degrades to pod-axis CONFINEMENT (documented
+    # merge_restrictions semantics): an engine pinned somewhere on the
+    # pod axis still qualifies, an unpinned one does not
+    cluster.set_route_constraint(
+        "phi", ShardingPlan(device_constraints=(("pod", 1),)))
+    req = cluster.required_for({"data-type": "phi", "tier": "gold"})
+    assert "pod" in req.forbidden_collective_axes
+    assert not dict(req.device_constraints)       # pins degraded away
+    assert plan_satisfies(PINNED, req)
+    assert not plan_satisfies(default_plan(), req)
+    assert cluster.submit(_req(rng, cfg, 1, {"data-type": "phi",
+                                             "tier": "gold"})) == "pinned"
+
+
+def test_selector_route_constrains_migration(fp32_model):
+    """Migration eligibility honors selector constraints: a destination
+    that fails the merged requirement is rejected fail-closed."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("src", ServingEngine(model, params, n_slots=2,
+                                          s_max=32), plan=PINNED)
+    cluster.register("dst", ServingEngine(model, params, n_slots=2,
+                                          s_max=32), plan=default_plan())
+    rng = np.random.default_rng(0)
+    cluster.submit(_req(rng, cfg, 0, {"data-type": "phi",
+                                      "app": "patient"}))
+    cluster.set_route_predicate({"data-type": "phi", "app": "patient"},
+                                PHI_CONSTRAINT)
+    with pytest.raises(RoutingError):
+        cluster.migrate_requests("src", "dst")

@@ -188,3 +188,77 @@ def test_pathfinder_respects_forbid_and_waypoints(data):
         if vid in exempt:
             continue
         assert fabric.vertex_labels(vid).get("mfr") != vendor
+
+
+# ---------------------------------------------------------------------------
+# service-level constraints (Φ_L): parsing, compilation, fail-closed checks
+# ---------------------------------------------------------------------------
+
+
+def test_service_level_clause_parses_to_slo_target():
+    orch = Orchestrator()
+    res = orch.submit("Keep TTFT under 200 ms for phi traffic.")
+    assert res.success, res.report.summary()
+    intent = res.policy.intent
+    assert len(intent.service) == 1
+    sc = intent.service[0]
+    assert dict(sc.selector) == {"data-type": "phi"}
+    assert sc.max_ttft_s == pytest.approx(0.2)
+    assert sc.max_tpot_s is None
+    assert res.policy.slo_targets == {"phi": (pytest.approx(0.2), None)}
+
+
+def test_service_level_tpot_seconds_and_intersection():
+    orch = Orchestrator()
+    res = orch.submit("Per-token latency below 0.05 seconds for the "
+                      "patient service, and keep TTFT under 150 ms for "
+                      "patient records.")
+    assert res.success, res.report.summary()
+    # both clauses resolve to the patient component's phi routing label
+    ttft, tpot = res.policy.slo_targets["phi"]
+    assert ttft == pytest.approx(0.15)
+    assert tpot == pytest.approx(0.05)
+
+
+def test_service_level_unknown_workload_fails_closed():
+    orch = Orchestrator()
+    res = orch.submit("Keep TTFT under 100 ms for the billing service.")
+    assert not res.applied
+    assert any(not c.passed for c in res.report.checks)
+
+
+def test_latency_clause_without_metric_or_subject_emits_nothing():
+    from repro.core import DeterministicInterpreter
+    from repro.core.labels import build_fabric
+    from repro.core.intents import DEFAULT_WORKLOAD
+
+    be = DeterministicInterpreter()
+    fabric = build_fabric((2, 4, 4), ("pod", "data", "model"))
+    # a time bound with no recognized latency metric is not an SLO
+    r1 = be.interpret("Answer within 200 ms.", fabric, DEFAULT_WORKLOAD)
+    assert r1.intent.service == ()
+    # a metric with no workload subject cannot attach to a label
+    r2 = be.interpret("Keep TTFT under 200 ms.", fabric, DEFAULT_WORKLOAD)
+    assert r2.intent.service == ()
+
+
+def test_two_metrics_two_bounds_bind_independently():
+    """"TTFT under 200 ms and TPOT under 20 ms" in ONE clause must not
+    relax the TPOT promise to the TTFT number."""
+    orch = Orchestrator()
+    res = orch.submit("Keep TTFT under 200 ms and TPOT under 20 ms "
+                      "for phi traffic.")
+    assert res.success, res.report.summary()
+    ttft, tpot = res.policy.slo_targets["phi"]
+    assert ttft == pytest.approx(0.2)
+    assert tpot == pytest.approx(0.02)
+
+
+def test_first_token_latency_is_ttft_not_tpot():
+    """"first token latency" is a TTFT phrasing; it must not also
+    install a spurious per-token target."""
+    orch = Orchestrator()
+    res = orch.submit("Keep first token latency under 200 ms for phi "
+                      "traffic.")
+    assert res.success, res.report.summary()
+    assert res.policy.slo_targets["phi"] == (pytest.approx(0.2), None)
