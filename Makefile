@@ -1,15 +1,18 @@
 PY ?= python
 
 .PHONY: test test-stress ci example bench-reconfig bench-elastic \
-        bench-migration bench-overlap bench-planner bench-json docs
+        bench-migration bench-overlap bench-planner bench-paged \
+        bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
 
-# the concurrency suite (threaded submitters vs async PREPARE commits),
-# with faulthandler armed so a wedged run dumps every thread's stack
+# the concurrency suite (threaded submitters vs async PREPARE commits)
+# plus the paged-pool fragmentation stress, with faulthandler armed so a
+# wedged run dumps every thread's stack
 test-stress:
-	PYTHONFAULTHANDLER=1 $(PY) -m pytest -x -q tests/test_concurrent_prepare.py
+	PYTHONFAULTHANDLER=1 $(PY) -m pytest -x -q \
+		tests/test_concurrent_prepare.py tests/test_paged_stress.py
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_intents.py
@@ -29,8 +32,11 @@ bench-overlap:
 bench-planner:
 	PYTHONPATH=src:. $(PY) benchmarks/plan_search.py
 
+bench-paged:
+	PYTHONPATH=src:. $(PY) benchmarks/paged_batching.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged
 
 docs:
 	$(PY) scripts/run_doc_examples.py

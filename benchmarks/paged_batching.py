@@ -1,0 +1,186 @@
+"""Paged-pool saturation benchmark: a mixed-length flash crowd against the
+slot-granular engine vs the paged continuous-batching engine at the SAME
+KV memory budget.
+
+    PYTHONPATH=src:. python benchmarks/paged_batching.py
+
+Trace shape: every request arrives at t=0 (flash crowd — the admission
+path is never idle), prompt and generation lengths drawn from a bimodal
+mix (~80% short interactive requests, a tail of long ones). Both engines
+then get an identical fixed decode-step budget.
+
+The comparison is memory-normalized, which is the whole point of paging:
+
+  * **slot engine**: ``n_slots = kv_budget / s_max`` lanes, each lane
+    pinning a full ``s_max`` KV extent for its request's lifetime — a
+    ~30-token request on the ``s_max=256`` pool wastes ~90% of its lane;
+  * **paged engine**: 6x the lanes over the SAME ``kv_budget`` tokens of
+    KV — each request reserves only the pages its worst-case extent can
+    touch, so the reclaimed padding admits more concurrent requests and
+    every decode step advances more streams.
+
+On the mixed trace the paged engine must sustain MORE decode tokens per
+second AND admit more requests within the step budget (asserted here —
+this is the ISSUE's acceptance gate), and its KV utilization
+(used / allocated tokens) must sit above the slot engine's padding-
+wasted ratio. Wall-clock rates are the median of ``PAGED_BENCH_REPEATS``
+independent drives (fresh engine each) to damp CPU scheduling jitter.
+
+Emitted ``name,value,derived`` CSV rows (also in BENCH_paged.json):
+
+  paged_requests / paged_steps          trace + budget sizing
+  paged_{slot,paged}_tok_s              sustained decode tokens/sec
+  paged_{slot,paged}_admitted           requests prefilled in budget
+  paged_{slot,paged}_completed          requests finished in budget
+  paged_{slot,paged}_kv_util_mean       mean per-step KV utilization
+  paged_throughput_gain                 paged tok/s over slot tok/s
+
+Sizing knobs (CI default is moderate; the nominal saturation trace is
+thousands of requests):
+
+  PAGED_BENCH_REQUESTS   trace length          (default 600)
+  PAGED_BENCH_STEPS      decode step budget    (default 120)
+  PAGED_BENCH_REPEATS    timing repetitions    (default 3)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+
+def _trace(rng, cfg, n, s_max):
+    """(prompt, max_new) pairs: ~80% short interactive, ~20% long."""
+    out = []
+    for _ in range(n):
+        if rng.random() < 0.8:
+            p, m = int(rng.integers(3, 9)), int(rng.integers(14, 21))
+        else:
+            p, m = int(rng.integers(12, 25)), int(rng.integers(20, 29))
+        p = min(p, s_max - 2)
+        out.append((rng.integers(2, cfg.vocab_size, size=p)
+                    .astype("int32"), m))
+    return out
+
+
+def _drive(engine, trace, steps, make_request):
+    """Flash-crowd submit, then a fixed step budget; returns sustained
+    tokens/sec, admitted/completed counts, and mean KV utilization."""
+    reqs = [make_request(i, p, m) for i, (p, m) in enumerate(trace)]
+    for r in reqs:
+        engine.submit(r)
+    utils = []
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        engine.step()
+        utils.append(engine.kv_utilization)
+        if not engine.load:
+            break
+    wall = time.perf_counter() - t0
+    tokens = sum(len(r.tokens_out) for r in reqs)
+    return {
+        "tok_s": tokens / wall if wall > 0 else 0.0,
+        "tokens": tokens,
+        "wall_s": wall,
+        "admitted": sum(1 for r in reqs if r.tokens_out),
+        "completed": len(engine.done),
+        "kv_util_mean": sum(utils) / len(utils) if utils else 0.0,
+    }
+
+
+def bench_paged_batching(arch: str = "minitron_4b", emit=None) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    if emit is None:
+        def emit(name, value, derived=""):
+            print(f"{name},{value},{derived}")
+
+    n_requests = int(os.environ.get("PAGED_BENCH_REQUESTS", "600"))
+    steps = int(os.environ.get("PAGED_BENCH_STEPS", "120"))
+    repeats = int(os.environ.get("PAGED_BENCH_REPEATS", "3"))
+    s_max = 256
+    kv_budget = 4 * s_max                 # tokens of KV memory, both engines
+    page_size = 8
+
+    cfg = dataclasses.replace(get_reduced_config(arch),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    trace = _trace(rng, cfg, n_requests, s_max)
+
+    def make_request(rid, prompt, max_new):
+        return Request(rid, prompt.copy(), max_new_tokens=max_new)
+
+    def slot_engine():
+        return ServingEngine(model, params, n_slots=kv_budget // s_max,
+                             s_max=s_max, paged=False)
+
+    def paged_engine():
+        return ServingEngine(model, params, n_slots=6 * (kv_budget // s_max),
+                             s_max=s_max, page_size=page_size,
+                             kv_tokens=kv_budget)
+
+    # each timing repetition uses a FRESH engine, warmed on the trace's
+    # prompt lengths outside the timed window (the serving loop itself
+    # must never pay a compile); the median damps CPU scheduling jitter
+    warm_lens = sorted({len(p) for p, _ in trace})
+    results = {}
+    for kind, factory in (("slot", slot_engine), ("paged", paged_engine)):
+        runs = []
+        for _ in range(max(repeats, 1)):
+            eng = factory()
+            for i, n in enumerate(warm_lens):
+                eng.submit(make_request(-1 - i,
+                                        trace[0][0][:1].repeat(n), 2))
+            eng.run()
+            eng.done.clear()
+            runs.append(_drive(eng, trace, steps, make_request))
+        results[kind] = sorted(runs, key=lambda r: r["tok_s"])[len(runs) // 2]
+        results[kind]["tok_s_runs"] = [r["tok_s"] for r in runs]
+
+    slot, paged = results["slot"], results["paged"]
+    gain = paged["tok_s"] / slot["tok_s"] if slot["tok_s"] else float("inf")
+
+    # ---- acceptance gates (the ISSUE's criteria, enforced here) ----
+    assert paged["tok_s"] > slot["tok_s"], \
+        f"paged engine slower: {paged['tok_s']:.1f} <= {slot['tok_s']:.1f} tok/s"
+    assert paged["admitted"] > slot["admitted"], \
+        f"paged admitted {paged['admitted']} <= slot {slot['admitted']}"
+    assert paged["kv_util_mean"] > slot["kv_util_mean"], \
+        "paged pool did not raise KV utilization over slot padding"
+
+    emit("paged_requests", n_requests, "flash-crowd trace length")
+    emit("paged_steps", steps, "decode step budget per engine")
+    emit("paged_kv_budget_tokens", kv_budget, "same KV memory, both engines")
+    for kind in ("slot", "paged"):
+        r = results[kind]
+        emit(f"paged_{kind}_tok_s", round(r["tok_s"], 1),
+             f"sustained decode throughput, median of {repeats}")
+        emit(f"paged_{kind}_admitted", r["admitted"],
+             "requests prefilled within the step budget")
+        emit(f"paged_{kind}_completed", r["completed"])
+        emit(f"paged_{kind}_kv_util_mean", round(r["kv_util_mean"], 3),
+             "used / allocated KV tokens, per-step mean")
+    emit("paged_throughput_gain", round(gain, 2),
+         "paged tok/s over slot tok/s at equal KV memory")
+
+    return {
+        "requests": n_requests,
+        "steps": steps,
+        "kv_budget_tokens": kv_budget,
+        "page_size": page_size,
+        "s_max": s_max,
+        "slot": slot,
+        "paged": paged,
+        "throughput_gain": gain,
+    }
+
+
+if __name__ == "__main__":
+    bench_paged_batching()

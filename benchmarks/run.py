@@ -23,15 +23,19 @@ artifact (see DESIGN.md §7 for the index):
                         threshold ElasticPolicy (SLO attainment at
                         engine-seconds), plus the heterogeneous
                         A100-vs-L40s configuration choice
+  paged_*             — paged KV pool + continuous batching vs the
+                        slot-granular engine at equal KV memory on a
+                        mixed-length flash-crowd saturation trace
 
 Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_reconfig.json`` (reconfigure + migration),
 ``benchmarks/BENCH_elastic.json`` (autoscaling trajectory),
-``benchmarks/BENCH_overlap.json`` (concurrent-PREPARE contract), and
-``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract), so the
+``benchmarks/BENCH_overlap.json`` (concurrent-PREPARE contract),
+``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract), and
+``benchmarks/BENCH_paged.json`` (paged-pool saturation contract), so the
 perf trajectory is tracked across PRs. CI produces them via
 
-    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner
+    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged
 
 (``--only`` substring-matches bench function names; no flag runs all.)
 """
@@ -91,6 +95,11 @@ def _write_artifacts() -> None:
         path.write_text(
             json.dumps(_jsonable(ARTIFACTS["planner"]), indent=2) + "\n")
         emit("_artifact_planner_json", str(path))
+    if "paged" in ARTIFACTS:
+        path = ART_DIR / "BENCH_paged.json"
+        path.write_text(
+            json.dumps(_jsonable(ARTIFACTS["paged"]), indent=2) + "\n")
+        emit("_artifact_paged_json", str(path))
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +264,18 @@ def bench_planner_search() -> None:
     ARTIFACTS["planner"] = bench(emit=emit)
 
 
+def bench_paged_batching() -> None:
+    """Paged KV pool + continuous batching: at equal KV memory the paged
+    engine must sustain more decode tokens/sec AND admit more requests
+    than the slot-granular engine on a mixed-length flash-crowd trace,
+    at higher KV utilization (used / allocated tokens)."""
+    try:
+        from benchmarks.paged_batching import bench_paged_batching as bench
+    except ImportError:
+        from paged_batching import bench_paged_batching as bench
+    ARTIFACTS["paged"] = bench(emit=emit)
+
+
 def bench_roofline_table() -> None:
     """Summarize the dry-run records (single-pod mesh) — §Roofline."""
     d = Path("experiments/dryrun")
@@ -306,6 +327,7 @@ BENCHES = [
     bench_elastic_scaling,
     bench_overlap_prepare,
     bench_planner_search,
+    bench_paged_batching,
     bench_kernel_latency,
     bench_roofline_table,
 ]

@@ -53,6 +53,10 @@ class CostFeatures:
         s_max: the engine's KV sequence capacity.
         param_bytes: resident parameter bytes.
         kv_bytes: resident KV-pool bytes.
+        kv_tokens: the engine's KV token capacity (a paged pool's
+            admission budget). 0 means "slot-granular, one full extent
+            per slot" (``n_slots * s_max``) — the pre-paging default, so
+            existing feature tuples keep their meaning.
     """
 
     flops: float
@@ -62,6 +66,18 @@ class CostFeatures:
     s_max: int
     param_bytes: int
     kv_bytes: int
+    kv_tokens: int = 0
+
+    def concurrency(self, prompt_len: float, new_tokens: float) -> int:
+        """Decode slots this engine can actually keep occupied under a
+        traffic mix: the decode width, capped by how many mean-sized
+        requests the KV token budget admits (token-granular memory-fit —
+        a paged engine with a small ``kv_tokens`` budget runs a wide
+        batch of short requests but throttles on long ones)."""
+        cap = self.kv_tokens if self.kv_tokens > 0 \
+            else self.n_slots * self.s_max
+        per_req = min(max(prompt_len + new_tokens, 1.0), float(self.s_max))
+        return max(min(self.n_slots, int(cap / per_req)), 1)
 
     @property
     def flops_per_token(self) -> float:
@@ -185,7 +201,8 @@ def estimate(features: CostFeatures, profile: DeviceProfile,
                         features.bytes, features.wire_bytes, profile)
     prefill_s = max(pf.values())
 
-    throughput = features.n_slots / step_s * engines
+    conc = features.concurrency(mix.prompt_len, mix.new_tokens)
+    throughput = conc / step_s * engines
     rho = mix.tok_rate / throughput if throughput > 0 else math.inf
     if rho < 1.0:
         ttft_s = prefill_s / (1.0 - rho)
@@ -209,7 +226,8 @@ def features_from_hlo(hlo_text: str, *,
                       mesh_shape: Sequence[int] = (1, 1, 1),
                       axis_names: Sequence[str] = ("pod", "data", "model"),
                       n_slots: int, s_max: int,
-                      param_bytes: int, kv_bytes: int) -> CostFeatures:
+                      param_bytes: int, kv_bytes: int,
+                      kv_tokens: int = 0) -> CostFeatures:
     """Build `CostFeatures` from a compiled decode module's text via the
     trip-count-aware `repro.core.hlo_cost` walker (the artifact-level
     source of truth — declared plans are claims, compiled HLO is proof)."""
@@ -220,7 +238,7 @@ def features_from_hlo(hlo_text: str, *,
         flops=float(a["flops"]), bytes=float(a["bytes"]),
         wire_bytes=float(a["wire_bytes_per_device"]),
         n_slots=n_slots, s_max=s_max,
-        param_bytes=param_bytes, kv_bytes=kv_bytes)
+        param_bytes=param_bytes, kv_bytes=kv_bytes, kv_tokens=kv_tokens)
 
 
 def features_from_engine(engine, mesh=None) -> CostFeatures:
@@ -251,4 +269,6 @@ def features_from_engine(engine, mesh=None) -> CostFeatures:
         mesh_shape=mesh_shape, axis_names=axis_names,
         n_slots=engine.n_slots, s_max=engine.s_max,
         param_bytes=tree_bytes(engine.params),
-        kv_bytes=tree_bytes(engine.cache))
+        kv_bytes=tree_bytes(engine.cache),
+        kv_tokens=getattr(engine, "kv_token_capacity",
+                          engine.n_slots * engine.s_max))

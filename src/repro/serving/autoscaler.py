@@ -90,6 +90,7 @@ class LoadTracker:
         self.alpha = alpha
         self._rate: Dict[str, float] = {}
         self._depth: Dict[str, float] = {}
+        self._depth_tokens: Dict[str, float] = {}
         self._last_arrivals: Dict[str, int] = {}
 
     def observe(self, cluster: ServingCluster, dt: float = 1.0) -> None:
@@ -107,6 +108,8 @@ class LoadTracker:
             raise ValueError(f"dt must be positive, got {dt}")
         arrivals = cluster.arrivals()
         depths = cluster.queue_depth_by_label(extra_labels=self.labels())
+        tok_depths = cluster.queued_tokens_by_label(
+            extra_labels=self.labels())
         for label in set(arrivals) | set(depths) | set(self._rate):
             inst_rate = (arrivals.get(label, 0)
                          - self._last_arrivals.get(label, 0)) / dt
@@ -117,6 +120,10 @@ class LoadTracker:
             self._depth[label] = (self._depth.get(label, 0.0)
                                   + self.alpha
                                   * (d - self._depth.get(label, 0.0)))
+            t = float(tok_depths.get(label, 0))
+            self._depth_tokens[label] = (
+                self._depth_tokens.get(label, 0.0)
+                + self.alpha * (t - self._depth_tokens.get(label, 0.0)))
         self._last_arrivals = arrivals
 
     def rate(self, label: str) -> float:
@@ -128,6 +135,12 @@ class LoadTracker:
         """EWMA queued+resident request count for ``label``; 0.0 for
         labels never observed."""
         return self._depth.get(label, 0.0)
+
+    def depth_tokens(self, label: str) -> float:
+        """EWMA outstanding KV-token demand for ``label`` (the
+        token-granular sibling of `depth` — what a paged pool's
+        admission actually meters); 0.0 for labels never observed."""
+        return self._depth_tokens.get(label, 0.0)
 
     def labels(self) -> List[str]:
         """All labels ever observed (including the ``"*"`` unlabeled
@@ -211,10 +224,13 @@ class ElasticPolicy:
     def _dedicated_migratable(self, cluster: ServingCluster, label: str,
                               claimed: set) -> Optional[str]:
         """The least-loaded engine dedicated to ``label`` whose in-flight
-        work fits into its peers' free decode slots — a migrate-mode
+        work fits into its peers' free capacity — a migrate-mode
         retirement can relocate everything and reap it immediately.
-        ``None`` when no peer exists or capacity doesn't fit (fall back
-        to waiting for a drain)."""
+        Capacity is checked token-granularly as well as by decode lane:
+        a paged peer admits by pages, so its free KV tokens (not its
+        lane count) decide whether the resident extents fit. ``None``
+        when no peer exists or capacity doesn't fit (fall back to
+        waiting for a drain)."""
         names = cluster.engines_for_label(label)
         dedicated = [
             n for n in names
@@ -223,12 +239,17 @@ class ElasticPolicy:
         for name in sorted(dedicated, key=lambda n: cluster.engine(n).load):
             eng = cluster.engine(name)
             resident = sum(r is not None for r in eng.slot_req)
+            resident_tok = sum(
+                min(len(r.prompt) + r.max_new_tokens, eng.s_max)
+                for r in eng.slot_req if r is not None)
             # only RUNNING peers count: the relocation refuses to strand
             # a decoding request on a paused engine
             peers = [p for p in names if p != name and p not in claimed
                      and not cluster.engine(p).paused]
             peers_free = sum(cluster.engine(p).free_slots for p in peers)
-            if peers and peers_free >= resident:
+            peers_tok = sum(cluster.engine(p).free_tokens for p in peers)
+            if peers and peers_free >= resident \
+                    and peers_tok >= resident_tok:
                 return name
         return None
 

@@ -63,7 +63,7 @@ from repro.serving.engine import (
 from repro.serving.migration import (
     MigrationError,
     MigrationRecord,
-    migrate_one,
+    migrate_many,
     needed_capacity,
 )
 from repro.serving.prepare import (
@@ -728,6 +728,50 @@ class ServingCluster:
                     out[v] = out.get(v, 0) + 1
         return out
 
+    def queued_tokens_by_label(self, extra_labels: Sequence[str] = ()
+                               ) -> Dict[str, int]:
+        """Token-granular queue depth: outstanding KV tokens per label —
+        a queued request demands its full clamped extent (prompt +
+        generation budget, capped at the engine's ``s_max``), a resident
+        one its remaining extent. Same zero-filled label universe as
+        `queue_depth_by_label`; this is the demand signal a paged pool's
+        admission actually meters (two short requests are half the load
+        of one long one, which request counts cannot see)."""
+        out: Dict[str, int] = {v: 0 for v in self._known_labels(extra_labels)}
+        with self._lock:
+            for e in self._entries.values():
+                s_max = e.engine.s_max
+                for r in e.engine.queue:
+                    v = r.labels.get(self.ROUTE_KEY, "*")
+                    out[v] = out.get(v, 0) + min(
+                        len(r.prompt) + r.max_new_tokens, s_max)
+                for i, r in enumerate(e.engine.slot_req):
+                    if r is None:
+                        continue
+                    v = r.labels.get(self.ROUTE_KEY, "*")
+                    need = min(len(r.prompt) + r.max_new_tokens, s_max)
+                    out[v] = out.get(v, 0) + max(
+                        need - int(e.engine.slot_pos[i]), 0)
+        return out
+
+    def kv_utilization(self) -> Dict[str, float]:
+        """Per-engine KV utilization (used / allocated tokens) plus the
+        allocation-weighted cluster aggregate under ``"*"`` — the
+        slot-padding-waste signal (a slot-granular engine full of short
+        requests reads low; a paged engine's right-sized reservations
+        read high). Engines with nothing resident report 0.0 and weigh
+        nothing in the aggregate."""
+        with self._lock:
+            entries = list(self._entries.values())
+        out: Dict[str, float] = {}
+        used = alloc = 0
+        for e in entries:
+            out[e.name] = e.engine.kv_utilization
+            used += e.engine.kv_used_tokens
+            alloc += e.engine.kv_allocated_tokens
+        out["*"] = used / alloc if alloc else 0.0
+        return out
+
     # ------------------------------------------------------------------
     # online reconfiguration (compile-ahead + blocking swap)
     #
@@ -757,7 +801,7 @@ class ServingCluster:
             if sh is None:
                 sh = plan_to_shardings(
                     engine.model.cfg, plan, self.mesh,
-                    n_slots=engine.n_slots)
+                    n_slots=engine.cache_batch)
             # pre-compile the device_put TRANSFER programs for the
             # target layout (jax caches them by shape/dtype/sharding):
             # the blocking swap window migrates the live trees with
@@ -1333,13 +1377,12 @@ class ServingCluster:
         resident = {r.rid: i for i, r in enumerate(se.engine.slot_req)
                     if r is not None}
         queued = {r.rid: r for r in se.engine.queue}
-        slots_needed = 0
+        decode_needs: List[int] = []   # per decoding request, in tokens
         for rid in rids:
             if rid in resident:
                 slot = resident[rid]
                 req = se.engine.slot_req[slot]
                 phase, pos = "decoding", int(se.engine.slot_pos[slot])
-                slots_needed += 1
             elif rid in queued:
                 req, phase = queued[rid], "queued"
                 pos = len(req.prompt)
@@ -1357,11 +1400,16 @@ class ServingCluster:
                     f"request {rid} needs sequence capacity {need} but "
                     f"{dst!r} has s_max={de.engine.s_max} — failing "
                     "closed, nothing moved")
-        if slots_needed > de.engine.free_slots:
+            if phase == "decoding":
+                decode_needs.append(need)
+        # token-granular admission: lanes AND KV memory (a paged pool
+        # counts the batch's page reservations; a slot pool only lanes)
+        if not de.engine.fits_inflight(decode_needs):
             raise MigrationError(
-                f"batch needs {slots_needed} decode slots but {dst!r} has "
-                f"{de.engine.free_slots} free — failing closed, nothing "
-                "moved")
+                f"batch needs {len(decode_needs)} decode lanes / "
+                f"{sum(decode_needs)} KV tokens but {dst!r} has "
+                f"{de.engine.free_slots} lanes / {de.engine.free_tokens} "
+                "tokens free — failing closed, nothing moved")
         # ---- transfer
         # under the step lock: KV surgery must never interleave with a
         # decode step writing the same pools from the serving thread
@@ -1377,9 +1425,10 @@ class ServingCluster:
             # transfer cost
             se.engine.drain()
             de.engine.drain()
-            return [migrate_one(se.engine, de.engine, rid, src=src,
+            # one batched device_put for the whole pair (per-request
+            # pauses amortize the shared transfer; see migrate_many)
+            return migrate_many(se.engine, de.engine, rids, src=src,
                                 dst=dst)
-                    for rid in rids]
 
     def _relocate_for_retirement(self, entry: _EngineEntry
                                  ) -> List[MigrationRecord]:
@@ -1397,6 +1446,13 @@ class ServingCluster:
                 for i, r in enumerate(eng.slot_req) if r is not None] \
             + [(r, "queued", len(r.prompt)) for r in eng.queue]
         free = {e.name: e.engine.free_slots for e in self._entries.values()}
+        # token-granular capacity alongside lanes: a paged destination
+        # admits by pages, so short requests pack in where whole slots
+        # would not fit (imports may spend the watermark — mirror
+        # `fits_inflight` by budgeting the full free page list)
+        free_tok = {e.name: (e.engine.pool.free_pages * e.engine.page_size
+                             if e.engine.paged else e.engine.free_tokens)
+                    for e in self._entries.values()}
         extra = {e.name: 0 for e in self._entries.values()}
         assignments: Dict[str, List[int]] = {}
         for req, phase, pos in work:
@@ -1408,7 +1464,9 @@ class ServingCluster:
                      and need <= e.engine.s_max]
             if phase == "decoding":
                 cands = [e for e in cands
-                         if not e.engine.paused and free[e.name] > 0]
+                         if not e.engine.paused and free[e.name] > 0
+                         and free_tok[e.name]
+                         >= e.engine.admission_tokens(need)]
             else:
                 running = [e for e in cands if not e.engine.paused]
                 cands = running or cands
@@ -1419,6 +1477,7 @@ class ServingCluster:
             extra[dst.name] += 1
             if phase == "decoding":
                 free[dst.name] -= 1
+                free_tok[dst.name] -= dst.engine.admission_tokens(need)
         records: List[MigrationRecord] = []
         for dst, rids in assignments.items():
             try:

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.serving import migration
+from repro.serving import kvpool, migration
 from repro.serving.migration import MigrationError, SlotSnapshot
 from repro.sharding.plan import ShardingPlan, default_plan
 
@@ -121,11 +121,28 @@ def compute_metrics(done: Sequence[Request]) -> Dict[str, float]:
 class ServingEngine:
     """Single-model engine; decode batch of `n_slots` sequences.
 
+    Two KV memory layouts (see `repro.serving.kvpool`):
+
+      * **paged** (default for attn/MLA models): KV lives in a
+        `PagedKVPool` of fixed-size pages; admission is token-granular
+        (a request reserves ``ceil(need / page_size)`` pages for its
+        worst-case extent and frees them on retirement, failing CLOSED
+        when the pool is out of pages) and active requests are packed
+        into the decode batch each step — a request owns pages, not a
+        lane, so ``n_slots`` is purely the decode width.
+      * **slot-granular** (SSM/enc-dec models, or ``paged=False``): the
+        original fixed ``(n_slots, s_max)`` pool; a request pins one
+        slot for its lifetime.
+
+    Token streams are bitwise identical between the two layouts (decode
+    masks every position beyond the write cursor before the softmax, so
+    page-granule garbage can never leak into a logit).
+
     Args:
         model: the `repro.models.Model` to serve.
         params: its parameter pytree (device arrays).
-        n_slots: continuous-batching width (KV pool batch dim).
-        s_max: KV pool sequence capacity per slot.
+        n_slots: continuous-batching width (decode batch dim).
+        s_max: KV sequence capacity per request.
         greedy: greedy sampling (the only mode currently implemented).
         plan: initial `ShardingPlan`; `default_plan()` when omitted.
         labels: tenancy labels. Under cluster routing an engine label
@@ -133,6 +150,19 @@ class ServingEngine:
             engine labeled ``{"data-type": "phi"}`` never receives
             ``data-type=general`` traffic, but requests without the label
             can still land on it. An unlabeled engine serves all.
+        paged: force the paged pool on/off; ``None`` auto-selects
+            (paged wherever `kvpool.supports_paging` holds).
+        page_size: tokens per KV page (paged mode; clamped to
+            ``s_max``).
+        kv_tokens: token capacity of the paged pool (admission budget).
+            Defaults to ``n_slots * ceil(s_max/page_size) * page_size``
+            — the slot-granular pool's capacity in page units — so the
+            default paged engine never admits less than the slot engine
+            would. Benchmarks decouple it from ``n_slots`` to trade
+            decode width against memory.
+        watermark: free pages admissions must leave behind (headroom
+            for migration imports, which may spend it); allocated ON TOP
+            of ``kv_tokens``, so the admission budget is unaffected.
     """
 
     # cap on the prompt-length fallback set `aot_executables` compiles for:
@@ -146,7 +176,9 @@ class ServingEngine:
     def __init__(self, model: Model, params: PyTree, *, n_slots: int = 4,
                  s_max: int = 128, greedy: bool = True,
                  plan: Optional[ShardingPlan] = None,
-                 labels: Optional[Dict[str, str]] = None):
+                 labels: Optional[Dict[str, str]] = None,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 kv_tokens: Optional[int] = None, watermark: int = 0):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -156,7 +188,36 @@ class ServingEngine:
         self.plan = plan or default_plan()
         self.labels = dict(labels or {})
 
-        self.cache = model.init_cache(n_slots, s_max)
+        self.paged = (kvpool.supports_paging(model) if paged is None
+                      else bool(paged))
+        if self.paged and paged and not kvpool.supports_paging(model):
+            raise ValueError("model has non-positional cache state "
+                             "(SSM/enc-dec) — it cannot be paged")
+        if self.paged:
+            self.page_size = min(page_size, s_max)
+            self.pages_per_seq = -(-s_max // self.page_size)
+            if kv_tokens is None:
+                kv_tokens = n_slots * self.pages_per_seq * self.page_size
+            self.pool: Optional[kvpool.PagedKVPool] = kvpool.PagedKVPool(
+                self.page_size,
+                -(-kv_tokens // self.page_size) + watermark,
+                watermark=watermark)
+            self._pax, self._sax = kvpool.page_axes(model)
+            self.cache = self.pool.init_store(model)
+            # per-lane page tables (scratch-padded to pages_per_seq) and
+            # the owned-page lists the allocator accounting tracks
+            self.page_tables = np.full((n_slots, self.pages_per_seq),
+                                       kvpool.SCRATCH_PAGE, dtype=np.int32)
+            self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            # device-side mirror of page_tables, re-uploaded only when
+            # the host copy changes (tables are stable across pure-decode
+            # steps, so steady-state decode pays no host->device transfer)
+            self._tables_dev: Optional[jnp.ndarray] = None
+            self._paged_fn = kvpool.make_paged_decode(model, self._pax,
+                                                      self._sax)
+        else:
+            self.pool = None
+            self.cache = model.init_cache(n_slots, s_max)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, dtype=np.int32)
         self.queue: List[Request] = []
@@ -168,7 +229,9 @@ class ServingEngine:
         # jitted single-sequence prefill + batched decode (JIT fallbacks);
         # AOT executables, when installed via swap_plan, take precedence
         self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._decode = (jax.jit(self._paged_fn, donate_argnums=(2,))
+                        if self.paged
+                        else jax.jit(model.decode_step, donate_argnums=(2,)))
         self._prefill_exec: Dict[int, Callable] = {}
         self._decode_exec: Optional[Callable] = None
         # padded-bucket prefill executables: an unseen prompt length pads
@@ -248,6 +311,8 @@ class ServingEngine:
                 self._bucket_exec = {}
                 self._bucket_lengths = []
             self._migration_warm = False   # pool-surgery ops too
+            if self.paged:
+                self._tables_dev = None    # re-place beside the new cache
         if executables:
             with self._exec_lock:
                 pf = executables.get("prefill")
@@ -346,8 +411,13 @@ class ServingEngine:
                              self.cache, shardings["cache"])
         tok_sds = sds((self.n_slots, 1), jnp.int32)
         pos_sds = sds((self.n_slots,), jnp.int32)
-        decode = jax.jit(self.model.decode_step, donate_argnums=(2,)) \
-            .lower(p_sds, tok_sds, c_sds, pos_sds).compile()
+        if self.paged:
+            tbl_sds = sds((self.n_slots, self.pages_per_seq), jnp.int32)
+            decode = jax.jit(self._paged_fn, donate_argnums=(2,)) \
+                .lower(p_sds, tok_sds, c_sds, pos_sds, tbl_sds).compile()
+        else:
+            decode = jax.jit(self.model.decode_step, donate_argnums=(2,)) \
+                .lower(p_sds, tok_sds, c_sds, pos_sds).compile()
         n_compiled = 1
 
         def batch_sds(S: int, padded: bool) -> Dict[str, Any]:
@@ -390,9 +460,15 @@ class ServingEngine:
         if exec_ is None:
             tok = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
             pos = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
-            exec_ = jax.jit(self.model.decode_step,
-                            donate_argnums=(2,)) \
-                .lower(self.params, tok, self.cache, pos).compile()
+            if self.paged:
+                tbl = jax.ShapeDtypeStruct(
+                    (self.n_slots, self.pages_per_seq), jnp.int32)
+                exec_ = jax.jit(self._paged_fn, donate_argnums=(2,)) \
+                    .lower(self.params, tok, self.cache, pos, tbl).compile()
+            else:
+                exec_ = jax.jit(self.model.decode_step,
+                                donate_argnums=(2,)) \
+                    .lower(self.params, tok, self.cache, pos).compile()
             with self._exec_lock:
                 if self._decode_exec is None:
                     self._decode_exec = exec_
@@ -429,14 +505,101 @@ class ServingEngine:
 
     @property
     def free_slots(self) -> int:
-        """Decode slots currently unoccupied (migration capacity)."""
+        """Decode lanes currently unoccupied (decode-width capacity;
+        token-granular memory capacity is `free_tokens`)."""
         return sum(r is None for r in self.slot_req)
+
+    # -- token-granular capacity / fragmentation accounting ------------
+    @property
+    def kv_token_capacity(self) -> int:
+        """Total KV tokens this engine can hold for admissions."""
+        if self.paged:
+            return (self.pool.n_pages - self.pool.watermark) * self.page_size
+        return self.n_slots * self.s_max
+
+    @property
+    def free_tokens(self) -> int:
+        """KV tokens still available to admissions (paged: admittable
+        pages x page size; slot-granular: free slots x ``s_max``)."""
+        if self.paged:
+            return self.pool.admittable_pages * self.page_size
+        return self.free_slots * self.s_max
+
+    @property
+    def kv_allocated_tokens(self) -> int:
+        """KV tokens reserved by resident requests (paged: their pages;
+        slot-granular: a full ``s_max`` per occupied slot)."""
+        if self.paged:
+            return self.pool.allocated_tokens
+        return sum(r is not None for r in self.slot_req) * self.s_max
+
+    @property
+    def kv_used_tokens(self) -> int:
+        """KV tokens actually written by resident requests (the decode
+        positions) — the numerator of `kv_utilization`."""
+        return int(sum(int(self.slot_pos[i])
+                       for i, r in enumerate(self.slot_req)
+                       if r is not None))
+
+    @property
+    def kv_utilization(self) -> float:
+        """Used / allocated KV tokens — the slot-padding-waste signal
+        the planner and autoscaler read. 0.0 when nothing is resident;
+        right-sized page reservations push it toward 1.0, full-``s_max``
+        slot pinning keeps it low for short requests."""
+        alloc = self.kv_allocated_tokens
+        return self.kv_used_tokens / alloc if alloc else 0.0
+
+    def admission_tokens(self, need: int) -> int:
+        """Token capacity that admitting a request with a ``need``-token
+        extent would consume here (page-rounded; a slot engine always
+        spends a full slot)."""
+        if self.paged:
+            return self.pool.pages_for(min(need, self.s_max)) \
+                * self.page_size
+        return self.s_max
+
+    def fits_inflight(self, needs: Sequence[int]) -> bool:
+        """Migration pre-flight: can decoding requests with these
+        capacity needs (tokens each) be imported right now — lanes AND
+        memory? Imports may spend the watermark headroom (that is what
+        it is reserved for), so the page budget here is the full free
+        list, not `free_tokens`."""
+        if len(needs) > self.free_slots:
+            return False
+        if self.paged:
+            pages = sum(self.pool.pages_for(min(n, self.s_max))
+                        for n in needs)
+            return pages <= self.pool.free_pages
+        return True
+
+    @property
+    def cache_batch(self) -> int:
+        """Batch dim of the live KV tree (`plan_to_shardings` sizing):
+        the page count for a paged pool, ``n_slots`` otherwise."""
+        return self.pool.store_batch if self.paged else self.n_slots
+
+    def single_layout(self) -> PyTree:
+        """Shape tree of one request's single-sequence KV in this
+        engine's layout (the migration fit target): the page-rounded
+        extent for a paged pool, ``s_max`` for a slot pool."""
+        S = self.pages_per_seq * self.page_size if self.paged else self.s_max
+        return self.model.cache_shapes(1, S)
 
     def _admit(self) -> None:
         while self.queue:
             slot = self._free_slot()
             if slot is None:
                 return
+            pages: List[int] = []
+            if self.paged:
+                head = self.queue[0]
+                need = min(len(head.prompt) + head.max_new_tokens,
+                           self.s_max)
+                try:
+                    pages = self.pool.alloc(self.pool.pages_for(need))
+                except kvpool.PoolOOM:
+                    return    # fail closed: stays queued, FIFO order kept
             req = self.queue.pop(0)
             S = len(req.prompt)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -465,12 +628,57 @@ class ServingEngine:
             tok = int(jnp.argmax(logits[0, : self.vocab]))
             req.tokens_out.append(tok)
             req.t_first = time.time()
-            # merge the single-sequence cache into the slot pool (bucket
-            # entries beyond S are never read: decode masks by position)
-            self.cache = _write_slot(self.cache, cache1, slot,
-                                     S, self.s_max)
+            if self.paged:
+                # scatter the single-sequence cache into the reserved
+                # pages; the scratch-padded table tail absorbs bucket
+                # slack (never read: decode masks by position)
+                row = pages + [kvpool.SCRATCH_PAGE] \
+                    * (self.pages_per_seq - len(pages))
+                self.cache = kvpool.write_pages(self.cache, cache1, row,
+                                                self._pax, self._sax)
+                self.page_tables[slot] = row
+                self.slot_pages[slot] = pages
+                self._tables_dev = None
+            else:
+                # merge the single-sequence cache into the slot pool
+                # (bucket entries beyond S are never read: masked)
+                self.cache = _write_slot(self.cache, cache1, slot,
+                                         S, self.s_max)
             self.slot_req[slot] = req
             self.slot_pos[slot] = S
+
+    def _release_lane(self, slot: int) -> None:
+        """Clear lane bookkeeping; a paged lane returns its pages to the
+        pool the moment the request retires (token-granular free)."""
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        if self.paged:
+            self.pool.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self.page_tables[slot] = kvpool.SCRATCH_PAGE
+            self._tables_dev = None
+
+    def _compact(self) -> None:
+        """Pack active requests into the lowest decode lanes (continuous
+        batching: a request owns PAGES, not a lane, so lane assignment
+        is re-derived every step and the decode batch stays dense). The
+        page-table rows travel with their requests; per-request streams
+        are row-order independent (decode is row-wise)."""
+        order = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if order == list(range(len(order))):
+            return
+        n = len(order)
+        req = [self.slot_req[i] for i in order]
+        pos = [int(self.slot_pos[i]) for i in order]
+        pages = [self.slot_pages[i] for i in order]
+        tables = self.page_tables[order].copy()
+        self.slot_req = req + [None] * (self.n_slots - n)
+        self.slot_pos[:] = 0
+        self.slot_pos[:n] = pos
+        self.slot_pages = pages + [[] for _ in range(self.n_slots - n)]
+        self.page_tables[:] = kvpool.SCRATCH_PAGE
+        self.page_tables[:n] = tables
+        self._tables_dev = None
 
     # ------------------------------------------------------------------
     # live migration (export / import one request's state)
@@ -490,6 +698,26 @@ class ServingEngine:
         compile-ahead discipline `swap_plan` applies to executables.
         Idempotent and state-preserving (results are discarded)."""
         if self._migration_warm:
+            return
+        if self.paged:
+            # mirror the paged export→import pipeline: full-width table
+            # gather, fit to the page-rounded single layout, place, and
+            # two chained full-width page scatters (results discarded —
+            # scratch-row writes only ever touch page 0)
+            row = np.full((1, self.pages_per_seq), kvpool.SCRATCH_PAGE,
+                          dtype=np.int32)
+            kv = kvpool.gather_pages(self.cache, jnp.asarray(row),
+                                     self._pax, self._sax)
+            jax.block_until_ready(jax.tree.leaves(kv))
+            single = migration.fit_single(kv, self.single_layout())
+            single = migration.place_like(single, self.cache)
+            scratch_row = [kvpool.SCRATCH_PAGE] * self.pages_per_seq
+            w1 = kvpool.write_pages(self.cache, single, scratch_row,
+                                    self._pax, self._sax)
+            w2 = kvpool.write_pages(w1, single, scratch_row,
+                                    self._pax, self._sax)
+            jax.block_until_ready(jax.tree.leaves(w2))
+            self._migration_warm = True
             return
         axes = self._migration_axes()
         # mirror the real export→import pipeline exactly (fit/place change
@@ -530,11 +758,21 @@ class ServingEngine:
                 room = self.s_max - 1 - pos
                 if r.max_new_tokens - len(r.tokens_out) > room:
                     r.max_new_tokens = len(r.tokens_out) + room
-                kv = migration.slice_slot(self.cache,
-                                          self._migration_axes(), slot)
+                if self.paged:
+                    # gather the request's pages into the standard
+                    # single-sequence snapshot layout (full-width table:
+                    # scratch-padded tail positions are >= pos — masked
+                    # on the importer, so one static gather shape
+                    # serves every export)
+                    kv = kvpool.gather_pages(
+                        self.cache,
+                        jnp.asarray(self.page_tables[slot][None, :]),
+                        self._pax, self._sax)
+                else:
+                    kv = migration.slice_slot(self.cache,
+                                              self._migration_axes(), slot)
                 jax.block_until_ready(jax.tree.leaves(kv))
-                self.slot_req[slot] = None
-                self.slot_pos[slot] = 0
+                self._release_lane(slot)
                 return SlotSnapshot(rid=rid, request=r, phase="decoding",
                                     pos=pos, kv=kv, src_s_max=self.s_max)
         for i, r in enumerate(self.queue):
@@ -547,13 +785,23 @@ class ServingEngine:
                                     src_s_max=self.s_max)
         raise KeyError(f"request {rid} is not on this engine")
 
-    def import_slot(self, snapshot: SlotSnapshot) -> int:
+    def import_slot(self, snapshot: SlotSnapshot, *,
+                    kv_fitted: Optional[PyTree] = None) -> int:
         """Adopt a migrated request: re-queue a ``"queued"`` snapshot, or
-        write a ``"decoding"`` snapshot's KV into a free slot (refit to
-        this pool's ``s_max`` and `jax.device_put` onto its layout) and
-        resume decode at the snapshot position — no recompilation, no
-        re-run of prefill. Submission stamps are preserved: TTFT/TPOT
-        still measure from the original submit.
+        write a ``"decoding"`` snapshot's KV into a free lane (refit to
+        this pool's single-sequence layout and `jax.device_put` onto it;
+        a paged pool additionally reserves the request's pages — spending
+        the watermark headroom if needed) and resume decode at the
+        snapshot position — no recompilation, no re-run of prefill.
+        Submission stamps are preserved: TTFT/TPOT still measure from
+        the original submit.
+
+        Args:
+            kv_fitted: the snapshot's KV already fitted to this engine's
+                `single_layout` and placed on its sharding — the batched
+                multi-request transfer (`migration.migrate_many`) does
+                one device_put for the whole batch and hands each
+                request its slice here.
 
         Returns:
             KV bytes written into the pool (0 for a queued snapshot).
@@ -561,8 +809,8 @@ class ServingEngine:
         Raises:
             MigrationError: fail-closed, with this engine unchanged —
                 the pool's sequence capacity cannot finish the request's
-                generation (e.g. migrating into a smaller ``s_max``), or
-                no decode slot is free.
+                generation (e.g. migrating into a smaller ``s_max``), no
+                decode lane is free, or the paged pool is out of pages.
         """
         need = migration.required_capacity(snapshot)
         if need > self.s_max:
@@ -579,11 +827,29 @@ class ServingEngine:
             raise MigrationError(
                 f"no free decode slot for request {snapshot.rid} "
                 f"(n_slots={self.n_slots}) — failing closed")
-        single = migration.fit_single(
-            snapshot.kv, self.model.cache_shapes(1, self.s_max))
-        single = migration.place_like(single, self.cache)
-        self.cache = migration.write_single(
-            self.cache, single, self._migration_axes(), slot)
+        if kv_fitted is not None:
+            single = kv_fitted
+        else:
+            single = migration.fit_single(snapshot.kv, self.single_layout())
+            single = migration.place_like(single, self.cache)
+        if self.paged:
+            try:
+                pages = self.pool.alloc(self.pool.pages_for(need),
+                                        reserve=True)
+            except kvpool.PoolOOM as e:
+                raise MigrationError(str(e)) from e
+            # full-width write (scratch-padded tail): one static scatter
+            # shape serves every import; tail garbage goes to page 0
+            row = pages + [kvpool.SCRATCH_PAGE] \
+                * (self.pages_per_seq - len(pages))
+            self.cache = kvpool.write_pages(self.cache, single, row,
+                                            self._pax, self._sax)
+            self.page_tables[slot] = row
+            self.slot_pages[slot] = pages
+            self._tables_dev = None
+        else:
+            self.cache = migration.write_single(
+                self.cache, single, self._migration_axes(), slot)
         jax.block_until_ready(jax.tree.leaves(self.cache))
         self.slot_req[slot] = req
         self.slot_pos[slot] = snapshot.pos
@@ -604,6 +870,8 @@ class ServingEngine:
         if self.paused:
             raise EngineStateError("engine is paused (resume() to serve)")
         self._admit()
+        if self.paged:
+            self._compact()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return 0
@@ -611,12 +879,19 @@ class ServingEngine:
         for i in active:
             tokens[i, 0] = self.slot_req[i].tokens_out[-1]
         # per-slot positions (inactive slots write harmlessly at index 0 —
-        # their slot is re-prefilled before reuse)
+        # their slot is re-prefilled before reuse; paged inactive lanes
+        # point at the scratch page)
         pos = jnp.asarray(self.slot_pos, dtype=jnp.int32)
         with self._exec_lock:
             decode = self._decode_exec or self._decode
-        logits, self.cache = decode(self.params, jnp.asarray(tokens),
-                                    self.cache, pos)
+        if self.paged:
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self.page_tables)
+            logits, self.cache = decode(self.params, jnp.asarray(tokens),
+                                        self.cache, pos, self._tables_dev)
+        else:
+            logits, self.cache = decode(self.params, jnp.asarray(tokens),
+                                        self.cache, pos)
         logits = np.asarray(logits[:, : self.vocab])
         now = time.time()
         for i in active:
@@ -628,8 +903,7 @@ class ServingEngine:
                     or self.slot_pos[i] >= self.s_max - 1):
                 req.t_done = now
                 self.done.append(req)
-                self.slot_req[i] = None
-                self.slot_pos[i] = 0
+                self._release_lane(i)
         self.steps += 1
         return len(active)
 

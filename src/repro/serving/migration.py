@@ -46,10 +46,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Any, Optional
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 if TYPE_CHECKING:                      # no runtime import: engine.py imports us
     from repro.serving.engine import Request
@@ -115,8 +116,13 @@ class MigrationRecord:
         phase: ``"decoding"`` or ``"queued"`` at export time.
         pause_s: the request's blocking window — export + reshard +
             import, measured wall-clock (the request makes no progress
-            inside it).
+            inside it). Under a batched transfer (`migrate_many`) the
+            shared device_put window is amortized: each request's pause
+            is its own export + import plus a ``1/batch`` share of the
+            one transfer.
         bytes_moved: KV bytes transferred (0 for queued requests).
+        batch: decoding requests that shared this record's device_put
+            (1 == an unbatched transfer).
     """
 
     rid: int
@@ -125,6 +131,7 @@ class MigrationRecord:
     phase: str
     pause_s: float
     bytes_moved: int
+    batch: int = 1
 
 
 # ---------------------------------------------------------------------------
@@ -294,3 +301,129 @@ def migrate_one(src_engine, dst_engine, rid: int, *,
     return MigrationRecord(rid=rid, src=src, dst=dst, phase=snap.phase,
                            pause_s=time.perf_counter() - t0,
                            bytes_moved=moved)
+
+
+def migrate_many(src_engine, dst_engine, rids: Sequence[int], *,
+                 src: str = "", dst: str = "") -> List[MigrationRecord]:
+    """Move a batch of requests between one engine pair with ONE
+    `jax.device_put` for all of their KV state, instead of one per
+    request (`ServingCluster.migrate_requests` calls this).
+
+    Pipeline: export every snapshot, fit each decoding snapshot onto the
+    destination's single-sequence layout, CONCATENATE them along the
+    batch axis, place the whole batch on the destination's sharding in
+    one transfer, then slice per request and import. The per-request
+    ``pause_s`` is honest under batching: each request's own export +
+    import window plus a ``1/batch`` share of the shared transfer (the
+    batching is exactly what makes the shared window small).
+
+    Fail-closed: if any import fails, that request AND every
+    not-yet-imported one are restored to the source (which always fits
+    its own state) before the error propagates — nothing is ever lost
+    mid-batch. Requests imported before the failure remain moved.
+
+    Returns:
+        One `MigrationRecord` per request, in ``rids`` order, with
+        ``batch`` set to the number of decoding requests that shared
+        the transfer.
+
+    Raises:
+        KeyError: a ``rid`` is not on the source engine (raised during
+            export; earlier exports are restored).
+        MigrationError: an import failed closed (see above).
+    """
+    # Warm everything that can compile BEFORE the first export, while the
+    # requests are still live and serving: the destination layout/axes
+    # lookups and — for cohorts of 2+ — the per-request batched gather
+    # (its first use at a new cohort shape costs ~200 ms of XLA compile,
+    # which would otherwise land inside the shared transfer window that
+    # pause_s shares out across the cohort).
+    n_dec = sum(1 for rid in rids
+                if any(r is not None and r.rid == rid
+                       for r in src_engine.slot_req))
+    layout = axes = None
+    if n_dec:
+        layout = dst_engine.single_layout()
+        axes = dst_engine._migration_axes()
+        if n_dec > 1:
+            dummy = jax.tree.map(
+                lambda ax, l: (np.zeros(
+                    l.shape[:ax] + (n_dec,) + l.shape[ax + 1:],
+                    dtype=l.dtype) if ax >= 0 else l),
+                axes, layout)
+            warm = place_like(dummy, dst_engine.cache)
+            warm = jax.tree.map(
+                lambda ax, b: (jnp.take(b, jnp.asarray([0], jnp.int32),
+                                        axis=ax) if ax >= 0 else b),
+                axes, warm)
+            jax.block_until_ready(jax.tree.leaves(warm))
+
+    snaps: List[SlotSnapshot] = []
+    t_export: Dict[int, float] = {}
+    for rid in rids:
+        t0 = time.perf_counter()
+        try:
+            snap = src_engine.export_slot(rid)
+        except KeyError:
+            for s in snaps:            # unwind: nothing moved
+                src_engine.import_slot(s)
+            raise
+        if src:
+            snap.src_engine = src
+        t_export[rid] = time.perf_counter() - t0
+        snaps.append(snap)
+
+    decoding = [s for s in snaps if s.phase == "decoding"]
+    fitted: Dict[int, PyTree] = {}
+    t_share = 0.0
+    if decoding:
+        t0 = time.perf_counter()
+        if layout is None:             # unreachable unless phases shifted
+            layout = dst_engine.single_layout()   # between count and export
+            axes = dst_engine._migration_axes()
+        fits = [fit_single(s.kv, layout) for s in decoding]
+        if len(fits) == 1:
+            batched = fits[0]
+        else:
+            # concatenate on the HOST: np.concatenate never compiles, so
+            # the pause window stays compile-free for ANY cohort size
+            # (an XLA concat/slice would build one executable per batch
+            # size and per index — all inside the measured pause)
+            batched = jax.tree.map(
+                lambda ax, *ls: (np.concatenate(
+                    [np.asarray(l) for l in ls], axis=ax)
+                    if ax >= 0 else ls[0]),
+                axes, *fits)
+        placed = place_like(batched, dst_engine.cache)   # ONE device_put
+        jax.block_until_ready(jax.tree.leaves(placed))
+        for i, s in enumerate(decoding):
+            if len(decoding) == 1:
+                fitted[s.rid] = placed
+            else:
+                # index passed as device DATA, not a baked constant: one
+                # gather executable per leaf shape serves every i
+                idx = jnp.asarray([i], dtype=jnp.int32)
+                fitted[s.rid] = jax.tree.map(
+                    lambda ax, b: (jnp.take(b, idx, axis=ax)
+                                   if ax >= 0 else b),
+                    axes, placed)
+        t_share = (time.perf_counter() - t0) / len(decoding)
+
+    records: List[MigrationRecord] = []
+    for k, snap in enumerate(snaps):
+        t0 = time.perf_counter()
+        try:
+            moved = dst_engine.import_slot(snap,
+                                           kv_fitted=fitted.get(snap.rid))
+        except MigrationError:
+            for s in snaps[k:]:        # this one + every not-yet-imported
+                src_engine.import_slot(s)
+            raise
+        decode_share = t_share if snap.phase == "decoding" else 0.0
+        records.append(MigrationRecord(
+            rid=snap.rid, src=src, dst=dst, phase=snap.phase,
+            pause_s=t_export[snap.rid] + decode_share
+            + (time.perf_counter() - t0),
+            bytes_moved=moved,
+            batch=len(decoding) if snap.phase == "decoding" else 1))
+    return records

@@ -1,0 +1,311 @@
+"""Paged KV-cache pool + continuous batching: allocator invariants
+(fail-closed OOM, watermark headroom, double-free detection), the
+bitwise-identity contract against the slot-granular engine, token-
+granular admission beyond the slot-equivalent budget, migration across
+pool layouts, and the `kv_utilization` metrics view.
+
+Uses the shared serving harness from conftest (``fp32_model`` session
+fixture, `make_engine`/`baseline_streams`)."""
+import numpy as np
+import pytest
+from conftest import baseline_streams as _baseline_streams
+from conftest import make_engine as _mk
+
+from repro.serving import MigrationError, Request, ServingCluster
+from repro.serving.kvpool import (
+    SCRATCH_PAGE,
+    PagedKVPool,
+    PoolOOM,
+    page_axes,
+    supports_paging,
+)
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+            for n in sizes]
+
+
+# ---------------------------------------------------------------------------
+# allocator unit tests (no model, no device work)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagedKVPool(page_size=16, n_pages=8)
+    assert pool.free_pages == 8
+    assert pool.store_batch == 9          # data pages + the scratch page
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert len(a) == 3 and len(b) == 2
+    assert not set(a) & set(b)
+    assert SCRATCH_PAGE not in a + b      # page 0 is never handed out
+    assert all(1 <= p <= 8 for p in a + b)
+    assert pool.free_pages == 3
+    assert pool.allocated_tokens == 5 * 16
+    pool.free(a)
+    pool.free(b)
+    assert pool.free_pages == 8
+    assert pool.allocated_tokens == 0
+
+
+def test_pool_pages_for_rounds_up():
+    pool = PagedKVPool(page_size=16, n_pages=4)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+    assert pool.pages_for(0) == 1         # every request owns >= 1 page
+
+
+def test_pool_oom_fails_closed():
+    """An allocation that does not fit raises and allocates NOTHING —
+    the caller leaves the request queued, state unchanged."""
+    pool = PagedKVPool(page_size=16, n_pages=4)
+    pool.alloc(3)
+    with pytest.raises(PoolOOM):
+        pool.alloc(2)
+    assert pool.free_pages == 1           # the failed alloc took nothing
+    pool.alloc(1)                         # what remains is still usable
+    assert pool.free_pages == 0
+
+
+def test_pool_watermark_reserved_for_imports():
+    """Plain admission must leave the watermark behind; migration
+    imports (``reserve=True``) may spend it — that headroom exists
+    exactly so an import burst cannot be starved by admissions."""
+    pool = PagedKVPool(page_size=16, n_pages=6, watermark=2)
+    assert pool.admittable_pages == 4
+    pool.alloc(4)
+    with pytest.raises(PoolOOM):
+        pool.alloc(1)                     # would dip below the watermark
+    assert pool.free_pages == 2
+    got = pool.alloc(2, reserve=True)     # import spends the headroom
+    assert len(got) == 2 and pool.free_pages == 0
+    with pytest.raises(PoolOOM):
+        pool.alloc(1, reserve=True)       # truly empty still fails closed
+
+
+def test_pool_free_rejects_bookkeeping_bugs():
+    pool = PagedKVPool(page_size=8, n_pages=4)
+    pages = pool.alloc(2)
+    pool.free(pages)
+    with pytest.raises(ValueError):
+        pool.free(pages)                  # double free
+    p = pool.alloc(1)
+    with pytest.raises(ValueError):
+        pool.free(p + p)                  # duplicates within one call
+    with pytest.raises(ValueError):
+        pool.free([SCRATCH_PAGE])         # the scratch page is not freeable
+    with pytest.raises(ValueError):
+        pool.free([99])                   # out of range
+
+
+def test_pool_ctor_validation():
+    with pytest.raises(ValueError):
+        PagedKVPool(page_size=0, n_pages=4)
+    with pytest.raises(ValueError):
+        PagedKVPool(page_size=8, n_pages=0)
+    with pytest.raises(ValueError):
+        PagedKVPool(page_size=8, n_pages=4, watermark=4)
+
+
+# ---------------------------------------------------------------------------
+# paging soundness predicate + axis probe
+# ---------------------------------------------------------------------------
+
+
+def test_supports_paging_and_axes(fp32_model):
+    cfg, model, params = fp32_model
+    assert supports_paging(model)         # attn mixers -> pageable
+    import jax
+    pax, sax = page_axes(model)
+    for p, s in zip(jax.tree.leaves(pax), jax.tree.leaves(sax)):
+        assert s == p + 1                 # seq right after the page axis
+
+
+def test_ssm_models_fall_back_to_slot_pool():
+    """SSM recurrent state has no sequence dim — `supports_paging` must
+    exclude it, the engine must auto-select the slot pool, and forcing
+    ``paged=True`` must fail loudly."""
+    from conftest import build_tiny_model
+
+    from repro.serving import ServingEngine
+
+    cfg, model, params = build_tiny_model("mamba2_370m")
+    assert not supports_paging(model)
+    eng = ServingEngine(model, params, n_slots=2, s_max=32)
+    assert not eng.paged and eng.pool is None
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, n_slots=2, s_max=32, paged=True)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bitwise identity + token-granular admission
+# ---------------------------------------------------------------------------
+
+
+def test_paged_is_default_and_streams_bitwise_identical(fp32_model):
+    """The headline contract: the paged engine (the default for attn
+    models) produces bitwise-identical token streams to the slot-
+    granular engine on a mixed-length trace — garbage in scratch-padded
+    page extents is masked before the fp32 softmax."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg, (5, 9, 6, 13, 3, 8), seed=7)
+    expect = _baseline_streams(model, params, prompts, new=8)
+
+    eng = _mk(model, params, n_slots=4, s_max=32, page_size=8)
+    assert eng.paged                      # default ON for attn models
+    reqs = [Request(i, p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+    # continuous batching drained everything and reclaimed every page
+    assert eng.pool.free_pages == eng.pool.n_pages
+    assert eng.kv_allocated_tokens == 0
+
+
+def test_paged_slot_parity_when_forced_off(fp32_model):
+    """``paged=False`` still serves the exact same streams (the fallback
+    path the SSM/enc-dec models rely on is never behind)."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg, (4, 11, 7), seed=11)
+    expect = _baseline_streams(model, params, prompts, new=6)
+    eng = _mk(model, params, n_slots=4, s_max=32, paged=False)
+    assert not eng.paged
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+
+def test_token_budget_gates_admission_not_lanes(fp32_model):
+    """A paged engine with a reduced ``kv_tokens`` budget throttles on
+    memory, not lanes: requests wait in queue while pages are scarce,
+    then complete with unchanged streams once pages free up."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg, (6, 6, 6, 6), seed=3)
+    expect = _baseline_streams(model, params, prompts, new=8)
+    # each request needs 6 + 8 = 14 tokens -> 2 pages of 8; budget of 4
+    # pages admits exactly two at a time despite 4 free lanes
+    eng = _mk(model, params, n_slots=4, s_max=32, page_size=8, kv_tokens=32)
+    reqs = [Request(i, p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    resident = sum(r is not None for r in eng.slot_req)
+    assert resident == 2                  # lanes free, pages exhausted
+    assert eng.free_tokens == 0
+    assert len(eng.queue) == 2            # fail-closed: still queued
+    eng.run()
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+    assert eng.pool.free_pages == eng.pool.n_pages
+
+
+def test_kv_utilization_reflects_used_over_allocated(fp32_model):
+    cfg, model, params = fp32_model
+    eng = _mk(model, params, n_slots=2, s_max=32, page_size=8)
+    assert eng.kv_utilization == 0.0      # idle engine: no allocation
+    req = Request(0, _prompts(cfg, (6,))[0], max_new_tokens=8)
+    eng.submit(req)
+    eng.step()
+    # 6 prompt + 1 generated = slot_pos 7 used; 14-token worst case -> 2
+    # pages = 16 allocated
+    assert eng.kv_used_tokens == 7
+    assert eng.kv_allocated_tokens == 16
+    assert eng.kv_utilization == pytest.approx(7 / 16)
+    before = eng.kv_utilization
+    eng.step()
+    assert eng.kv_utilization > before    # fills as decode proceeds
+    eng.run()
+    assert eng.kv_utilization == 0.0
+
+
+# ---------------------------------------------------------------------------
+# migration across pool layouts
+# ---------------------------------------------------------------------------
+
+
+def test_migrate_paged_to_paged_bitwise_identical(fp32_model):
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg, (5, 7, 6, 8), seed=5)
+    expect = _baseline_streams(model, params, prompts, new=8)
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, n_slots=4, page_size=8))
+    reqs = [Request(i, p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    for r in reqs:
+        cluster.submit(r)
+    for _ in range(3):
+        cluster.step()
+    cluster.register("dst", _mk(model, params, n_slots=4, page_size=8))
+    records = cluster.migrate_requests("src", "dst")
+    assert len(records) == 4
+    # the whole decoding cohort moved in ONE batched transfer
+    assert all(m.batch == 4 for m in records if m.phase == "decoding")
+    assert cluster.engine("src").load == 0
+    cluster.run()
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+
+def test_migrate_across_pool_layouts_bitwise_identical(fp32_model):
+    """Slot -> paged and paged -> slot both preserve streams: the
+    migration snapshot is layout-neutral (a dense single-sequence KV)."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg, (5, 9), seed=9)
+    expect = _baseline_streams(model, params, prompts, new=8)
+    for src_kw, dst_kw in (
+            (dict(paged=False), dict(page_size=8)),
+            (dict(page_size=8), dict(paged=False))):
+        cluster = ServingCluster()
+        cluster.register("src", _mk(model, params, n_slots=4, **src_kw))
+        reqs = [Request(i, p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            cluster.submit(r)
+        for _ in range(2):
+            cluster.step()
+        cluster.register("dst", _mk(model, params, n_slots=4, **dst_kw))
+        cluster.migrate_requests("src", "dst")
+        cluster.run()
+        assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+
+def test_migrate_into_exhausted_pool_fails_closed(fp32_model):
+    """A destination whose pool cannot hold the incoming pages refuses
+    the migration; the request is restored and finishes at the source."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, n_slots=2, s_max=48))
+    # 2 lanes but only 2 pages of 8 = 16 tokens of budget; the resident
+    # request below needs 8 + 20 = 28 tokens -> 4 pages
+    cluster.register("tiny", _mk(model, params, n_slots=2, s_max=48,
+                                 page_size=8, kv_tokens=16))
+    rng = np.random.default_rng(2)
+    req = Request(0, rng.integers(2, cfg.vocab_size, size=8)
+                  .astype(np.int32), max_new_tokens=20)
+    cluster.engine("src").submit(req)
+    cluster.step()
+    with pytest.raises(MigrationError):
+        cluster.migrate_requests("src", "tiny", rids=[0])
+    assert cluster.engine("src").load == 1   # restored, not dropped
+    assert cluster.engine("tiny").pool.free_pages == 2  # nothing leaked
+    cluster.run()
+    assert len(req.tokens_out) == 20
+
+
+def test_cluster_kv_utilization_view(fp32_model):
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params, n_slots=2, page_size=8))
+    cluster.register("b", _mk(model, params, n_slots=2, page_size=8))
+    util = cluster.kv_utilization()
+    assert util == {"a": 0.0, "b": 0.0, "*": 0.0}
+    req = Request(0, _prompts(cfg, (6,))[0], max_new_tokens=8)
+    cluster.engine("a").submit(req)
+    cluster.step()
+    util = cluster.kv_utilization()
+    assert util["a"] > 0.0 and util["b"] == 0.0
+    assert util["*"] == pytest.approx(util["a"])  # b holds no allocation
+    cluster.run()

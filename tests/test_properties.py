@@ -1,18 +1,25 @@
 """Property tests (real hypothesis when installed, else the deterministic
-shim in tests/_hypothesis_compat.py) for the two pure invariant kernels
-the serving runtime leans on:
+shim in tests/_hypothesis_compat.py) for the pure invariant kernels the
+serving runtime leans on:
 
   * `sharding.merge_restrictions` — the single source of the constraint
     merge semantics: argument-order independence and fail-closed
     degradation of conflicting device pins;
   * the migration budget clamp (`serving/migration.needed_capacity`) —
     a migrated stream can NEVER extend beyond what the source pool could
-    have produced, no matter how roomy the target is.
+    have produced, no matter how roomy the target is;
+  * the paged KV pool (`serving/kvpool.PagedKVPool`) — arbitrary
+    alloc/free interleavings never leak or double-hand-out a page, and
+    OOM failures allocate nothing;
+  * the continuous-batching compactor (`ServingEngine._compact`) —
+    re-packing lanes preserves every request's (pos, pages, table row)
+    association and their relative order.
 """
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.serving import Request
+from repro.serving.kvpool import SCRATCH_PAGE, PagedKVPool, PoolOOM
 from repro.serving.migration import needed_capacity, required_capacity
 from repro.sharding import ShardingPlan, merge_restrictions, plan_satisfies
 
@@ -162,3 +169,130 @@ def test_budget_clamp_import_decision_is_monotone(prompt_len, extra,
     assert required_capacity(snap) == need
     if dst_s_max >= src_s_max:
         assert need <= dst_s_max          # equal-or-bigger always admits
+
+
+# ---------------------------------------------------------------------------
+# paged KV pool (serving/kvpool.py)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def pool_traces(draw):
+    """(n_pages, watermark, ops): a random interleaving of allocations
+    (tokens to admit, reserve flag) and frees (which live allocation)."""
+    n_pages = draw(st.integers(2, 12))
+    watermark = draw(st.integers(0, n_pages - 1))
+    ops = []
+    for _ in range(draw(st.integers(1, 30))):
+        if draw(st.booleans()):
+            ops.append(("alloc", draw(st.integers(1, 40)),
+                        draw(st.booleans())))
+        else:
+            ops.append(("free", draw(st.integers(0, 1 << 30)), False))
+    return n_pages, watermark, ops
+
+
+@given(trace=pool_traces())
+def test_pool_alloc_free_never_leaks(trace):
+    """Whatever the alloc/free interleaving: every page is either free
+    or owned by exactly one live allocation, OOM allocates nothing, and
+    returning every live allocation restores the pool to pristine."""
+    n_pages, watermark, ops = trace
+    pool = PagedKVPool(page_size=8, n_pages=n_pages, watermark=watermark)
+    live = []                             # list of page-id lists
+    for kind, arg, reserve in ops:
+        if kind == "alloc":
+            n = pool.pages_for(arg)
+            before = pool.free_pages
+            try:
+                got = pool.alloc(n, reserve=reserve)
+            except PoolOOM:
+                assert pool.free_pages == before    # took nothing
+                budget = before - (0 if reserve else watermark)
+                assert n > max(budget, 0)           # refusal was justified
+            else:
+                assert len(got) == n
+                assert pool.free_pages == before - n
+                if not reserve:           # admission respected the mark
+                    assert pool.free_pages >= watermark or n == 0
+                live.append(got)
+        elif live:
+            pool.free(live.pop(arg % len(live)))
+        # conservation: free + live partitions the data pages exactly
+        held = [p for alloc in live for p in alloc]
+        assert len(held) == len(set(held))          # no double hand-out
+        assert SCRATCH_PAGE not in held
+        assert pool.free_pages + len(held) == n_pages
+        assert pool.allocated_tokens == len(held) * pool.page_size
+    for alloc in live:
+        pool.free(alloc)
+    assert pool.free_pages == n_pages
+    assert pool.allocated_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching compactor (ServingEngine._compact)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def occupancies(draw):
+    """(n_slots, pages_per_seq, lanes): a random lane occupancy, each
+    active lane holding (rid, pos, pages)."""
+    n_slots = draw(st.integers(1, 8))
+    npp = draw(st.integers(1, 4))
+    next_page = 1
+    lanes = []
+    for _ in range(n_slots):
+        if draw(st.booleans()):
+            n_pg = draw(st.integers(1, npp))
+            pages = list(range(next_page, next_page + n_pg))
+            next_page += n_pg
+            lanes.append((draw(st.integers(0, 99)),
+                          draw(st.integers(0, npp * 8 - 1)), pages))
+        else:
+            lanes.append(None)
+    return n_slots, npp, lanes
+
+
+@given(occ=occupancies())
+def test_compaction_preserves_per_request_state(occ):
+    """`_compact` must move each request's pos, page list and page-table
+    row TOGETHER into the lane prefix, preserving relative order —
+    packing reorders lanes, never a request's token stream."""
+    from repro.serving.engine import ServingEngine
+
+    n_slots, npp, lanes = occ
+
+    class Eng:                            # just the state _compact touches
+        pass
+
+    eng = Eng()
+    eng.n_slots = n_slots
+    eng.slot_req = [(None if l is None else ("req", l[0])) for l in lanes]
+    eng.slot_pos = np.zeros(n_slots, np.int32)
+    eng.slot_pages = [[] if l is None else list(l[2]) for l in lanes]
+    eng.page_tables = np.full((n_slots, npp), SCRATCH_PAGE, np.int32)
+    for i, l in enumerate(lanes):
+        if l is not None:
+            eng.slot_pos[i] = l[1]
+            eng.page_tables[i, :len(l[2])] = l[2]
+
+    ServingEngine._compact(eng)
+
+    active = [l for l in lanes if l is not None]
+    n = len(active)
+    # the prefix holds the active requests in their original order...
+    for lane, (rid, pos, pages) in enumerate(active):
+        assert eng.slot_req[lane] == ("req", rid)
+        assert int(eng.slot_pos[lane]) == pos
+        assert eng.slot_pages[lane] == pages
+        row = list(eng.page_tables[lane])
+        assert row[:len(pages)] == pages          # table row traveled too
+        assert all(p == SCRATCH_PAGE for p in row[len(pages):])
+    # ...and everything past it is cleared to the inactive state
+    for lane in range(n, n_slots):
+        assert eng.slot_req[lane] is None
+        assert int(eng.slot_pos[lane]) == 0
+        assert eng.slot_pages[lane] == []
+        assert all(p == SCRATCH_PAGE for p in eng.page_tables[lane])
