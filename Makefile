@@ -2,17 +2,19 @@ PY ?= python
 
 .PHONY: test test-stress ci example bench-reconfig bench-elastic \
         bench-migration bench-overlap bench-planner bench-paged \
-        bench-json docs
+        bench-scale bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
 
-# the concurrency suite (threaded submitters vs async PREPARE commits)
-# plus the paged-pool fragmentation stress, with faulthandler armed so a
-# wedged run dumps every thread's stack
+# the concurrency suite (threaded submitters vs async PREPARE commits),
+# the paged-pool fragmentation stress, and the 10^5+-request simulated-
+# clock replay (RUN_SLOW gates the `slow`-marked scale test), with
+# faulthandler armed so a wedged run dumps every thread's stack
 test-stress:
-	PYTHONFAULTHANDLER=1 $(PY) -m pytest -x -q \
-		tests/test_concurrent_prepare.py tests/test_paged_stress.py
+	PYTHONFAULTHANDLER=1 RUN_SLOW=1 $(PY) -m pytest -x -q \
+		tests/test_concurrent_prepare.py tests/test_paged_stress.py \
+		tests/test_scale.py
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_intents.py
@@ -35,8 +37,11 @@ bench-planner:
 bench-paged:
 	PYTHONPATH=src:. $(PY) benchmarks/paged_batching.py
 
+bench-scale:
+	PYTHONPATH=src:. $(PY) benchmarks/scale_serving.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged scale
 
 docs:
 	$(PY) scripts/run_doc_examples.py

@@ -26,16 +26,22 @@ artifact (see DESIGN.md §7 for the index):
   paged_*             — paged KV pool + continuous batching vs the
                         slot-granular engine at equal KV memory on a
                         mixed-length flash-crowd saturation trace
+  scale_*             — >=10^5-request synthetic-trace replay on the
+                        SIMULATED clock through the full planner +
+                        autoscaler + migration + paged-KV stack, with
+                        online estimator calibration (EWMA residual
+                        correction) beating the analytical roofline
 
 Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_reconfig.json`` (reconfigure + migration),
 ``benchmarks/BENCH_elastic.json`` (autoscaling trajectory),
 ``benchmarks/BENCH_overlap.json`` (concurrent-PREPARE contract),
-``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract), and
-``benchmarks/BENCH_paged.json`` (paged-pool saturation contract), so the
-perf trajectory is tracked across PRs. CI produces them via
+``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract),
+``benchmarks/BENCH_paged.json`` (paged-pool saturation contract), and
+``benchmarks/BENCH_scale.json`` (scale-replay + calibration contract),
+so the perf trajectory is tracked across PRs. CI produces them via
 
-    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged
+    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale
 
 (``--only`` substring-matches bench function names; no flag runs all.)
 """
@@ -100,6 +106,11 @@ def _write_artifacts() -> None:
         path.write_text(
             json.dumps(_jsonable(ARTIFACTS["paged"]), indent=2) + "\n")
         emit("_artifact_paged_json", str(path))
+    if "scale" in ARTIFACTS:
+        path = ART_DIR / "BENCH_scale.json"
+        path.write_text(
+            json.dumps(_jsonable(ARTIFACTS["scale"]), indent=2) + "\n")
+        emit("_artifact_scale_json", str(path))
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +287,20 @@ def bench_paged_batching() -> None:
     ARTIFACTS["paged"] = bench(emit=emit)
 
 
+def bench_scale_serving() -> None:
+    """Million-request-scale replay on the simulated clock: a >=10^5-
+    request synthetic trace (diurnal + flash crowd + long-prompt flood)
+    through the full planner+autoscaler+migration+paged-KV stack, zero
+    drops, every DowntimeReport finalized, and the online-calibrated
+    estimator's predicted-vs-measured error strictly below the
+    uncorrected analytical roofline's."""
+    try:
+        from benchmarks.scale_serving import bench_scale_serving as bench
+    except ImportError:
+        from scale_serving import bench_scale_serving as bench
+    ARTIFACTS["scale"] = bench(emit=emit)
+
+
 def bench_roofline_table() -> None:
     """Summarize the dry-run records (single-pod mesh) — §Roofline."""
     d = Path("experiments/dryrun")
@@ -328,6 +353,7 @@ BENCHES = [
     bench_overlap_prepare,
     bench_planner_search,
     bench_paged_batching,
+    bench_scale_serving,
     bench_kernel_latency,
     bench_roofline_table,
 ]

@@ -1,0 +1,215 @@
+"""Million-request-scale serving benchmark on the simulated clock.
+
+    PYTHONPATH=src:. python benchmarks/scale_serving.py
+
+A >=10^5-request synthetic trace (diurnal modulation, a phi flash
+crowd, an adversarial long-prompt flood on gen) is replayed through the
+FULL stack — workload planner + autoscaler + migration machinery +
+paged-KV-backed engines — with every timing quantity on the simulated
+clock (`repro.serving.clock.FakeClock`): decode steps advance virtual
+time by the modeled step duration, idle gaps are jumped, and no
+wall-clock sleep gates the run. Wall time is therefore just the decode
+math; simulated minutes of traffic replay in CI.
+
+The planner runs with `ResidualCalibration` installed and engine
+profiles attached from `calibrate_host_profile()`: every measurement
+window the harness folds observed per-label TTFT/TPOT back into the
+estimator as an EWMA residual correction, recording the analytical and
+calibrated predictions FIRST (one-step-ahead, so the comparison is
+honest). Asserted contract (the ISSUE's acceptance):
+
+  * >= 10^5 requests replayed, zero dropped, every DowntimeReport
+    finalized;
+  * SLO attainment computed per label and overall;
+  * calibrated predicted-vs-measured error strictly below the
+    uncorrected analytical roofline's.
+
+Emits ``name,value,derived`` CSV rows and returns the artifact dict
+(`run.py` writes it to benchmarks/BENCH_scale.json). Env overrides:
+SCALE_REQUESTS (approximate target, default 100000), SCALE_STEP_TIME_S
+(modeled decode-step duration, default 4e-3).
+"""
+from __future__ import annotations
+
+import os
+import time as wall
+
+SEED = 11
+TICK_S = 1.0            # autoscaler control-loop period (simulated)
+WINDOW_TICKS = 4        # ticks per calibration/measurement window
+
+
+def bench_scale_serving(arch: str = "minitron_4b", emit=None) -> dict:
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.planner import (
+        EngineSpec,
+        ResidualCalibration,
+        WorkloadPlanner,
+        calibrate_host_profile,
+    )
+    from repro.serving import (
+        Autoscaler,
+        FakeClock,
+        LoadTracker,
+        ServingCluster,
+        ServingEngine,
+        install_clock,
+    )
+    from repro.sharding.plan import default_plan
+    from repro.traffic import (
+        FlashCrowd,
+        LabelProfile,
+        LongPromptFlood,
+        TrafficPattern,
+        generate_trace,
+        replay_trace,
+    )
+
+    if emit is None:
+        def emit(name, value, derived=""):
+            print(f"{name},{value},{derived}")
+
+    n_target = int(os.environ.get("SCALE_REQUESTS", "100000"))
+    # the modeled service rate: one 8-slot engine moves n_slots/step_time
+    # = 2000 slot-tokens/s, so mean demand (~5600/s) forces the planner
+    # to scale out toward the 4-engine ceiling (8000/s); diurnal peaks
+    # run just under pooled capacity and the flash crowd pushes past it
+    # transiently — spawn/retire under load, not a single static engine
+    step_time_s = float(os.environ.get("SCALE_STEP_TIME_S", "4e-3"))
+
+    cfg = dataclasses.replace(get_reduced_config(arch),
+                              param_dtype="float32", activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    host = calibrate_host_profile()
+    spec = EngineSpec(plan=default_plan(), n_slots=8, s_max=32)
+
+    def engine_factory(sp, label):
+        return ServingEngine(model, params, n_slots=sp.n_slots,
+                             s_max=sp.s_max)
+
+    # arrival intensity from the request target: base_rate * duration
+    # ~= n_target (crowd/flood extras land on top, ~15-20% headroom)
+    duration_s = 72.0
+    base_rate = n_target / duration_s
+    pattern = TrafficPattern(
+        duration_s=duration_s, base_rate=base_rate,
+        labels={"phi": LabelProfile(weight=2.0),
+                "gen": LabelProfile(weight=1.0)},
+        diurnal_period_s=duration_s / 2,
+        flash_crowds=(FlashCrowd(t_start=duration_s / 3,
+                                 duration_s=duration_s / 6,
+                                 multiplier=3.0, label="phi"),),
+        floods=(LongPromptFlood(t_start=2 * duration_s / 3,
+                                duration_s=duration_s / 12,
+                                rate=base_rate / 6, label="gen",
+                                prompt_len=24, new_tokens=2),),
+        seed=SEED)
+
+    clock = FakeClock(tick=1e-6)
+    restore = install_clock(clock)
+    try:
+        cluster = ServingCluster()
+        calibration = ResidualCalibration(alpha=0.3)
+        planner = WorkloadPlanner(cluster, engine_factory, specs=[spec],
+                                  profiles=[host], dwell=0,
+                                  calibration=calibration, clock=clock)
+        for label in ("phi", "gen"):
+            planner.bounds[label] = (1, 4)
+            planner.set_slo_target(label, 50 * step_time_s,
+                                   2 * step_time_s)
+        scaler = Autoscaler(cluster,
+                            lambda label: engine_factory(spec, label),
+                            planner=planner,
+                            tracker=LoadTracker(alpha=0.5),
+                            async_spawn=False, clock=clock)
+        planner.execute(planner.plan({}), async_spawn=False)  # floors
+        planner.attach_calibrated_profiles()     # measured DeviceProfiles
+
+        t_gen = wall.monotonic()
+        trace = generate_trace(pattern)
+        gen_s = wall.monotonic() - t_gen
+        t_rep = wall.monotonic()
+        stats = replay_trace(trace, cluster, scaler, clock,
+                             vocab_size=cfg.vocab_size,
+                             step_time_s=step_time_s, tick_s=TICK_S,
+                             window_ticks=WINDOW_TICKS, seed=1)
+        wall_s = wall.monotonic() - t_rep
+    finally:
+        restore()
+
+    err = stats.prediction_error()
+    contract = {
+        "hundred_k_plus": len(trace) >= 100_000,
+        "zero_dropped": stats.dropped == 0
+        and stats.completed == stats.submitted == len(trace),
+        "reports_finalized": stats.reports_finalized,
+        "calibrated_beats_analytical":
+            err["analytical_mare"] is not None
+            and err["calibrated_mare"] < err["analytical_mare"],
+    }
+    if n_target >= 100_000:
+        assert contract["hundred_k_plus"], len(trace)
+    assert contract["zero_dropped"], (stats.dropped, stats.completed)
+    assert contract["reports_finalized"]
+    assert contract["calibrated_beats_analytical"], err
+
+    emit("scale_requests", len(trace))
+    emit("scale_sim_duration_s", round(stats.duration_s, 3))
+    emit("scale_replay_wall_s", round(wall_s, 2),
+         f"trace generation {gen_s:.2f}s; no wall sleeps — decode math "
+         "only")
+    emit("scale_sim_speedup",
+         round(stats.duration_s / max(wall_s, 1e-9), 3),
+         "simulated seconds per wall second")
+    emit("scale_steps", stats.steps)
+    emit("scale_dropped", stats.dropped, "contract: 0")
+    emit("scale_engine_seconds", round(stats.engine_seconds, 3))
+    emit("scale_peak_engines", stats.peak_engines)
+    for label in sorted(stats.attainment):
+        emit(f"scale_slo_attainment_{label}",
+             round(stats.attainment[label], 4))
+    emit("scale_slo_attainment_overall",
+         round(stats.attainment_overall, 4)
+         if stats.attainment_overall is not None else "n/a")
+    emit("scale_pred_mare_analytical", round(err["analytical_mare"], 4),
+         "mean |rel err|, one-step-ahead")
+    emit("scale_pred_mare_calibrated", round(err["calibrated_mare"], 4),
+         "contract: < analytical")
+    emit("scale_calibration_windows", err["windows_scored"])
+    emit("scale_downtime_max_s", round(stats.downtime_max_s, 6))
+
+    return {
+        "seed": SEED,
+        "requests": len(trace),
+        "step_time_s": step_time_s,
+        "tick_s": TICK_S,
+        "window_ticks": WINDOW_TICKS,
+        "sim_duration_s": stats.duration_s,
+        "replay_wall_s": wall_s,
+        "steps": stats.steps,
+        "submitted": stats.submitted,
+        "completed": stats.completed,
+        "dropped": stats.dropped,
+        "engine_seconds": stats.engine_seconds,
+        "peak_engines": stats.peak_engines,
+        "final_engines": stats.final_engines,
+        "per_label": stats.per_label,
+        "slo_attainment": dict(stats.attainment,
+                               overall=stats.attainment_overall),
+        "prediction_error": err,
+        "calibration": calibration.as_dict(),
+        "downtime_max_s": stats.downtime_max_s,
+        "reports": stats.reports,
+        "contract": contract,
+    }
+
+
+if __name__ == "__main__":
+    bench_scale_serving()

@@ -14,6 +14,6 @@ echo "== docs: execute the embedded examples (they must not rot) =="
 python scripts/run_doc_examples.py
 
 echo "== serving benchmarks: perf-trajectory artifacts (BENCH_*.json) =="
-PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged
+PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale
 
 echo "CI OK"

@@ -26,7 +26,9 @@ from repro.planner.catalog import (  # noqa: F401
 from repro.planner.estimator import (  # noqa: F401
     CostEstimate,
     CostFeatures,
+    ResidualCalibration,
     TrafficMix,
+    calibrated_estimate,
     estimate,
     features_from_engine,
     features_from_hlo,

@@ -218,6 +218,122 @@ def estimate(features: CostFeatures, profile: DeviceProfile,
 
 
 # ---------------------------------------------------------------------------
+# online calibration (observed TTFT/TPOT -> EWMA residual correction)
+# ---------------------------------------------------------------------------
+
+
+class ResidualCalibration:
+    """Online EWMA residual correction closing the predicted-vs-measured
+    loop on the analytical roofline.
+
+    The roofline is a *shape* model: it ranks configurations correctly
+    but its absolute TTFT/TPOT numbers carry a systematic residual on
+    any real host (interpreter overhead, cache effects, an optimistic
+    datasheet profile). This class learns that residual per workload
+    label as an EWMA of observed/predicted ratios and multiplies it back
+    into later estimates.
+
+    FAIL-CLOSED COLD START: with zero observations for a label the
+    correction factor is exactly 1.0 — `apply` returns the analytical
+    estimate unchanged, bit for bit. The calibrated path can therefore
+    be wired in unconditionally; it only deviates from the roofline once
+    real measurements exist.
+
+    Observations are guarded: non-finite or non-positive predicted or
+    measured values are ignored (an overloaded queue predicts
+    ``ttft=inf``; a ratio against it is meaningless), and each ratio is
+    clipped to ``[1/ratio_cap, ratio_cap]`` so one pathological window
+    cannot poison the EWMA.
+
+    Args:
+        alpha: EWMA smoothing factor in (0, 1]; the first observation
+            seeds the EWMA directly.
+        ratio_cap: clip bound for a single observed/predicted ratio.
+    """
+
+    def __init__(self, alpha: float = 0.25, ratio_cap: float = 50.0):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if ratio_cap <= 1.0:
+            raise ValueError(f"ratio_cap must exceed 1, got {ratio_cap}")
+        self.alpha = alpha
+        self.ratio_cap = ratio_cap
+        self._ttft: Dict[str, float] = {}
+        self._tpot: Dict[str, float] = {}
+        self._n: Dict[str, int] = {}
+
+    def _fold(self, store: Dict[str, float], label: str,
+              predicted: float, measured: float) -> bool:
+        if not (math.isfinite(predicted) and predicted > 0.0
+                and math.isfinite(measured) and measured > 0.0):
+            return False
+        ratio = min(max(measured / predicted, 1.0 / self.ratio_cap),
+                    self.ratio_cap)
+        if label in store:
+            store[label] += self.alpha * (ratio - store[label])
+        else:
+            store[label] = ratio
+        return True
+
+    def observe(self, label: str, *, predicted_ttft_s: float,
+                predicted_tpot_s: float, measured_ttft_s: float,
+                measured_tpot_s: float) -> None:
+        """Fold one measurement window into the label's EWMAs. Invalid
+        pairs (non-finite / non-positive on either side) are skipped
+        per-metric; the observation count rises if either folded."""
+        folded = self._fold(self._ttft, label, predicted_ttft_s,
+                            measured_ttft_s)
+        folded |= self._fold(self._tpot, label, predicted_tpot_s,
+                             measured_tpot_s)
+        if folded:
+            self._n[label] = self._n.get(label, 0) + 1
+
+    def n_observations(self, label: str) -> int:
+        """Windows folded for ``label`` (0 == cold: identity factors)."""
+        return self._n.get(label, 0)
+
+    def factors(self, label: str) -> Tuple[float, float]:
+        """The ``(ttft_factor, tpot_factor)`` multipliers for ``label``;
+        exactly ``(1.0, 1.0)`` when nothing was observed."""
+        return (self._ttft.get(label, 1.0), self._tpot.get(label, 1.0))
+
+    def apply(self, label: str, est: CostEstimate) -> CostEstimate:
+        """The calibrated estimate: latency predictions (``ttft_s``,
+        ``tpot_s``) scaled by the learned residual factors. The
+        analytical ceilings (``step_s``, ``breakdown``, throughput,
+        memory) are left untouched — the correction models what the
+        roofline abstracts away, it does not rewrite the roofline.
+        With zero observations this returns ``est`` unchanged."""
+        f_ttft, f_tpot = self.factors(label)
+        if f_ttft == 1.0 and f_tpot == 1.0:
+            return est
+        return dataclasses.replace(
+            est, ttft_s=est.ttft_s * f_ttft, tpot_s=est.tpot_s * f_tpot)
+
+    def as_dict(self) -> Dict[str, Dict[str, float]]:
+        """Telemetry snapshot: per-label factors + observation counts."""
+        labels = sorted(set(self._ttft) | set(self._tpot) | set(self._n))
+        return {label: {"ttft_factor": self._ttft.get(label, 1.0),
+                        "tpot_factor": self._tpot.get(label, 1.0),
+                        "observations": self._n.get(label, 0)}
+                for label in labels}
+
+
+def calibrated_estimate(features: CostFeatures, profile: DeviceProfile,
+                        mix: TrafficMix = TrafficMix(), *,
+                        engines: int = 1,
+                        calibration: Optional[ResidualCalibration] = None,
+                        label: str = "*") -> CostEstimate:
+    """`estimate` with an optional residual correction applied. With no
+    ``calibration`` (or a cold one) this is EXACTLY the analytical
+    estimate — the fail-closed contract tests pin."""
+    est = estimate(features, profile, mix, engines=engines)
+    if calibration is None:
+        return est
+    return calibration.apply(label, est)
+
+
+# ---------------------------------------------------------------------------
 # feature extraction (compiled HLO -> CostFeatures)
 # ---------------------------------------------------------------------------
 

@@ -33,8 +33,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.planner.catalog import DeviceProfile
-from repro.planner.estimator import CostFeatures, features_from_engine
+from repro.planner.catalog import DeviceProfile, calibrate_host_profile
+from repro.planner.estimator import (
+    CostEstimate,
+    CostFeatures,
+    ResidualCalibration,
+    estimate,
+    features_from_engine,
+)
 from repro.planner.search import (
     Bounds,
     EngineSpec,
@@ -44,6 +50,7 @@ from repro.planner.search import (
     demand_from_tracker,
     score_current,
 )
+from repro.serving.clock import SYSTEM_CLOCK
 from repro.serving.cluster import ServingCluster
 from repro.sharding.plan import plan_satisfies
 
@@ -98,9 +105,23 @@ class WorkloadPlanner:
             zero demand (see `search.demand_from_tracker`).
         rho_max: utilization ceiling (see `search.best_candidate`).
         dwell: planning rounds to hold still after executing actions.
+        dwell_s: optional SECONDS-based dwell measured on the injected
+            ``clock`` (None == rounds only): after executing actions, no
+            non-mandatory plan change until ``dwell_s`` clock seconds
+            have elapsed. With a simulated clock this makes the
+            hysteresis a property of the replayed trace, not of how
+            fast the host runs it.
         horizon_s: amortization horizon for pure cost-saving switches.
         switch_margin: safety multiplier on the switching cost.
         max_engines_per_label: enumeration cap for unbounded labels.
+        calibration: an optional `ResidualCalibration` closing the
+            predicted-vs-measured loop: fed by `observe_measurement` /
+            `ingest_observations`, applied to every estimate the search
+            scores. Cold calibration is the identity — wiring it in
+            changes nothing until measurements arrive (fail-closed).
+        clock: time source for ``dwell_s`` and round timestamps (default
+            the real `SYSTEM_CLOCK`; inject a `FakeClock` to make the
+            dwell follow simulated time).
     """
 
     def __init__(self, cluster: ServingCluster,
@@ -113,9 +134,12 @@ class WorkloadPlanner:
                  min_rate: float = 0.0,
                  rho_max: float = 0.85,
                  dwell: int = 2,
+                 dwell_s: Optional[float] = None,
                  horizon_s: float = 60.0,
                  switch_margin: float = 1.5,
-                 max_engines_per_label: int = 4):
+                 max_engines_per_label: int = 4,
+                 calibration: Optional[ResidualCalibration] = None,
+                 clock=None):
         if not specs:
             raise ValueError("WorkloadPlanner needs at least one EngineSpec")
         if not profiles:
@@ -131,9 +155,18 @@ class WorkloadPlanner:
         self.min_rate = min_rate
         self.rho_max = rho_max
         self.dwell = max(0, dwell)
+        self.dwell_s = dwell_s
         self.horizon_s = horizon_s
         self.switch_margin = switch_margin
         self.max_engines_per_label = max_engines_per_label
+        self.calibration = calibration
+        self.clock = clock if clock is not None else SYSTEM_CLOCK
+        # clock stamp of the last executed action (dwell_s reference);
+        # None until something executes
+        self._last_exec_t: Optional[float] = None
+        # label -> completed count at the last metrics ingest (so
+        # cumulative means are only folded when new completions exist)
+        self._last_completed: Dict[str, float] = {}
         # engine name -> the profile it runs on (heterogeneity attachment)
         self._engine_profile: Dict[str, DeviceProfile] = {}
         # engine name -> the spec it was spawned/reconfigured with
@@ -179,6 +212,20 @@ class WorkloadPlanner:
         planner spawns are attached automatically)."""
         self._engine_profile[engine] = profile
 
+    def attach_calibrated_profiles(self,
+                                   names: Optional[Sequence[str]] = None
+                                   ) -> DeviceProfile:
+        """Attach the MEASURED profile of this host
+        (`calibrate_host_profile`) to ``names`` (default: every
+        registered engine), so estimates are made against the machine
+        the engines actually run on instead of a datasheet. Returns the
+        host profile (process-cached — one probe per process)."""
+        profile = calibrate_host_profile()
+        for name in (names if names is not None
+                     else self.cluster.engines()):
+            self._engine_profile[name] = profile
+        return profile
+
     # ------------------------------------------------------------------
     # cost features (cached per spec shape)
     # ------------------------------------------------------------------
@@ -196,6 +243,81 @@ class WorkloadPlanner:
             self._features[key] = features_from_engine(probe,
                                                        self.cluster.mesh)
         return self._features[key]
+
+    # ------------------------------------------------------------------
+    # calibration (predicted-vs-measured feedback)
+    # ------------------------------------------------------------------
+    def _estimate_fn(self, label: str, feats: CostFeatures,
+                     profile: DeviceProfile, mix, engines: int
+                     ) -> CostEstimate:
+        """The search's scoring estimator: analytical roofline, with the
+        label's learned residual factors applied when a calibration is
+        installed (identity while cold — fail-closed)."""
+        est = estimate(feats, profile, mix, engines=engines)
+        if self.calibration is not None:
+            est = self.calibration.apply(label, est)
+        return est
+
+    def predicted_for(self, label: str, demand: LabelDemand, *,
+                      calibrated: bool = True) -> Optional[CostEstimate]:
+        """The planner's prediction for ``label``'s CURRENTLY deployed
+        configuration under ``demand`` — the number the calibration loop
+        compares against measurements. ``calibrated=False`` gives the
+        raw analytical roofline (the baseline the calibrated estimator
+        must beat). None when nothing serves the label."""
+        spec_prof_n = self.current_config().get(label)
+        if spec_prof_n is None or spec_prof_n[2] == 0:
+            return None
+        spec, profile, count = spec_prof_n
+        est = estimate(self.features_for(spec), profile, demand.mix(),
+                       engines=count)
+        if calibrated and self.calibration is not None:
+            est = self.calibration.apply(label, est)
+        return est
+
+    def observe_measurement(self, label: str, demand: LabelDemand, *,
+                            measured_ttft_s: float,
+                            measured_tpot_s: float) -> None:
+        """Fold one measured TTFT/TPOT window into the calibration,
+        paired with the ANALYTICAL prediction for the label's deployed
+        configuration under ``demand`` (the residual is always learned
+        against the uncorrected roofline, so repeated folding does not
+        compound the correction). No-op without a calibration or when
+        nothing serves the label."""
+        if self.calibration is None:
+            return
+        predicted = self.predicted_for(label, demand, calibrated=False)
+        if predicted is None:
+            return
+        self.calibration.observe(
+            label, predicted_ttft_s=predicted.ttft_s,
+            predicted_tpot_s=predicted.tpot_s,
+            measured_ttft_s=measured_ttft_s,
+            measured_tpot_s=measured_tpot_s)
+
+    def ingest_observations(self, demand: Mapping[str, LabelDemand]
+                            ) -> int:
+        """Pull the cluster's cumulative per-label metrics and fold
+        every label that COMPLETED NEW REQUESTS since the last ingest
+        into the calibration. Returns the number of labels folded.
+        (A replay harness with windowed metrics should prefer
+        `observe_measurement` — cumulative means lag shifts in load.)"""
+        if self.calibration is None:
+            return 0
+        folded = 0
+        for label, m in self.cluster.metrics_by_label().items():
+            if label == "*" or label not in demand:
+                continue
+            done = m.get("completed", 0)
+            if done <= self._last_completed.get(label, 0):
+                continue
+            self._last_completed[label] = done
+            self.observe_measurement(
+                label, demand[label],
+                measured_ttft_s=m.get("ttft_mean_s", 0.0),
+                measured_tpot_s=m.get("tpot_mean_s", 0.0))
+            folded += 1
+        return folded
 
     # ------------------------------------------------------------------
     # observation
@@ -274,7 +396,8 @@ class WorkloadPlanner:
             profiles=self.profiles, features_fn=self.features_for,
             bounds=merged_bounds, route_required=route_required,
             rho_max=self.rho_max,
-            max_engines_per_label=self.max_engines_per_label)
+            max_engines_per_label=self.max_engines_per_label,
+            estimate_fn=self._estimate_fn)
 
     def _switch_cost_s(self, n_events: int) -> float:
         """Estimated cost of executing ``n_events`` reconfigurations:
@@ -301,7 +424,8 @@ class WorkloadPlanner:
         current = self.current_config()
         cur_score = score_current(
             current, demand, self.slo_targets,
-            features_fn=self.features_for, rho_max=self.rho_max)
+            features_fn=self.features_for, rho_max=self.rho_max,
+            estimate_fn=self._estimate_fn)
         actions = self._diff(best, current, demand, merged_bounds)
         if not actions:
             return []
@@ -312,6 +436,10 @@ class WorkloadPlanner:
         if not mandatory:
             if self._since_exec <= self.dwell:
                 return []               # dwell: recently acted
+            if (self.dwell_s is not None and self._last_exec_t is not None
+                    and self.clock.time() - self._last_exec_t
+                    < self.dwell_s):
+                return []               # dwell: clock says too soon
             # pure cost-saving switch must amortize its switching cost
             saving = (cur_score.cost - best.cost) * self.horizon_s
             if saving <= self._switch_cost_s(len(actions)) \
@@ -467,6 +595,7 @@ class WorkloadPlanner:
             self.log.append((a, res))
         if any(a.kind != "hold" for a in actions):
             self._since_exec = 0
+            self._last_exec_t = self.clock.time()
         return out
 
     def step(self, tracker, *, async_spawn: bool = True

@@ -43,6 +43,18 @@ from repro.sharding.plan import (
 
 Bounds = Tuple[int, Optional[int]]
 
+# (label, features, profile, mix, engines) -> CostEstimate. The label
+# argument is what lets a `ResidualCalibration`-backed estimator apply
+# per-label residual factors inside the search.
+EstimateFn = Callable[[str, CostFeatures, DeviceProfile, TrafficMix, int],
+                      CostEstimate]
+
+
+def _analytical(label: str, feats: CostFeatures, profile: DeviceProfile,
+                mix: TrafficMix, engines: int) -> CostEstimate:
+    """The default `EstimateFn`: the pure roofline, label-blind."""
+    return estimate(feats, profile, mix, engines=engines)
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
@@ -199,6 +211,7 @@ def best_candidate(
     route_required: Optional[Mapping[str, ShardingPlan]] = None,
     rho_max: float = 0.85,
     max_engines_per_label: int = 4,
+    estimate_fn: Optional[EstimateFn] = None,
 ) -> ScoredCandidate:
     """Pick the best configuration for the forecast demand.
 
@@ -220,6 +233,11 @@ def best_candidate(
             model-driven.
         max_engines_per_label: enumeration cap when a label's max bound
             is unbounded.
+        estimate_fn: the scoring estimator (default: the analytical
+            roofline). A calibrated planner passes a closure applying
+            its per-label `ResidualCalibration` factors, so learned
+            residuals move the SAME lexicographic objective the
+            analytical search uses.
 
     Returns:
         The best `ScoredCandidate`. Labels with demand but no legally
@@ -229,6 +247,7 @@ def best_candidate(
     """
     bounds = dict(bounds or {})
     route_required = dict(route_required or {})
+    est_fn = estimate_fn or _analytical
     labels = sorted(set(demand) | set(bounds))
 
     config: Dict[str, Assignment] = {}
@@ -260,10 +279,10 @@ def best_candidate(
                         a = Assignment(spec, profile, 0)
                         key = (0.0, 0.0, 0.0)
                         if best is None or key < best[0]:
-                            best = (key, a, estimate(feats, profile,
-                                                     d.mix(), engines=1))
+                            best = (key, a, est_fn(label, feats, profile,
+                                                   d.mix(), 1))
                         continue
-                    est = estimate(feats, profile, d.mix(), engines=count)
+                    est = est_fn(label, feats, profile, d.mix(), count)
                     viol = _violation(est, (ttft_t, tpot_t), rho_max)
                     c = count * profile.cost_rate * profile.n_devices
                     hr = max(0.0, 1.0 - est.utilization)
@@ -292,10 +311,13 @@ def score_current(
     *,
     features_fn: Callable[[EngineSpec], CostFeatures],
     rho_max: float = 0.85,
+    estimate_fn: Optional[EstimateFn] = None,
 ) -> ScoredCandidate:
     """Score the configuration that is ALREADY deployed, with the same
     objective `best_candidate` uses — the hysteresis comparison's other
-    half."""
+    half (pass the same ``estimate_fn`` so both sides see the same
+    calibrated costs)."""
+    est_fn = estimate_fn or _analytical
     config: Dict[str, Assignment] = {}
     per_label: Dict[str, CostEstimate] = {}
     violations = 0.0
@@ -316,7 +338,7 @@ def score_current(
             if d.rate > 0:
                 violations += 2.0 + 9.0
             continue
-        est = estimate(features_fn(spec), profile, d.mix(), engines=count)
+        est = est_fn(label, features_fn(spec), profile, d.mix(), count)
         per_label[label] = est
         violations += _violation(est, targets.get(label, (None, None)),
                                  rho_max)

@@ -4,6 +4,14 @@ from repro.serving.autoscaler import (  # noqa: F401
     LoadTracker,
     ScaleDecision,
 )
+from repro.serving.clock import (  # noqa: F401
+    SYSTEM_CLOCK,
+    FakeClock,
+    SystemClock,
+    install_clock,
+    installed_clock,
+    simulated_time,
+)
 from repro.serving.cluster import (  # noqa: F401
     DowntimeReport,
     RoutingError,

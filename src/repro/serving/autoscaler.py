@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.serving.clock import SYSTEM_CLOCK
 from repro.serving.cluster import DowntimeReport, ServingCluster
 from repro.serving.engine import ServingEngine
 from repro.serving.prepare import FAILED, SWAPPED, PrepareTicket
@@ -429,6 +430,14 @@ class Autoscaler:
             tracker/bounds plumbing (and intent application via
             `apply_policy`) is shared; ``policy`` is ignored while a
             planner is installed.
+        clock: the time source tick timestamps are read from (default
+            the real `repro.serving.clock.SYSTEM_CLOCK`). The decision
+            path itself performs NO clock reads — sustain/cooldown
+            hysteresis is counted in ticks, each worth ``dt`` virtual
+            seconds — so injecting a simulated `FakeClock` makes the
+            whole control loop wall-clock-free: a 10^6-request replay's
+            scaling decisions depend only on the trace, never on how
+            fast the host happens to run it.
 
     Attributes:
         events: ``[(ScaleDecision, DowntimeReport), ...]`` for every
@@ -437,6 +446,8 @@ class Autoscaler:
             commit.
         trajectory: per-tick ``{label: engine count, "total": n}``
             snapshots (the benchmark's engine-count trajectory).
+        tick_times: per-tick timestamps on the injected ``clock``
+            (parallel to ``trajectory``).
     """
 
     def __init__(self, cluster: ServingCluster,
@@ -445,7 +456,8 @@ class Autoscaler:
                  tracker: Optional[LoadTracker] = None,
                  bounds: Optional[Dict[str, Bounds]] = None,
                  async_spawn: bool = False,
-                 planner: Optional[object] = None):
+                 planner: Optional[object] = None,
+                 clock=None):
         self.cluster = cluster
         self.factory = factory
         self.policy = policy or ElasticPolicy()
@@ -453,6 +465,8 @@ class Autoscaler:
         self.bounds: Dict[str, Bounds] = dict(bounds or {})
         self.async_spawn = async_spawn
         self.planner = planner
+        self.clock = clock if clock is not None else SYSTEM_CLOCK
+        self.tick_times: List[float] = []
         self.events: List[Tuple[ScaleDecision, DowntimeReport]] = []
         # async spawns whose background PREPARE failed: (decision, error)
         # — surfaced here instead of silently vanishing from the loop
@@ -596,6 +610,7 @@ class Autoscaler:
             commit); a per-label engine-count snapshot is appended to
             ``self.trajectory``.
         """
+        self.tick_times.append(self.clock.time())
         for label in list(self._spawn_backoff):
             self._spawn_backoff[label] -= 1
             if self._spawn_backoff[label] <= 0:

@@ -1,0 +1,150 @@
+"""First-class clock abstraction for the serving layer.
+
+Every timing-derived quantity in the serving stack — `Request` TTFT/TPOT
+stamps, `DowntimeReport` blocking windows, migration pauses, PREPARE
+durations — flows through the ``time`` attribute of the serving modules
+(`engine`, `cluster`, `migration`, `prepare`). That indirection is what
+lets a 10^5–10^6-request replay run on a **simulated clock**: install a
+`FakeClock` and wall-clock never gates scale (``cluster.run``'s idle
+sleep becomes a virtual advance, not a real one).
+
+Two clock implementations share the same duck-typed surface
+(``time() / perf_counter() / monotonic() / sleep(dt)`` plus the
+simulation-only ``advance(dt)`` / ``now``):
+
+    SystemClock   delegates to the real :mod:`time` module — the default;
+    FakeClock     deterministic simulated time: every read advances by a
+                  fixed ``tick``, ``sleep`` jumps instead of blocking.
+                  (Promoted from the private test harness in
+                  ``tests/conftest.py``; the ``fake_clock`` fixture now
+                  installs THIS class.)
+
+`install_clock` swaps the serving modules' time source and returns a
+restore callable; `simulated_time` is the context-manager form. The
+`Autoscaler` and `WorkloadPlanner` take a ``clock=`` constructor argument
+directly — their dwell/cooldown hysteresis is counted in virtual ticks
+and timestamped on the injected clock, so the decision path performs no
+wall-clock reads at all.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time as _time
+from typing import Callable, Iterator, Optional
+
+
+class SystemClock:
+    """The real wall clock, with the same surface as `FakeClock` (minus
+    ``advance`` — real time cannot be jumped; `is_simulated` tells the
+    two apart)."""
+
+    is_simulated = False
+
+    time = staticmethod(_time.time)
+    perf_counter = staticmethod(_time.perf_counter)
+    monotonic = staticmethod(_time.monotonic)
+    sleep = staticmethod(_time.sleep)
+
+    @property
+    def now(self) -> float:
+        return _time.time()
+
+
+#: Process-wide default clock (the serving modules start on it).
+SYSTEM_CLOCK = SystemClock()
+
+
+class FakeClock:
+    """Drop-in for the ``time`` module inside the serving layer: every
+    read advances the clock by ``tick`` seconds, so timestamps are
+    strictly increasing AND fully deterministic (no wall-clock jitter in
+    TTFT/TPOT/downtime assertions). Thread-safe.
+
+    Args:
+        start: initial simulated epoch, seconds.
+        tick: seconds added per ``time()``/``perf_counter()`` read.
+    """
+
+    is_simulated = True
+
+    def __init__(self, start: float = 1_000.0, tick: float = 1e-3):
+        self._now = float(start)
+        self.tick = float(tick)
+        self._lock = threading.Lock()
+
+    def time(self) -> float:
+        with self._lock:
+            self._now += self.tick
+            return self._now
+
+    perf_counter = time
+    monotonic = time
+
+    def sleep(self, dt: float) -> None:
+        """A simulated sleep never blocks: it jumps the clock."""
+        self.advance(dt)
+
+    def advance(self, dt: float) -> None:
+        """Jump the clock forward without a read."""
+        with self._lock:
+            self._now += float(dt)
+
+    @property
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+
+def _serving_modules():
+    import repro.serving.cluster as cluster_mod
+    import repro.serving.engine as engine_mod
+    import repro.serving.migration as migration_mod
+    import repro.serving.prepare as prepare_mod
+
+    return (engine_mod, cluster_mod, migration_mod, prepare_mod)
+
+
+def install_clock(clock) -> Callable[[], None]:
+    """Install ``clock`` as the time source of the serving layer
+    (engine / cluster / migration / prepare stamp requests, downtime
+    windows, migration pauses, and PREPARE durations through it).
+
+    Returns:
+        A zero-argument restore callable that puts the previous time
+        sources back (call it in a ``finally``; `simulated_time` wraps
+        this pattern).
+    """
+    mods = _serving_modules()
+    previous = [(m, m.time) for m in mods]
+    for m in mods:
+        m.time = clock
+
+    def restore() -> None:
+        for m, prev in previous:
+            m.time = prev
+
+    return restore
+
+
+def installed_clock():
+    """The serving layer's current time source (the real :mod:`time`
+    module unless a clock was installed)."""
+    return _serving_modules()[0].time
+
+
+@contextlib.contextmanager
+def simulated_time(clock: Optional[FakeClock] = None,
+                   ) -> Iterator[FakeClock]:
+    """Run the body on a simulated serving-layer clock; restores the
+    previous time source on exit.
+
+    >>> with simulated_time() as clock:
+    ...     clock.advance(3600.0)        # an hour passes instantly
+    """
+    clock = clock if clock is not None else FakeClock()
+    restore = install_clock(clock)
+    try:
+        yield clock
+    finally:
+        restore()

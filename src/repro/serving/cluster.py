@@ -714,6 +714,30 @@ class ServingCluster:
         labels = self._known_labels(extra_labels) | set(groups)
         return {v: compute_metrics(groups.get(v, [])) for v in labels}
 
+    def drain_completed(self) -> List[Request]:
+        """Pop and return every retained completed request (live engines'
+        done lists + the retired-engine retention buffer), in no
+        particular order.
+
+        The scale-replay harness consumes completions incrementally
+        through this method: at 10^5+ requests the cumulative
+        `metrics_by_label` scan is O(total completions) per call, while
+        draining is O(completions since the last drain) and keeps
+        resident memory bounded. After a drain, the cumulative
+        ``metrics*`` views only see completions retired later — callers
+        own the popped requests and any windowed aggregation over them
+        (pending `DowntimeReport`s are unaffected: they auto-finalize
+        with the empty window at commit time)."""
+        with self._step_lock:      # same order as step(): step -> registry
+            with self._lock:
+                out: List[Request] = list(self._retired_done)
+                self._retired_done.clear()
+                for e in self._entries.values():
+                    if e.engine.done:
+                        out.extend(e.engine.done)
+                        e.engine.done.clear()
+        return out
+
     def queue_depth_by_label(self, extra_labels: Sequence[str] = ()
                              ) -> Dict[str, int]:
         """Queued + resident request counts per label across all engines

@@ -1,0 +1,31 @@
+"""Synthetic traffic + discrete-event replay at 10^5–10^6-request scale.
+
+The paper's headline claims (<50 ms downtime, <10% TTFT/TPOT overhead)
+are only meaningful under sustained, shifting load. This package is the
+scale harness that makes them measurable deterministically:
+
+    generator   seeded synthetic traffic: diurnal cycles, flash crowds,
+                multi-tenant label mixes, adversarial long-prompt
+                floods, heavy-tailed prompt/decode lengths — the same
+                seed reproduces the trace bit for bit;
+    replay      a discrete-event harness driving the full planner +
+                autoscaler + migration + paged-KV stack over a trace on
+                a SIMULATED clock (`repro.serving.clock`): decode steps
+                advance virtual time by a modeled step duration, idle
+                gaps are jumped, and wall-clock never gates scale.
+
+See docs/architecture.md (scale harness box) and
+benchmarks/scale_serving.py (the BENCH_scale.json contract).
+"""
+from repro.traffic.generator import (  # noqa: F401
+    FlashCrowd,
+    LabelProfile,
+    LongPromptFlood,
+    TraceRequest,
+    TrafficPattern,
+    generate_trace,
+)
+from repro.traffic.replay import (  # noqa: F401
+    ReplayStats,
+    replay_trace,
+)

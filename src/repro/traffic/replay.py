@@ -1,0 +1,408 @@
+"""Discrete-event replay: drive the full serving stack over a generated
+trace on a simulated clock.
+
+The harness owns a virtual-time cursor ``t`` and advances the installed
+`FakeClock` (see `repro.serving.clock`) in lockstep:
+
+  * each ``cluster.step()`` costs ``step_time_s`` simulated seconds —
+    the service-rate model; engines decode in parallel, so one step
+    boundary is one step duration regardless of engine count (more
+    engines == more slots per step == more throughput, exactly the
+    roofline's pooling assumption);
+  * arrivals are submitted at their trace timestamps, between steps;
+  * idle gaps (no queued or resident work anywhere) are JUMPED, not
+    slept — wall-clock never gates scale;
+  * the autoscaler ticks every ``tick_s`` of simulated time, and every
+    ``window_ticks`` ticks the harness drains completions
+    (`ServingCluster.drain_completed` — O(window), not O(history)),
+    folds windowed TTFT/TPOT into the planner's `ResidualCalibration`
+    (planner mode), and records the predicted-vs-measured pair — the
+    one-step-ahead evaluation `BENCH_scale.json` reports;
+  * calibration learns from QUASI-STEADY windows only: when the queued
+    backlog exceeded ``steady_backlog`` times the pooled slot capacity
+    at any control tick of the window (or the previous one — early
+    completions can be stragglers of the prior transient), the window's
+    latency reflects a queueing transient the roofline already models
+    through rho — folding its ratio (which clips at ``ratio_cap``)
+    would poison the stationary residual and corrupt every later
+    prediction. The window is still SCORED — gating affects learning,
+    never the evaluation.
+
+TTFT/TPOT/SLO attainment are therefore *simulated-time* quantities,
+fully determined by (trace, step_time_s, policy) — deterministic under a
+fixed seed, independent of host speed. Use sync spawns
+(``Autoscaler(async_spawn=False)``, the default): an async PREPARE
+commits at a wall-dependent step boundary, which would leak wall time
+back into the simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.cluster import RoutingError, ServingCluster
+from repro.serving.engine import METRIC_KEYS, Request
+from repro.traffic.generator import TraceRequest
+
+SLOTargets = Mapping[str, Tuple[Optional[float], Optional[float]]]
+
+
+@dataclasses.dataclass
+class WindowRecord:
+    """One measurement window's per-label predicted-vs-measured pair.
+
+    ``predicted_*`` is the raw analytical roofline for the label's
+    deployed configuration; ``calibrated_*`` is the same estimate with
+    the residual factors learned from PREVIOUS windows (one-step-ahead:
+    the window's own measurement is folded only after the prediction is
+    recorded). None where no planner/calibration/deployment applies.
+    """
+
+    t: float
+    label: str
+    completed: int
+    measured_ttft_s: float
+    measured_tpot_s: float
+    predicted_ttft_s: Optional[float] = None
+    predicted_tpot_s: Optional[float] = None
+    calibrated_ttft_s: Optional[float] = None
+    calibrated_tpot_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ReplayStats:
+    """What a replay produced (all times simulated seconds)."""
+
+    n_requests: int
+    submitted: int
+    completed: int
+    dropped: int
+    duration_s: float
+    steps: int
+    engine_seconds: float
+    peak_engines: int
+    final_engines: int
+    per_label: Dict[str, Dict[str, float]]
+    attainment: Dict[str, float]
+    attainment_overall: Optional[float]
+    windows: List[WindowRecord]
+    downtime_max_s: float
+    reports: int
+    reports_finalized: bool
+
+    def prediction_error(self) -> Dict[str, Optional[float]]:
+        """Mean |relative error| of predicted vs measured TTFT/TPOT over
+        the windows where BOTH the analytical and the calibrated
+        estimator produced a prediction. ``*_mare`` is averaged over
+        TTFT and TPOT errors jointly; None when no such window exists
+        (e.g. threshold mode — no planner, nothing predicted)."""
+        analytical: List[float] = []
+        calibrated: List[float] = []
+        for w in self.windows:
+            for pred_a, pred_c, meas in (
+                    (w.predicted_ttft_s, w.calibrated_ttft_s,
+                     w.measured_ttft_s),
+                    (w.predicted_tpot_s, w.calibrated_tpot_s,
+                     w.measured_tpot_s)):
+                if pred_a is None or pred_c is None:
+                    continue
+                if not (math.isfinite(pred_a) and math.isfinite(pred_c)
+                        and math.isfinite(meas) and meas > 0):
+                    continue
+                analytical.append(abs(pred_a - meas) / meas)
+                calibrated.append(abs(pred_c - meas) / meas)
+        if not analytical:
+            return {"analytical_mare": None, "calibrated_mare": None,
+                    "windows_scored": 0}
+        return {"analytical_mare": float(np.mean(analytical)),
+                "calibrated_mare": float(np.mean(calibrated)),
+                "windows_scored": len(analytical)}
+
+
+def _has_work(cluster: ServingCluster) -> bool:
+    for name in cluster.engines():
+        try:
+            eng = cluster.engine(name)
+        except KeyError:
+            continue
+        if eng.paused:
+            continue
+        if eng.queue or any(r is not None for r in eng.slot_req):
+            return True
+    return False
+
+
+def _backlog_and_slots(cluster: ServingCluster) -> Tuple[int, int]:
+    """(queued requests, pooled slot capacity) across live engines."""
+    backlog = slots = 0
+    for name in cluster.engines():
+        try:
+            eng = cluster.engine(name)
+        except KeyError:
+            continue
+        backlog += len(eng.queue)
+        slots += len(eng.slot_req)
+    return backlog, slots
+
+
+class _LabelStats:
+    """Streaming per-label accumulators (TTFT list kept for p99)."""
+
+    __slots__ = ("ttft", "tpot", "ok", "scored")
+
+    def __init__(self):
+        self.ttft: List[float] = []
+        self.tpot: List[float] = []
+        self.ok = 0
+        self.scored = 0
+
+
+def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
+                 scaler, clock, *,
+                 vocab_size: int,
+                 step_time_s: float,
+                 tick_s: float = 1.0,
+                 window_ticks: int = 20,
+                 slo_targets: Optional[SLOTargets] = None,
+                 steady_backlog: float = 1.0,
+                 seed: int = 0,
+                 max_steps: Optional[int] = None) -> ReplayStats:
+    """Replay ``trace`` through ``cluster``/``scaler`` on ``clock``.
+
+    Args:
+        trace: the generated trace (monotone arrival times).
+        cluster: the serving cluster (capacity is grown/shrunk by the
+            scaler; the cluster may start empty if the scaler's bounds
+            or planner will spawn a first engine).
+        scaler: an `Autoscaler` (threshold or planner mode) driving the
+            cluster; its ``tick(dt=tick_s)`` runs every simulated
+            ``tick_s``.
+        clock: the INSTALLED simulated clock (`FakeClock`) — the
+            harness advances it so every request/downtime stamp lands
+            in simulated time. It must already be installed into the
+            serving layer (`install_clock` / `simulated_time`).
+        vocab_size: prompt tokens are drawn uniformly from
+            ``[2, vocab_size)``.
+        step_time_s: simulated duration of one ``cluster.step()``.
+        tick_s: autoscaler control-loop period, simulated seconds.
+        window_ticks: ticks per measurement window (drain + calibrate).
+        slo_targets: per-label ``(max_ttft_s, max_tpot_s)`` attainment
+            targets; defaults to the planner's targets when the scaler
+            runs planner mode.
+        steady_backlog: calibration steadiness gate — a window's
+            measurement is folded into the planner's calibration only
+            when the queued backlog stayed at or below this multiple of
+            the pooled slot capacity at EVERY control tick of the
+            window AND of the previous window (completions early in a
+            window can be stragglers whose TTFT carries the previous
+            window's queueing transient; sampling every tick catches
+            transients that drain before a window boundary, e.g. the
+            cold-start ramp before the first scale-out). Saturated
+            windows are still scored, just not learned from: a
+            transient's (clipped) ratio would corrupt the stationary
+            residual for every later prediction.
+        seed: PRNG seed for prompt-token materialization.
+        max_steps: decode-step budget (a wedged replay raises instead
+            of spinning); default scales with the trace.
+
+    Returns:
+        The `ReplayStats`; ``dropped`` counts fail-closed routing
+        rejections (0 on a healthy replay).
+
+    Raises:
+        ValueError: empty trace, non-simulated clock, bad step time.
+        RuntimeError: the step budget was exhausted.
+    """
+    if not trace:
+        raise ValueError("cannot replay an empty trace")
+    if step_time_s <= 0:
+        raise ValueError(f"step_time_s must be positive, got {step_time_s}")
+    if not getattr(clock, "is_simulated", False):
+        raise ValueError("replay_trace needs the simulated clock that is "
+                         "installed into the serving layer (FakeClock)")
+    planner = getattr(scaler, "planner", None)
+    if slo_targets is None:
+        slo_targets = dict(getattr(planner, "slo_targets", {}) or {})
+    rng = np.random.default_rng(seed)
+    if max_steps is None:
+        max_steps = int(trace[-1].t / step_time_s) * 20 + 100_000
+
+    epoch = clock.now
+    t = 0.0
+    engine_seconds = 0.0
+    peak_engines = 0
+    steps = 0
+    submitted = 0
+    dropped = 0
+    stats: Dict[str, _LabelStats] = {}
+    windows: List[WindowRecord] = []
+
+    def sync(target: float) -> None:
+        """Advance simulated time to ``target``, integrating
+        engine-seconds over the interval."""
+        nonlocal t, engine_seconds
+        if target <= t:
+            return
+        engine_seconds += len(cluster.engines()) * (target - t)
+        delta = (epoch + target) - clock.now
+        if delta > 0:
+            clock.advance(delta)
+        t = target
+
+    def submit(ev: TraceRequest) -> None:
+        nonlocal submitted, dropped
+        prompt = rng.integers(2, vocab_size,
+                              size=ev.prompt_len).astype(np.int32)
+        req = Request(ev.rid, prompt, max_new_tokens=ev.new_tokens,
+                      labels={"data-type": ev.label})
+        try:
+            cluster.submit(req)
+            submitted += 1
+        except RoutingError:
+            dropped += 1
+
+    def measure(now: float) -> None:
+        """Drain the window's completions, score them against the SLO
+        targets, and close the calibration loop (predict, record, THEN
+        observe — one-step-ahead)."""
+        nonlocal win_ok, win_ok_prev
+        # quasi-steady only when every tick of this window AND the
+        # previous one was unbacklogged: early completions can be
+        # stragglers still carrying the prior transient's queueing
+        steady = win_ok and win_ok_prev
+        win_ok_prev = win_ok
+        win_ok = True
+        done = cluster.drain_completed()
+        if not done:
+            return
+        by_label: Dict[str, List[Request]] = {}
+        for r in done:
+            by_label.setdefault(r.labels.get("data-type", "*"),
+                                []).append(r)
+        demand = (planner.forecast(scaler.tracker)
+                  if planner is not None else {})
+        for label in sorted(by_label):
+            rs = by_label[label]
+            acc = stats.setdefault(label, _LabelStats())
+            ttfts = [r.ttft for r in rs if math.isfinite(r.ttft)]
+            tpots = [r.tpot for r in rs if math.isfinite(r.tpot)]
+            acc.ttft.extend(ttfts)
+            acc.tpot.extend(tpots)
+            targets = slo_targets.get(label)
+            if targets is not None and (targets[0] is not None
+                                        or targets[1] is not None):
+                for r in rs:
+                    acc.scored += 1
+                    ok = True
+                    if targets[0] is not None and not \
+                            (math.isfinite(r.ttft)
+                             and r.ttft <= targets[0]):
+                        ok = False
+                    if targets[1] is not None and math.isfinite(r.tpot) \
+                            and r.tpot > targets[1]:
+                        ok = False
+                    acc.ok += ok
+            if not ttfts or not tpots:
+                continue
+            rec = WindowRecord(
+                t=now, label=label, completed=len(rs),
+                measured_ttft_s=float(np.mean(ttfts)),
+                measured_tpot_s=float(np.mean(tpots)))
+            d = demand.get(label)
+            if planner is not None and d is not None and d.rate > 0:
+                pa = planner.predicted_for(label, d, calibrated=False)
+                pc = planner.predicted_for(label, d, calibrated=True)
+                if pa is not None:
+                    rec.predicted_ttft_s = pa.ttft_s
+                    rec.predicted_tpot_s = pa.tpot_s
+                if pc is not None:
+                    rec.calibrated_ttft_s = pc.ttft_s
+                    rec.calibrated_tpot_s = pc.tpot_s
+                if steady:
+                    planner.observe_measurement(
+                        label, d, measured_ttft_s=rec.measured_ttft_s,
+                        measured_tpot_s=rec.measured_tpot_s)
+            windows.append(rec)
+
+    i, n = 0, len(trace)
+    next_tick = tick_s
+    ticks = 0
+    win_ok = True          # no over-limit backlog seen this window
+    win_ok_prev = True     # ... nor in the previous window
+    while True:
+        while i < n and trace[i].t <= t:
+            submit(trace[i])
+            i += 1
+        busy = _has_work(cluster)
+        if not busy and i >= n:
+            break
+        if busy:
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"replay exhausted its step budget ({max_steps}) at "
+                    f"t={t:.1f}s with {i}/{n} submitted — the service "
+                    "model cannot keep up with the trace")
+            # charge the step's cost FIRST: tokens (and their TTFT/TPOT
+            # stamps) arrive at the END of the step window, and arrivals
+            # inside the window wait for the next admission boundary
+            sync(t + step_time_s)
+            cluster.step()
+            steps += 1
+        else:
+            # idle: jump to whichever comes first — the next arrival or
+            # the next control tick (the scaler must keep ticking to
+            # retire idle capacity)
+            jump = trace[i].t if i < n else next_tick
+            sync(max(t, min(jump, next_tick)))
+        while t >= next_tick - 1e-9:
+            scaler.tick(tick_s)
+            ticks += 1
+            next_tick += tick_s
+            peak_engines = max(peak_engines, len(cluster.engines()))
+            backlog, slots = _backlog_and_slots(cluster)
+            if backlog > steady_backlog * max(1, slots):
+                win_ok = False
+            if ticks % window_ticks == 0:
+                measure(t)
+
+    cluster.run()                     # reap draining engines
+    measure(t)                        # final partial window
+
+    per_label: Dict[str, Dict[str, float]] = {}
+    attainment: Dict[str, float] = {}
+    completed = 0
+    ok_total = scored_total = 0
+    for label in sorted(stats):
+        acc = stats[label]
+        completed += len(acc.ttft)
+        per_label[label] = {
+            "completed": len(acc.ttft),
+            "ttft_mean_s": float(np.mean(acc.ttft)) if acc.ttft
+            else float("nan"),
+            "ttft_p99_s": float(np.percentile(acc.ttft, 99)) if acc.ttft
+            else float("nan"),
+            "tpot_mean_s": float(np.mean(acc.tpot)) if acc.tpot
+            else float("nan"),
+        }
+        if acc.scored:
+            attainment[label] = acc.ok / acc.scored
+            ok_total += acc.ok
+            scored_total += acc.scored
+    history = cluster.history
+    return ReplayStats(
+        n_requests=n, submitted=submitted, completed=completed,
+        dropped=max(dropped, len(cluster.rejected)),
+        duration_s=t, steps=steps, engine_seconds=engine_seconds,
+        peak_engines=peak_engines,
+        final_engines=len(cluster.engines()),
+        per_label=per_label, attainment=attainment,
+        attainment_overall=(ok_total / scored_total) if scored_total
+        else None,
+        windows=windows,
+        downtime_max_s=max((r.downtime_s for r in history), default=0.0),
+        reports=len(history),
+        reports_finalized=all(
+            set(METRIC_KEYS) <= set(r.metrics_after) for r in history))

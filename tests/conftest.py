@@ -18,7 +18,6 @@ test_cluster/test_autoscaler/test_migration:
                         (TTFT/TPOT stamps, downtime windows) are exact.
 """
 import dataclasses
-import threading
 
 import jax
 import numpy as np
@@ -113,51 +112,20 @@ def drive_trace(cluster, requests, *, steps_between=1, drain=True):
 
 
 # ---------------------------------------------------------------------------
-# deterministic fake clock
+# deterministic fake clock (now first-class: repro.serving.clock)
 # ---------------------------------------------------------------------------
 
-
-class FakeClock:
-    """Drop-in for the ``time`` module inside the serving layer: every
-    read advances the clock by ``tick`` seconds, so timestamps are
-    strictly increasing AND fully deterministic (no wall-clock jitter in
-    TTFT/TPOT/downtime assertions). Thread-safe."""
-
-    def __init__(self, start=1_000.0, tick=1e-3):
-        self._now = float(start)
-        self.tick = float(tick)
-        self._lock = threading.Lock()
-
-    def time(self):
-        with self._lock:
-            self._now += self.tick
-            return self._now
-
-    perf_counter = time
-
-    def sleep(self, dt):
-        self.advance(dt)
-
-    def advance(self, dt):
-        """Jump the clock forward without a read."""
-        with self._lock:
-            self._now += float(dt)
-
-    @property
-    def now(self):
-        with self._lock:
-            return self._now
+# Re-exported so older test imports (`from conftest import FakeClock`)
+# keep working; the implementation lives in the serving layer now.
+from repro.serving.clock import FakeClock, install_clock  # noqa: E402
 
 
 @pytest.fixture
-def fake_clock(monkeypatch):
-    """Install a `FakeClock` as the ``time`` module of the serving layer
-    (engine/cluster/migration stamp requests and windows through it)."""
-    import repro.serving.cluster as cluster_mod
-    import repro.serving.engine as engine_mod
-    import repro.serving.migration as migration_mod
-
+def fake_clock():
+    """Install a `FakeClock` as the ``time`` source of the serving layer
+    (engine/cluster/migration/prepare stamp requests and windows through
+    it — see `repro.serving.clock.install_clock`)."""
     clock = FakeClock()
-    for mod in (engine_mod, cluster_mod, migration_mod):
-        monkeypatch.setattr(mod, "time", clock)
-    return clock
+    restore = install_clock(clock)
+    yield clock
+    restore()

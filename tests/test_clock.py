@@ -1,0 +1,186 @@
+"""The first-class serving clock (`repro.serving.clock`).
+
+Pins the promoted `FakeClock` semantics (formerly a private test
+harness in conftest), the install/restore mechanism, and the contract
+the scale harness rests on: `Autoscaler` and `WorkloadPlanner`
+decisions are functions of ticks and the INJECTED clock only — the
+decision paths read no wall clock, so a simulated replay's scaling
+behavior cannot depend on host speed.
+"""
+import re
+import time as wall
+
+import numpy as np
+
+import pytest
+
+from repro.planner import (
+    A100,
+    EngineSpec,
+    LabelDemand,
+    WorkloadPlanner,
+    estimate,
+)
+from repro.serving import (
+    SYSTEM_CLOCK,
+    Autoscaler,
+    ElasticPolicy,
+    FakeClock,
+    LoadTracker,
+    ServingCluster,
+    SystemClock,
+    install_clock,
+    installed_clock,
+    simulated_time,
+)
+from repro.sharding.plan import default_plan
+from conftest import make_engine, make_request
+
+
+# ---------------------------------------------------------------------------
+# clock semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fakeclock_reads_advance_deterministically():
+    clock = FakeClock(start=10.0, tick=0.5)
+    assert clock.now == 10.0                 # `now` peeks without a read
+    assert clock.time() == 10.5              # every read advances by tick
+    assert clock.perf_counter() == 11.0      # perf_counter aliases time
+    assert clock.monotonic() == 11.5         # so does monotonic
+    clock.advance(100.0)
+    assert clock.now == pytest.approx(111.5)
+    assert clock.is_simulated
+
+
+def test_fakeclock_sleep_jumps_without_blocking():
+    clock = FakeClock()
+    t0 = wall.monotonic()
+    clock.sleep(3600.0)                      # an hour passes instantly
+    assert wall.monotonic() - t0 < 1.0
+    assert clock.now == pytest.approx(1_000.0 + 3600.0)
+
+
+def test_system_clock_surface():
+    assert not SYSTEM_CLOCK.is_simulated
+    assert isinstance(SYSTEM_CLOCK, SystemClock)
+    assert abs(SYSTEM_CLOCK.time() - wall.time()) < 5.0
+    assert SYSTEM_CLOCK.monotonic() <= SYSTEM_CLOCK.monotonic()
+    assert abs(SYSTEM_CLOCK.now - wall.time()) < 5.0
+
+
+def test_install_clock_swaps_and_restores_all_serving_modules():
+    from repro.serving import cluster, engine, migration, prepare
+
+    before = installed_clock()
+    clock = FakeClock()
+    restore = install_clock(clock)
+    try:
+        for mod in (engine, cluster, migration, prepare):
+            assert mod.time is clock
+        assert installed_clock() is clock
+    finally:
+        restore()
+    assert installed_clock() is before
+    for mod in (engine, cluster, migration, prepare):
+        assert mod.time is before
+
+
+def test_simulated_time_context_manager_stamps_requests(fp32_model):
+    """Request TTFT/TPOT stamps land in the simulated domain (the
+    FakeClock epoch, not wall time) while the context is active."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(0)
+    with simulated_time() as clock:
+        eng = make_engine(model, params)
+        req = make_request(rng, cfg, 0, "phi")
+        eng.submit(req)
+        eng.run()
+        assert 1_000.0 < req.t_submit < req.t_first <= req.t_done
+        assert req.t_done <= clock.now
+    assert not getattr(installed_clock(), "is_simulated", False)
+
+
+# ---------------------------------------------------------------------------
+# decision paths are wall-clock-free
+# ---------------------------------------------------------------------------
+
+
+def test_no_wall_clock_reads_on_decision_paths():
+    """Source-level pin: `autoscaler.py` and `planner/planner.py` never
+    call the time module directly — all timing flows through the
+    injected ``clock`` attribute (``self.clock.time()``)."""
+    import inspect
+
+    import repro.planner.planner as planner_mod
+    import repro.serving.autoscaler as autoscaler_mod
+
+    for mod in (autoscaler_mod, planner_mod):
+        src = inspect.getsource(mod)
+        assert not re.search(r"\btime\.(time|monotonic|perf_counter|sleep)"
+                             r"\s*\(", src), mod.__name__
+        assert "import time" not in src, mod.__name__
+
+
+def test_autoscaler_hysteresis_counts_ticks_not_seconds(fp32_model):
+    """Threshold-mode sustain hysteresis fires after N TICKS on the
+    injected clock — jumping the clock hours between ticks changes the
+    recorded tick_times but not the decisions."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(0)
+
+    def run(gap_s):
+        clock = FakeClock()
+        cluster = ServingCluster()
+        cluster.register("e0", make_engine(model, params),
+                         labels={"data-type": "phi"})
+        scaler = Autoscaler(
+            cluster, lambda label: make_engine(model, params),
+            policy=ElasticPolicy(spawn_depth=0.5, sustain=3, cooldown=2),
+            tracker=LoadTracker(alpha=1.0), bounds={"phi": (1, 3)},
+            clock=clock)
+        kinds = []
+        for rid in range(12):
+            cluster.submit(make_request(rng, cfg, rid, "phi"))
+        for _ in range(4):
+            kinds.append([d.kind for d in scaler.tick()])
+            clock.advance(gap_s)
+        return kinds, list(scaler.tick_times)
+
+    fast_kinds, fast_times = run(gap_s=0.0)
+    slow_kinds, slow_times = run(gap_s=7200.0)
+    assert fast_kinds == slow_kinds            # decisions: ticks only
+    assert any(k == ["spawn"] for k in fast_kinds)
+    # tick_times come from the injected clock, hours apart in the slow run
+    assert slow_times[1] - slow_times[0] > 7000.0
+    assert fast_times[1] - fast_times[0] < 1.0
+
+
+def test_planner_dwell_s_honors_injected_clock(fp32_model):
+    """`WorkloadPlanner(dwell_s=...)`: after an action, a non-mandatory
+    move is suppressed until the INJECTED clock has advanced past the
+    dwell — wall time never enters the decision."""
+    _, model, params = fp32_model
+    clock = FakeClock()
+    cluster = ServingCluster()
+
+    def factory(spec, label):
+        return make_engine(model, params, n_slots=spec.n_slots,
+                           s_max=spec.s_max)
+
+    spec = EngineSpec(plan=default_plan(), n_slots=2, s_max=32)
+    planner = WorkloadPlanner(cluster, factory, specs=[spec],
+                              profiles=[A100], dwell=0, dwell_s=30.0,
+                              horizon_s=1e9, clock=clock)
+    cap = estimate(planner.features_for(spec), A100).throughput_tok_s
+    demand = {"phi": LabelDemand(rate=0.7 * cap / 16.0)}
+    actions = planner.plan(demand)             # mandatory: no capacity
+    assert [a.kind for a in actions] == ["spawn"]
+    planner.execute(actions, async_spawn=False)
+    # demand stops -> retiring is a PURE cost saving: dwell_s gates it
+    assert planner.plan({"phi": LabelDemand(rate=0.0)}) == []
+    clock.advance(29.0)
+    assert planner.plan({"phi": LabelDemand(rate=0.0)}) == []
+    clock.advance(2.0)                         # now past the 30 s dwell
+    actions = planner.plan({"phi": LabelDemand(rate=0.0)})
+    assert [a.kind for a in actions] == ["retire"]

@@ -440,3 +440,134 @@ def test_planner_floor_via_plan_bounds_argument(fp32_model):
     actions = planner.plan({}, bounds={"phi": (1, 2)})
     assert [a.kind for a in actions] == ["spawn"]
     assert "floor" in actions[0].reason
+
+
+# ---------------------------------------------------------------------------
+# online estimator calibration (ResidualCalibration)
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_cold_start_equals_analytical_exactly(fp32_model):
+    """ACCEPTANCE (fail-closed cold start): with ZERO observations the
+    calibrated estimate is the analytical roofline, field for field —
+    calibration can only move an estimate after evidence exists."""
+    import dataclasses as dc
+
+    from repro.planner import ResidualCalibration, calibrated_estimate
+
+    _, model, params = fp32_model
+    feats = features_from_engine(make_engine(model, params))
+    host = calibrate_host_profile()
+    calib = ResidualCalibration()
+    analytical = estimate(feats, host, engines=2)
+    assert calib.factors("phi") == (1.0, 1.0)
+    assert calib.apply("phi", analytical) is analytical   # not a copy
+    assert dc.asdict(calibrated_estimate(
+        feats, host, engines=2, calibration=calib, label="phi")) \
+        == dc.asdict(analytical)
+    assert dc.asdict(calibrated_estimate(feats, host, engines=2)) \
+        == dc.asdict(analytical)                          # no calibration
+
+
+def test_calibration_strictly_reduces_error_on_corpus(fp32_model):
+    """ACCEPTANCE: on a recorded observation corpus whose true latencies
+    sit at a constant multiple of the roofline (mild noise), the EWMA
+    residual correction strictly reduces one-step-ahead TTFT and TPOT
+    error vs the uncorrected analytical estimate."""
+    from repro.planner import ResidualCalibration
+
+    _, model, params = fp32_model
+    feats = features_from_engine(make_engine(model, params))
+    host = calibrate_host_profile()
+    base = estimate(feats, host)
+    rng = np.random.default_rng(42)
+    calib = ResidualCalibration(alpha=0.3)
+    k_ttft, k_tpot = 1.8, 0.4             # systematic roofline residuals
+    err_a = {"ttft": [], "tpot": []}
+    err_c = {"ttft": [], "tpot": []}
+    for _ in range(40):
+        noise = 1.0 + 0.05 * rng.standard_normal(2)
+        measured_ttft = base.ttft_s * k_ttft * float(noise[0])
+        measured_tpot = base.tpot_s * k_tpot * float(noise[1])
+        cal = calib.apply("phi", base)    # prediction BEFORE folding
+        err_a["ttft"].append(abs(base.ttft_s - measured_ttft))
+        err_a["tpot"].append(abs(base.tpot_s - measured_tpot))
+        err_c["ttft"].append(abs(cal.ttft_s - measured_ttft))
+        err_c["tpot"].append(abs(cal.tpot_s - measured_tpot))
+        calib.observe("phi", predicted_ttft_s=base.ttft_s,
+                      predicted_tpot_s=base.tpot_s,
+                      measured_ttft_s=measured_ttft,
+                      measured_tpot_s=measured_tpot)
+    assert calib.n_observations("phi") == 40
+    for key in ("ttft", "tpot"):
+        assert np.mean(err_c[key]) < np.mean(err_a[key])
+    # the learned factors converged near the true residuals
+    f_ttft, f_tpot = calib.factors("phi")
+    assert f_ttft == pytest.approx(k_ttft, rel=0.15)
+    assert f_tpot == pytest.approx(k_tpot, rel=0.15)
+    # and only the latency fields move — capacity/feasibility stay
+    # analytical (calibration corrects time, not memory)
+    cal = calib.apply("phi", base)
+    assert cal.step_s == base.step_s
+    assert cal.throughput_tok_s == base.throughput_tok_s
+    assert cal.mem_bytes == base.mem_bytes and cal.fits == base.fits
+
+
+def test_calibration_rejects_degenerate_observations(fp32_model):
+    """Non-finite / non-positive measurements are ignored (a broken
+    probe must not poison the EWMA), and absurd ratios clip to the
+    configured cap instead of exploding the estimate."""
+    from repro.planner import ResidualCalibration
+
+    _, model, params = fp32_model
+    feats = features_from_engine(make_engine(model, params))
+    host = calibrate_host_profile()
+    base = estimate(feats, host)
+    calib = ResidualCalibration(ratio_cap=50.0)
+    for bad in (float("nan"), float("inf"), 0.0, -1.0):
+        calib.observe("phi", predicted_ttft_s=base.ttft_s,
+                      predicted_tpot_s=base.tpot_s,
+                      measured_ttft_s=bad, measured_tpot_s=bad)
+    assert calib.n_observations("phi") == 0
+    assert calib.factors("phi") == (1.0, 1.0)
+    calib.observe("phi", predicted_ttft_s=base.ttft_s,
+                  predicted_tpot_s=base.tpot_s,
+                  measured_ttft_s=base.ttft_s * 1e6,    # absurd ratio
+                  measured_tpot_s=base.tpot_s / 1e6)
+    f_ttft, f_tpot = calib.factors("phi")
+    assert f_ttft == pytest.approx(50.0)               # clipped high
+    assert f_tpot == pytest.approx(1.0 / 50.0)         # clipped low
+    with pytest.raises(ValueError):
+        ResidualCalibration(alpha=1.5)
+    with pytest.raises(ValueError):
+        ResidualCalibration(ratio_cap=0.5)
+
+
+def test_planner_observe_measurement_closes_loop(fp32_model):
+    """Planner-level loop: `observe_measurement` pairs a measurement
+    with the ANALYTICAL prediction for the deployed configuration (so
+    repeated folding never compounds), and `predicted_for` then reports
+    a calibrated estimate shifted by the learned residual."""
+    from repro.planner import ResidualCalibration
+
+    _, model, params = fp32_model
+    cluster = ServingCluster()
+    planner = _mk_planner(model, params, cluster, [A100],
+                          calibration=ResidualCalibration(alpha=1.0))
+    cap = estimate(planner.features_for(planner.specs[0]),
+                   A100).throughput_tok_s
+    demand = LabelDemand(rate=0.5 * cap / 16.0)
+    planner.execute(planner.plan({"phi": demand}), async_spawn=False)
+    analytical = planner.predicted_for("phi", demand, calibrated=False)
+    assert analytical is not None
+    # measured = 3x predicted TTFT, 0.5x predicted TPOT
+    planner.observe_measurement("phi", demand,
+                                measured_ttft_s=3.0 * analytical.ttft_s,
+                                measured_tpot_s=0.5 * analytical.tpot_s)
+    calibrated = planner.predicted_for("phi", demand)
+    assert calibrated.ttft_s == pytest.approx(3.0 * analytical.ttft_s)
+    assert calibrated.tpot_s == pytest.approx(0.5 * analytical.tpot_s)
+    # analytical view is unchanged — the residual lives in the
+    # calibration, not in the roofline
+    again = planner.predicted_for("phi", demand, calibrated=False)
+    assert again.ttft_s == pytest.approx(analytical.ttft_s)

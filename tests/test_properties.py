@@ -13,8 +13,13 @@ serving runtime leans on:
     OOM failures allocate nothing;
   * the continuous-batching compactor (`ServingEngine._compact`) —
     re-packing lanes preserves every request's (pos, pages, table row)
-    association and their relative order.
+    association and their relative order;
+  * the synthetic traffic generator (`repro.traffic.generator`) — same
+    seed -> bitwise-identical trace, monotone arrival times, and a
+    per-label mix that converges to the configured weights.
 """
+import dataclasses
+
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
@@ -22,6 +27,9 @@ from repro.serving import Request
 from repro.serving.kvpool import SCRATCH_PAGE, PagedKVPool, PoolOOM
 from repro.serving.migration import needed_capacity, required_capacity
 from repro.sharding import ShardingPlan, merge_restrictions, plan_satisfies
+from repro.traffic import (FlashCrowd, LabelProfile, LongPromptFlood,
+                           TrafficPattern, generate_trace)
+from repro.traffic.generator import label_mix
 
 settings.register_profile("repo", max_examples=50)
 settings.load_profile("repo")
@@ -296,3 +304,85 @@ def test_compaction_preserves_per_request_state(occ):
         assert int(eng.slot_pos[lane]) == 0
         assert eng.slot_pages[lane] == []
         assert all(p == SCRATCH_PAGE for p in eng.page_tables[lane])
+
+
+# ---------------------------------------------------------------------------
+# synthetic traffic generator (repro/traffic/generator.py)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def traffic_patterns(draw, adversarial=True):
+    """Random `TrafficPattern`s: 1-3 weighted labels, diurnal swing,
+    optionally a (label-pinned) flash crowd and a long-prompt flood."""
+    n_labels = draw(st.integers(1, 3))
+    labels = {f"l{i}": LabelProfile(weight=float(draw(st.integers(1, 5))),
+                                    new_tokens_mean=1.0
+                                    + draw(st.integers(0, 4)))
+              for i in range(n_labels)}
+    crowds, floods = (), ()
+    if adversarial and draw(st.booleans()):
+        crowds = (FlashCrowd(
+            t_start=float(draw(st.integers(0, 20))),
+            duration_s=float(draw(st.integers(1, 10))),
+            multiplier=float(draw(st.integers(2, 5))),
+            label=draw(st.sampled_from([None] + sorted(labels)))),)
+    if adversarial and draw(st.booleans()):
+        floods = (LongPromptFlood(
+            t_start=float(draw(st.integers(0, 20))),
+            duration_s=float(draw(st.integers(1, 10))),
+            rate=float(draw(st.integers(1, 10))),
+            label=draw(st.sampled_from(sorted(labels)))),)
+    return TrafficPattern(
+        duration_s=30.0, base_rate=float(draw(st.integers(5, 40))),
+        labels=labels,
+        diurnal_amplitude=draw(st.integers(0, 8)) / 10.0,
+        flash_crowds=crowds, floods=floods,
+        seed=draw(st.integers(0, 2**31 - 1)))
+
+
+@given(pattern=traffic_patterns())
+def test_trace_same_seed_bitwise_identical(pattern):
+    """ACCEPTANCE: a pattern is a pure function of its seed — two
+    independent generations agree on every field of every request."""
+    a, b = generate_trace(pattern), generate_trace(pattern)
+    assert a == b                         # frozen dataclasses: exact
+    # ...and a different seed actually moves the trace (not a constant)
+    other = dataclasses.replace(pattern, seed=pattern.seed ^ 1)
+    assert generate_trace(other) != a
+
+
+@given(pattern=traffic_patterns())
+def test_trace_arrivals_monotone_and_well_formed(pattern):
+    """Arrival times are monotone non-decreasing within [0, duration),
+    rids are dense in arrival order, and every shape respects its
+    label's profile (bucketed prompts, capped decode budgets)."""
+    trace = generate_trace(pattern)
+    flood_shapes = {(f.label, f.prompt_len, f.new_tokens)
+                    for f in pattern.floods}
+    prev = 0.0
+    for i, r in enumerate(trace):
+        assert r.rid == i
+        assert r.t >= prev
+        assert 0.0 <= r.t < pattern.duration_s
+        prev = r.t
+        prof = pattern.labels[r.label]
+        if (r.label, r.prompt_len, r.new_tokens) not in flood_shapes:
+            assert r.prompt_len in prof.prompt_buckets
+            assert 1 <= r.new_tokens <= prof.new_tokens_cap
+
+
+@given(pattern=traffic_patterns(adversarial=False),
+       _seed_bump=st.integers(0, 1000))
+def test_trace_label_mix_matches_weights(pattern, _seed_bump):
+    """Without label-skewing events (crowds/floods), the empirical
+    per-label mix converges to the normalized profile weights (diurnal
+    modulation scales all labels equally, so it cannot skew the mix)."""
+    pattern = dataclasses.replace(pattern, base_rate=60.0,
+                                  seed=pattern.seed + _seed_bump)
+    trace = generate_trace(pattern)
+    assert len(trace) > 1000              # enough mass for the tolerance
+    total = sum(p.weight for p in pattern.labels.values())
+    mix = label_mix(trace)
+    for name, prof in pattern.labels.items():
+        assert abs(mix.get(name, 0.0) - prof.weight / total) < 0.05
