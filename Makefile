@@ -1,11 +1,16 @@
 PY ?= python
 
-.PHONY: test test-stress ci example bench-reconfig bench-elastic \
+.PHONY: test test-stress ci example lint bench-reconfig bench-elastic \
         bench-migration bench-overlap bench-planner bench-paged \
-        bench-scale bench-json docs
+        bench-scale bench-obs bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
+
+# static checks: simulated-clock discipline (any serving/obs module that
+# touches `time` must be swappable via CLOCKED_MODULE_NAMES)
+lint:
+	$(PY) scripts/check_clock_discipline.py
 
 # the concurrency suite (threaded submitters vs async PREPARE commits),
 # the paged-pool fragmentation stress, and the 10^5+-request simulated-
@@ -40,8 +45,11 @@ bench-paged:
 bench-scale:
 	PYTHONPATH=src:. $(PY) benchmarks/scale_serving.py
 
+bench-obs:
+	PYTHONPATH=src:. $(PY) benchmarks/obs_overhead.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged scale
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs
 
 docs:
 	$(PY) scripts/run_doc_examples.py

@@ -1,0 +1,181 @@
+"""Flight-recorder overhead benchmark: recording must be ~free.
+
+    PYTHONPATH=src:. python benchmarks/obs_overhead.py
+
+Three measured facts, asserted as the contract:
+
+  1. **Recording overhead < 2% of the replay loop.** Run-to-run wall
+     noise on a shared single-vCPU box exceeds 20% for *identical*
+     unrecorded replays (we measured it), so an end-to-end on/off wall
+     comparison cannot resolve a 2% budget — it would be a coin flip.
+     Instead the overhead is attributed mechanistically: a tight
+     microbenchmark times the recorder's actual hot-path operations
+     (a ``request.complete`` emit — the most expensive kind: bus ring
+     + counter + two quantile-sketch folds — and a ``route`` span),
+     the recorded replay reports exactly how many of each it performed
+     (``rec.bus.emitted`` / ``rec.trace.added``), and the attributed
+     cost — times a 2x cold-cache safety factor — must stay under
+     ``OVERHEAD_BUDGET`` of the replay loop's wall time. The raw
+     end-to-end on/off walls are still reported for the artifact.
+  2. **Recording never perturbs the simulation.** Every run, recorded
+     or not, must report bit-identical simulated duration and
+     completion counts (the recorder timestamps with non-advancing
+     clock reads) — so the only possible cost IS the attributed one.
+  3. **The exported trace is Perfetto-loadable.** `validate_chrome`
+     checks the Chrome ``trace_event`` schema of the recorded run's
+     export; the artifact records the event/span counts.
+
+Emits ``name,value,derived`` CSV rows and returns the artifact dict
+(`run.py` writes it to BENCH_obs.json, mirrored at the repo root).
+"""
+from __future__ import annotations
+
+import os
+import time as wall
+
+SEED = 11
+#: attributed recorder share of the replay loop (fraction). The
+#: recorder's work per request is a few dict allocations + ring stores;
+#: 2% of a replay whose per-step cost is real decode math is generous.
+OVERHEAD_BUDGET = 0.02
+#: cold-cache margin on the microbenchmarked per-op cost: in-situ calls
+#: miss caches a warm timing loop hits
+SAFETY_FACTOR = 2.0
+#: microbenchmark iterations per op
+MICRO_N = 20_000
+
+
+def _per_op_costs() -> dict:
+    """Seconds per recorder hot-path operation, measured warm."""
+    from repro.obs import Recorder
+
+    rec = Recorder(capacity=MICRO_N + 1, trace_capacity=MICRO_N + 1)
+    t0 = wall.perf_counter()
+    for i in range(MICRO_N):
+        rec.emit("request.complete", engine="e0", rid=i, label="phi",
+                 ttft_s=0.1, tpot_s=0.01, tokens_out=8)
+    emit_s = (wall.perf_counter() - t0) / MICRO_N
+
+    t0 = wall.perf_counter()
+    for i in range(MICRO_N):
+        with rec.span("route", track="cluster", rid=i) as args:
+            args["engine"] = "e0"
+    span_s = (wall.perf_counter() - t0) / MICRO_N
+    return {"emit_s": emit_s, "span_s": span_s}
+
+
+def bench_obs_overhead(emit=None) -> dict:
+    import json
+    import tempfile
+
+    from repro.obs import Recorder, SLOLedger, validate_chrome
+    from repro.traffic.replay import recorded_replay
+
+    if emit is None:
+        def emit(name, value, derived=""):
+            print(f"{name},{value},{derived}")
+
+    n_requests = int(os.environ.get("OBS_REQUESTS", "1000"))
+    repeats = max(1, int(os.environ.get("OBS_REPEATS", "2")))
+
+    def run(recorder):
+        timings = {}
+        stats, rec, planner = recorded_replay(
+            n_requests, seed=SEED, recorder=recorder, timings=timings)
+        return stats, rec, planner, timings["replay_wall_s"]
+
+    # warm-up: the first run pays one-time process costs (imports,
+    # BLAS/thread-pool spin-up) that would otherwise land on one mode
+    run(False)
+    walls_off, walls_on = [], []
+    stats0 = rec = planner = None
+    for _ in range(repeats):                     # interleaved: drift-fair
+        stats_off, _, _, w_off = run(False)      # recording disabled
+        stats_on, rec, planner, w_on = run(Recorder())
+        walls_off.append(w_off)
+        walls_on.append(w_on)
+        if stats0 is None:
+            stats0 = stats_off
+        # recording never advances the simulated clock: every run, on
+        # or off, reproduces the identical simulated results
+        for s in (stats_off, stats_on):
+            assert s.completed == stats0.completed, (s, stats0)
+            assert s.duration_s == stats0.duration_s, (s, stats0)
+            assert s.dropped == stats0.dropped == 0
+
+    wall_off, wall_on = min(walls_off), min(walls_on)
+    costs = _per_op_costs()
+    attributed_s = SAFETY_FACTOR * (rec.bus.emitted * costs["emit_s"]
+                                    + rec.trace.added * costs["span_s"])
+    overhead = attributed_s / wall_on
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "replay.trace.json")
+        rec.export_chrome(path)
+        doc = json.loads(open(path).read())
+    n_trace_events = validate_chrome(doc)
+
+    ledger = SLOLedger.from_policy(planner).consume(rec.events())
+
+    contract = {
+        "overhead_under_budget": overhead < OVERHEAD_BUDGET,
+        "trace_valid": n_trace_events > 0,
+        "identical_sim_results": True,           # asserted every run above
+        "no_event_drops": rec.bus.dropped == 0,
+    }
+    assert contract["overhead_under_budget"], (
+        f"attributed recording overhead {overhead:.2%} >= "
+        f"{OVERHEAD_BUDGET:.0%} ({rec.bus.emitted} events x "
+        f"{costs['emit_s'] * 1e6:.2f}us + {rec.trace.added} spans x "
+        f"{costs['span_s'] * 1e6:.2f}us, x{SAFETY_FACTOR:g} margin, "
+        f"over a {wall_on:.2f}s replay loop)")
+    assert contract["trace_valid"]
+
+    emit("obs_requests", stats0.completed)
+    emit("obs_replay_wall_off_s", round(wall_off, 3),
+         f"replay loop only, recorder off, min of {repeats}")
+    emit("obs_replay_wall_on_s", round(wall_on, 3),
+         f"replay loop only, recorder on, min of {repeats}")
+    emit("obs_emit_cost_us", round(costs["emit_s"] * 1e6, 3),
+         "per request.complete emit (bus + counter + 2 sketches)")
+    emit("obs_span_cost_us", round(costs["span_s"] * 1e6, 3),
+         "per route span")
+    emit("obs_attributed_overhead_pct", round(100 * overhead, 3),
+         f"contract: < {100 * OVERHEAD_BUDGET:.0f} "
+         f"(x{SAFETY_FACTOR:g} cold-cache margin)")
+    emit("obs_events_recorded", rec.bus.emitted)
+    emit("obs_events_dropped", rec.bus.dropped, "contract: 0")
+    emit("obs_spans_recorded", rec.trace.added)
+    emit("obs_trace_events", n_trace_events, "Perfetto-loadable")
+    emit("obs_slo_attainment_overall",
+         round(ledger.attainment_overall(), 4)
+         if ledger.attainment_overall() is not None else "n/a",
+         "from the event stream (SLOLedger)")
+
+    return {
+        "seed": SEED,
+        "requests": stats0.completed,
+        "repeats": repeats,
+        "replay_wall_off_s": wall_off,
+        "replay_wall_on_s": wall_on,
+        "replay_walls_off_s": walls_off,
+        "replay_walls_on_s": walls_on,
+        "emit_cost_us": costs["emit_s"] * 1e6,
+        "span_cost_us": costs["span_s"] * 1e6,
+        "attributed_overhead_pct": 100 * overhead,
+        "overhead_budget_pct": 100 * OVERHEAD_BUDGET,
+        "safety_factor": SAFETY_FACTOR,
+        "events_recorded": rec.bus.emitted,
+        "events_dropped": rec.bus.dropped,
+        "spans_recorded": rec.trace.added,
+        "spans_dropped": rec.trace.dropped,
+        "trace_events": n_trace_events,
+        "slo_attainment": dict(ledger.attainment(),
+                               overall=ledger.attainment_overall()),
+        "pauses": ledger.pause_accounting(),
+        "contract": contract,
+    }
+
+
+if __name__ == "__main__":
+    bench_obs_overhead()

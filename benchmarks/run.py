@@ -37,11 +37,13 @@ Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_elastic.json`` (autoscaling trajectory),
 ``benchmarks/BENCH_overlap.json`` (concurrent-PREPARE contract),
 ``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract),
-``benchmarks/BENCH_paged.json`` (paged-pool saturation contract), and
+``benchmarks/BENCH_paged.json`` (paged-pool saturation contract),
 ``benchmarks/BENCH_scale.json`` (scale-replay + calibration contract),
-so the perf trajectory is tracked across PRs. CI produces them via
+and ``benchmarks/BENCH_obs.json`` (flight-recorder overhead contract) —
+each mirrored to the repo root — so the perf trajectory is tracked
+across PRs. CI produces them via
 
-    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale
+    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs
 
 (``--only`` substring-matches bench function names; no flag runs all.)
 """
@@ -77,40 +79,35 @@ def _jsonable(x):
     return x
 
 
+#: artifact name -> the ARTIFACTS keys that fold into BENCH_<name>.json
+ARTIFACT_FILES = {
+    "reconfig": ("reconfigure", "migration"),
+    "elastic": ("elastic",),
+    "overlap": ("overlap",),
+    "planner": ("planner",),
+    "paged": ("paged",),
+    "scale": ("scale",),
+    "obs": ("obs",),
+}
+
+
 def _write_artifacts() -> None:
-    """Write BENCH_reconfig.json / BENCH_elastic.json from whatever
-    serving benchmarks ran (partial runs write partial artifacts)."""
-    reconfig = {k: ARTIFACTS[k] for k in ("reconfigure", "migration")
-                if k in ARTIFACTS}
-    if reconfig:
-        path = ART_DIR / "BENCH_reconfig.json"
-        path.write_text(json.dumps(_jsonable(reconfig), indent=2) + "\n")
-        emit("_artifact_reconfig_json", str(path))
-    if "elastic" in ARTIFACTS:
-        path = ART_DIR / "BENCH_elastic.json"
-        path.write_text(
-            json.dumps(_jsonable(ARTIFACTS["elastic"]), indent=2) + "\n")
-        emit("_artifact_elastic_json", str(path))
-    if "overlap" in ARTIFACTS:
-        path = ART_DIR / "BENCH_overlap.json"
-        path.write_text(
-            json.dumps(_jsonable(ARTIFACTS["overlap"]), indent=2) + "\n")
-        emit("_artifact_overlap_json", str(path))
-    if "planner" in ARTIFACTS:
-        path = ART_DIR / "BENCH_planner.json"
-        path.write_text(
-            json.dumps(_jsonable(ARTIFACTS["planner"]), indent=2) + "\n")
-        emit("_artifact_planner_json", str(path))
-    if "paged" in ARTIFACTS:
-        path = ART_DIR / "BENCH_paged.json"
-        path.write_text(
-            json.dumps(_jsonable(ARTIFACTS["paged"]), indent=2) + "\n")
-        emit("_artifact_paged_json", str(path))
-    if "scale" in ARTIFACTS:
-        path = ART_DIR / "BENCH_scale.json"
-        path.write_text(
-            json.dumps(_jsonable(ARTIFACTS["scale"]), indent=2) + "\n")
-        emit("_artifact_scale_json", str(path))
+    """Write BENCH_<name>.json for whatever serving benchmarks ran
+    (partial runs write partial artifacts). Each artifact is mirrored to
+    the REPO ROOT as well as benchmarks/, so the perf trajectory is
+    visible at the top level of every PR diff."""
+    for name, keys in ARTIFACT_FILES.items():
+        if len(keys) == 1:
+            data = ARTIFACTS.get(keys[0])
+        else:
+            data = {k: ARTIFACTS[k] for k in keys if k in ARTIFACTS} or None
+        if data is None:
+            continue
+        text = json.dumps(_jsonable(data), indent=2) + "\n"
+        for where in (ART_DIR, ART_DIR.parent):
+            (where / f"BENCH_{name}.json").write_text(text)
+        emit(f"_artifact_{name}_json", str(ART_DIR / f"BENCH_{name}.json"),
+             "mirrored to repo root")
 
 
 # ---------------------------------------------------------------------------
@@ -301,6 +298,18 @@ def bench_scale_serving() -> None:
     ARTIFACTS["scale"] = bench(emit=emit)
 
 
+def bench_obs_overhead() -> None:
+    """Flight-recorder overhead + trace validity: the recorded replay's
+    throughput must stay within 2% of the unrecorded one (zero-overhead-
+    when-disabled is asserted separately by the no-op path), and the
+    exported Chrome trace must validate as Perfetto-loadable."""
+    try:
+        from benchmarks.obs_overhead import bench_obs_overhead as bench
+    except ImportError:
+        from obs_overhead import bench_obs_overhead as bench
+    ARTIFACTS["obs"] = bench(emit=emit)
+
+
 def bench_roofline_table() -> None:
     """Summarize the dry-run records (single-pod mesh) — §Roofline."""
     d = Path("experiments/dryrun")
@@ -354,6 +363,7 @@ BENCHES = [
     bench_planner_search,
     bench_paged_batching,
     bench_scale_serving,
+    bench_obs_overhead,
     bench_kernel_latency,
     bench_roofline_table,
 ]

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Static clock-discipline check for the serving + observability layers.
+
+The simulated-clock contract (`repro.serving.clock`) only holds when
+every module that reads time does so through its swappable module-level
+``time`` attribute AND is listed in ``CLOCKED_MODULE_NAMES`` so
+`install_clock` actually swaps it. A raw ``time.time()`` /
+``time.monotonic()`` / ``datetime.now()`` in an unregistered module is a
+wall-clock leak: correct-looking at system speed, silently wrong (and
+nondeterministic) in every simulated replay.
+
+This script scans ``src/repro/serving`` and ``src/repro/obs`` for:
+
+  * ``import time`` / ``from time import ...`` in a module NOT listed in
+    ``CLOCKED_MODULE_NAMES`` (clock.py itself is exempt — it OWNS the
+    real clock, aliased as ``_time``);
+  * ``datetime.now`` / ``datetime.utcnow`` / ``time.time()`` style calls
+    anywhere in those trees outside clock.py.
+
+Exit status 1 (CI fails) on any violation. Wired into scripts/ci.sh and
+``make lint``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+SCANNED_DIRS = ("repro/serving", "repro/obs")
+EXEMPT = "repro/serving/clock.py"     # owns the real clock (as _time)
+
+IMPORT_RE = re.compile(r"^\s*(import\s+time\b|from\s+time\s+import\b)",
+                       re.MULTILINE)
+DATETIME_RE = re.compile(
+    r"\bdatetime\.(?:now|utcnow|today)\s*\(|\bdatetime\.datetime\b")
+
+
+def clocked_modules() -> set:
+    sys.path.insert(0, str(SRC))
+    from repro.serving.clock import CLOCKED_MODULE_NAMES
+    return set(CLOCKED_MODULE_NAMES)
+
+
+def module_name(path: pathlib.Path) -> str:
+    rel = path.relative_to(SRC).with_suffix("")
+    return ".".join(rel.parts)
+
+
+def main() -> int:
+    registered = clocked_modules()
+    violations = []
+    for d in SCANNED_DIRS:
+        for path in sorted((SRC / d).rglob("*.py")):
+            rel = path.relative_to(SRC).as_posix()
+            if rel == EXEMPT:
+                continue
+            text = path.read_text()
+            if DATETIME_RE.search(text):
+                violations.append(
+                    f"{rel}: datetime-based wall-clock read — route it "
+                    "through the module 'time' attribute and register the "
+                    "module in CLOCKED_MODULE_NAMES")
+            if IMPORT_RE.search(text):
+                mod = module_name(path)
+                if mod not in registered:
+                    violations.append(
+                        f"{rel}: imports 'time' but {mod!r} is not in "
+                        "repro.serving.clock.CLOCKED_MODULE_NAMES — "
+                        "install_clock would never swap it, so simulated "
+                        "replays would silently read the wall clock")
+    if violations:
+        print("clock-discipline violations:")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print(f"clock discipline OK: every time-importing module under "
+          f"{' + '.join(SCANNED_DIRS)} is registered in "
+          f"CLOCKED_MODULE_NAMES ({len(registered)} modules)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

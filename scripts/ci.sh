@@ -4,6 +4,9 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== lint: clock discipline (no wall-clock reads off the registry) =="
+python scripts/check_clock_discipline.py
+
 echo "== tier-1: test suite =="
 python -m pytest -x -q
 
@@ -14,6 +17,6 @@ echo "== docs: execute the embedded examples (they must not rot) =="
 python scripts/run_doc_examples.py
 
 echo "== serving benchmarks: perf-trajectory artifacts (BENCH_*.json) =="
-PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale
+PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs
 
 echo "CI OK"

@@ -36,8 +36,15 @@ class SyntheticLM:
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
         k_tok, k_doc = jax.random.split(key)
         S = self.seq_len + 1
-        tokens = jax.random.randint(
-            k_tok, (self.global_batch, S), 2, self.vocab_size, dtype=jnp.int32)
+        # skewed (power-law-ish) unigram over content ids, via inverse
+        # CDF: u^4 concentrates mass on the low ids, so the stream has a
+        # LEARNABLE unigram structure (a uniform draw's cross-entropy is
+        # irreducibly ln(vocab-2) — a model can't demonstrably improve
+        # on it within a short smoke test). Still a pure function of
+        # (seed, step): determinism/restart semantics are unchanged.
+        u = jax.random.uniform(k_tok, (self.global_batch, S))
+        tokens = (2 + (self.vocab_size - 2) * u ** 4.0).astype(jnp.int32)
+        tokens = jnp.clip(tokens, 2, self.vocab_size - 1)
         # document boundaries (BOS) with prob 1/mean_doc_len
         doc = jax.random.bernoulli(
             k_doc, 1.0 / self.mean_doc_len, (self.global_batch, S))

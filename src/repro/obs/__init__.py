@@ -1,0 +1,58 @@
+"""Flight-recorder observability for the serving stack.
+
+Four pieces behind one handle (`Recorder`):
+
+    events.py   structured event bus — typed `Event`s, timestamped on
+                the INSTALLED serving clock (non-advancing reads under
+                a `FakeClock`), bounded ring with drop counters;
+    trace.py    nested span tracing + Chrome ``trace_event`` exporter
+                (open any replay in Perfetto);
+    metrics.py  counters / gauges / log-bucketed quantile sketches with
+                label sets, plus the `RequestAggregate` that gives
+                `ServingCluster.metrics_by_label` O(1) accounting;
+    slo.py      SLO/downtime ledger — Φ_L targets + the event stream →
+                windowed per-label attainment and an exact "who paid
+                this pause" breakdown.
+
+Recording is opt-in and zero-overhead when off: the serving stack
+guards every hook with ``RECORDER is None``. Enable with::
+
+    from repro.obs import Recorder, recording
+    with recording(Recorder()) as rec:
+        ...
+    rec.export_chrome("run.trace.json")
+
+See docs/observability.md for the event taxonomy and span hierarchy.
+"""
+from repro.obs.events import (
+    Event,
+    EventBus,
+    Recorder,
+    get_recorder,
+    install_recorder,
+    now,
+    recording,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RequestAggregate,
+)
+from repro.obs.slo import PauseAccount, SLOLedger, WindowAttainment, meets_slo
+from repro.obs.trace import (
+    Span,
+    TraceBuffer,
+    export_chrome,
+    overlaps,
+    validate_chrome,
+)
+
+__all__ = [
+    "Event", "EventBus", "Recorder", "get_recorder", "install_recorder",
+    "now", "recording",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "RequestAggregate",
+    "PauseAccount", "SLOLedger", "WindowAttainment", "meets_slo",
+    "Span", "TraceBuffer", "export_chrome", "overlaps", "validate_chrome",
+]

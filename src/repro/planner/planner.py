@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.obs import events as obs_events
 from repro.planner.catalog import DeviceProfile, calibrate_host_profile
 from repro.planner.estimator import (
     CostEstimate,
@@ -428,6 +429,7 @@ class WorkloadPlanner:
             estimate_fn=self._estimate_fn)
         actions = self._diff(best, current, demand, merged_bounds)
         if not actions:
+            self._emit_decision(demand, best, cur_score, [], "no-op")
             return []
 
         mandatory = best.violations < cur_score.violations \
@@ -435,17 +437,55 @@ class WorkloadPlanner:
                    or "constraint" in a.reason for a in actions)
         if not mandatory:
             if self._since_exec <= self.dwell:
-                return []               # dwell: recently acted
+                # dwell: recently acted
+                self._emit_decision(demand, best, cur_score, actions,
+                                    "dwell-rounds")
+                return []
             if (self.dwell_s is not None and self._last_exec_t is not None
                     and self.clock.time() - self._last_exec_t
                     < self.dwell_s):
-                return []               # dwell: clock says too soon
+                # dwell: clock says too soon
+                self._emit_decision(demand, best, cur_score, actions,
+                                    "dwell-clock")
+                return []
             # pure cost-saving switch must amortize its switching cost
             saving = (cur_score.cost - best.cost) * self.horizon_s
             if saving <= self._switch_cost_s(len(actions)) \
                     * self.switch_margin:
+                self._emit_decision(demand, best, cur_score, actions,
+                                    "not-amortized")
                 return []
+        self._emit_decision(demand, best, cur_score, actions, "")
         return actions
+
+    def _emit_decision(self, demand: Mapping[str, LabelDemand],
+                       best: ScoredCandidate, cur_score: ScoredCandidate,
+                       actions: Sequence[PlanAction], held: str) -> None:
+        """Flight-recorder hook: one ``planner.decision`` record per
+        planning round — the winning candidate's scores vs the current
+        configuration's, the learned calibration residuals, and either
+        the chosen actions or the hysteresis reason they were held."""
+        rec = obs_events.RECORDER
+        if rec is None:
+            return
+        residuals = {}
+        if self.calibration is not None:
+            residuals = {label: list(self.calibration.factors(label))
+                         for label in sorted(demand)}
+        rec.emit(
+            "planner.decision",
+            demand={lb: d.rate for lb, d in sorted(demand.items())},
+            best_score=[best.violations, best.cost, best.headroom],
+            best_config={lb: [a.count, a.profile.name]
+                         for lb, a in sorted(best.config.items())},
+            current_score=[cur_score.violations, cur_score.cost,
+                           cur_score.headroom],
+            residuals=residuals,
+            infeasible=list(best.infeasible),
+            held=held,
+            actions=[{"kind": a.kind, "label": a.label, "engine": a.engine,
+                      "mode": a.mode, "reason": a.reason}
+                     for a in actions])
 
     def _diff(self, best: ScoredCandidate,
               current: Mapping[str, Tuple[EngineSpec, DeviceProfile, int]],
@@ -593,6 +633,10 @@ class WorkloadPlanner:
                 raise ValueError(f"unknown PlanAction kind {a.kind!r}")
             out.append((a, res))
             self.log.append((a, res))
+            rec = obs_events.RECORDER
+            if rec is not None:
+                rec.emit("planner.execute", engine=a.engine, label=a.label,
+                         action=a.kind, mode=a.mode, reason=a.reason)
         if any(a.kind != "hold" for a in actions):
             self._since_exec = 0
             self._last_exec_t = self.clock.time()

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import events as obs_events
 from repro.serving.clock import SYSTEM_CLOCK
 from repro.serving.cluster import DowntimeReport, ServingCluster
 from repro.serving.engine import ServingEngine
@@ -638,6 +639,12 @@ class Autoscaler:
                 for label in self.tracker.labels() if label != "*"}
         snap["total"] = len(self.cluster.engines())
         self.trajectory.append(snap)
+        rec = obs_events.RECORDER
+        if rec is not None:
+            for d in executed:
+                rec.emit("scale.decision", engine=d.engine, label=d.label,
+                         action=d.kind, mode=d.mode, reason=d.reason,
+                         mode_planner=self.planner is not None)
         return executed
 
     def _tick_planner(self) -> List[ScaleDecision]:

@@ -3,7 +3,9 @@
 Every timing-derived quantity in the serving stack — `Request` TTFT/TPOT
 stamps, `DowntimeReport` blocking windows, migration pauses, PREPARE
 durations — flows through the ``time`` attribute of the serving modules
-(`engine`, `cluster`, `migration`, `prepare`). That indirection is what
+(`engine`, `cluster`, `migration`, `prepare` — plus the flight
+recorder's `repro.obs.events`; see ``CLOCKED_MODULE_NAMES``). That
+indirection is what
 lets a 10^5–10^6-request replay run on a **simulated clock**: install a
 `FakeClock` and wall-clock never gates scale (``cluster.run``'s idle
 sleep becomes a virtual advance, not a real one).
@@ -96,19 +98,32 @@ class FakeClock:
             return self._now
 
 
-def _serving_modules():
-    import repro.serving.cluster as cluster_mod
-    import repro.serving.engine as engine_mod
-    import repro.serving.migration as migration_mod
-    import repro.serving.prepare as prepare_mod
+#: Module names whose ``time`` attribute `install_clock` swaps — the
+#: registry `scripts/check_clock_discipline.py` enforces: any file under
+#: ``src/repro/serving`` or ``src/repro/obs`` that touches :mod:`time`
+#: must appear here (or be this file), or CI fails.
+CLOCKED_MODULE_NAMES = (
+    "repro.serving.engine",
+    "repro.serving.cluster",
+    "repro.serving.migration",
+    "repro.serving.prepare",
+    "repro.obs.events",
+)
 
-    return (engine_mod, cluster_mod, migration_mod, prepare_mod)
+
+def _serving_modules():
+    import importlib
+
+    return tuple(importlib.import_module(name)
+                 for name in CLOCKED_MODULE_NAMES)
 
 
 def install_clock(clock) -> Callable[[], None]:
     """Install ``clock`` as the time source of the serving layer
     (engine / cluster / migration / prepare stamp requests, downtime
-    windows, migration pauses, and PREPARE durations through it).
+    windows, migration pauses, and PREPARE durations through it; the
+    flight recorder — `repro.obs` — timestamps its events on it too,
+    via non-advancing reads).
 
     Returns:
         A zero-argument restore callable that puts the previous time

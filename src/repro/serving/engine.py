@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.obs import events as obs_events
 from repro.serving import kvpool, migration
 from repro.serving.migration import MigrationError, SlotSnapshot
 from repro.sharding.plan import ShardingPlan, default_plan
@@ -187,6 +188,9 @@ class ServingEngine:
         self.vocab = model.cfg.vocab_size
         self.plan = plan or default_plan()
         self.labels = dict(labels or {})
+        # display name for flight-recorder events/spans; the cluster
+        # sets it to the registered engine name
+        self.obs_name = ""
 
         self.paged = (kvpool.supports_paging(model) if paged is None
                       else bool(paged))
@@ -484,6 +488,12 @@ class ServingEngine:
         req.t_submit = time.time()
         self.note_prompt_length(len(req.prompt))
         self.queue.append(req)
+        rec = obs_events.RECORDER
+        if rec is not None:
+            rec.emit("request.submit", engine=self.obs_name, rid=req.rid,
+                     label=req.labels.get("data-type", ""),
+                     prompt_len=len(req.prompt),
+                     max_new_tokens=req.max_new_tokens)
 
     def note_prompt_length(self, length: int) -> None:
         """Record a prompt length as recently seen (feeds the default AOT
@@ -628,6 +638,11 @@ class ServingEngine:
             tok = int(jnp.argmax(logits[0, : self.vocab]))
             req.tokens_out.append(tok)
             req.t_first = time.time()
+            rec = obs_events.RECORDER
+            if rec is not None:
+                rec.emit("request.admit", engine=self.obs_name, rid=req.rid,
+                         label=req.labels.get("data-type", ""),
+                         queue_wait_s=req.t_first - req.t_submit)
             if self.paged:
                 # scatter the single-sequence cache into the reserved
                 # pages; the scratch-padded table tail absorbs bucket
@@ -894,6 +909,7 @@ class ServingEngine:
                                         self.cache, pos)
         logits = np.asarray(logits[:, : self.vocab])
         now = time.time()
+        rec = obs_events.RECORDER
         for i in active:
             req = self.slot_req[i]
             tok = int(np.argmax(logits[i]))
@@ -904,7 +920,16 @@ class ServingEngine:
                 req.t_done = now
                 self.done.append(req)
                 self._release_lane(i)
+                if rec is not None:
+                    rec.emit("request.complete", engine=self.obs_name,
+                             rid=req.rid,
+                             label=req.labels.get("data-type", ""),
+                             ttft_s=req.ttft, tpot_s=req.tpot,
+                             tokens_out=len(req.tokens_out))
         self.steps += 1
+        if rec is not None and self.steps % rec.decode_stride == 0:
+            rec.emit("engine.decode", engine=self.obs_name,
+                     step=self.steps, active=len(active))
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> None:

@@ -52,10 +52,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import events as obs_events
+
 if TYPE_CHECKING:                      # no runtime import: engine.py imports us
     from repro.serving.engine import Request
 
 PyTree = Any
+
+
+def _record_migration(record: "MigrationRecord") -> None:
+    """Flight-recorder hook: one ``migration.pause`` event + a span whose
+    duration is EXACTLY ``record.pause_s`` (the span is synthesized from
+    the measured pause, so trace totals match `MigrationRecord` sums to
+    the millisecond by construction)."""
+    rec = obs_events.RECORDER
+    if rec is None:
+        return
+    end = obs_events.now()
+    rec.emit("migration.pause", engine=record.src, rid=record.rid,
+             pause_s=record.pause_s, dst=record.dst, phase=record.phase,
+             bytes_moved=record.bytes_moved, batch=record.batch)
+    rec.span_at("migration.pause", end - record.pause_s, record.pause_s,
+                track=record.src or "migration", cat="migration",
+                rid=record.rid, dst=record.dst)
 
 
 class MigrationError(RuntimeError):
@@ -298,9 +317,11 @@ def migrate_one(src_engine, dst_engine, rid: int, *,
     except MigrationError:
         src_engine.import_slot(snap)   # the source always fits its own state
         raise
-    return MigrationRecord(rid=rid, src=src, dst=dst, phase=snap.phase,
-                           pause_s=time.perf_counter() - t0,
-                           bytes_moved=moved)
+    record = MigrationRecord(rid=rid, src=src, dst=dst, phase=snap.phase,
+                             pause_s=time.perf_counter() - t0,
+                             bytes_moved=moved)
+    _record_migration(record)
+    return record
 
 
 def migrate_many(src_engine, dst_engine, rids: Sequence[int], *,
@@ -420,10 +441,12 @@ def migrate_many(src_engine, dst_engine, rids: Sequence[int], *,
                 src_engine.import_slot(s)
             raise
         decode_share = t_share if snap.phase == "decoding" else 0.0
-        records.append(MigrationRecord(
+        record = MigrationRecord(
             rid=snap.rid, src=src, dst=dst, phase=snap.phase,
             pause_s=t_export[snap.rid] + decode_share
             + (time.perf_counter() - t0),
             bytes_moved=moved,
-            batch=len(decoding) if snap.phase == "decoding" else 1))
+            batch=len(decoding) if snap.phase == "decoding" else 1)
+        _record_migration(record)
+        records.append(record)
     return records

@@ -40,6 +40,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, Optional
 
+from repro.obs import events as obs_events
+
 # ticket states
 PREPARING = "preparing"   # compile in flight on the worker
 READY = "ready"           # executables finished; awaiting a step boundary
@@ -90,6 +92,15 @@ class PrepareTicket:
         self.superseded_by: Optional["PrepareTicket"] = None
         # the not-yet-registered ServingEngine a spawn ticket carries
         self._engine_obj = engine_obj
+        self._emit_state(PREPARING)
+
+    def _emit_state(self, state: str, **data: Any) -> None:
+        """Flight-recorder hook: one ``ticket.<state>`` event per
+        state-machine transition (no-op when recording is off)."""
+        rec = obs_events.RECORDER
+        if rec is not None:
+            rec.emit(f"ticket.{state}", engine=self.engine,
+                     ticket_kind=self.kind, **data)
 
     def __repr__(self) -> str:
         return (f"PrepareTicket({self.kind} {self.engine!r} "
@@ -163,7 +174,8 @@ class PrepareTicket:
             self._payload = None           # executables discarded, provably
             self.superseded_by = superseded_by
             self._cond.notify_all()
-            return True
+        self._emit_state(CANCELLED, superseded=superseded_by is not None)
+        return True
 
     # -- worker/cluster internals ---------------------------------------
     def _set_ready(self, payload: Dict[str, Any], prepare_s: float) -> None:
@@ -174,6 +186,7 @@ class PrepareTicket:
             self._payload = payload
             self._state = READY
             self._cond.notify_all()
+        self._emit_state(READY, prepare_s=prepare_s)
 
     def _fail(self, error: BaseException) -> None:
         with self._cond:
@@ -183,6 +196,7 @@ class PrepareTicket:
             self._state = FAILED
             self._payload = None
             self._cond.notify_all()
+        self._emit_state(FAILED, error=repr(error))
 
     def _take_for_commit(self) -> Optional[Dict[str, Any]]:
         """Atomically claim a READY ticket for committing (cancel() can
@@ -199,6 +213,8 @@ class PrepareTicket:
             self._state = SWAPPED
             self._payload = None
             self._cond.notify_all()
+        self._emit_state(SWAPPED,
+                         downtime_s=getattr(report, "downtime_s", 0.0))
 
     def _commit_failed(self, error: BaseException) -> None:
         with self._cond:
@@ -207,6 +223,7 @@ class PrepareTicket:
             self._payload = None
             self._committing = False
             self._cond.notify_all()
+        self._emit_state(FAILED, error=repr(error))
 
     def _abandon(self) -> None:
         """The commit found the ticket's target gone (engine retired
@@ -216,6 +233,7 @@ class PrepareTicket:
             self._payload = None
             self._committing = False
             self._cond.notify_all()
+        self._emit_state(CANCELLED, abandoned=True)
 
 
 class PrepareWorker:

@@ -406,3 +406,181 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
         reports=len(history),
         reports_finalized=all(
             set(METRIC_KEYS) <= set(r.metrics_after) for r in history))
+
+
+def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
+                    step_time_s: float = 4e-3, seed: int = 11,
+                    recorder=None, timings: Optional[Dict[str, float]] = None):
+    """Build a compact full stack (planner + autoscaler + cluster on a
+    `FakeClock`), replay a generated trace with the flight recorder ON,
+    and return ``(stats, recorder, planner)``.
+
+    This is the one-call recorded-run recipe behind ``python -m
+    repro.traffic.replay --trace-out run.trace.json`` and the
+    observability tests: everything is simulated-time deterministic, so
+    two calls with the same arguments (and fresh recorders) produce
+    identical event streams.
+
+    Args:
+        n_requests: approximate trace size (base_rate * duration).
+        arch: reduced-config architecture name.
+        step_time_s: simulated duration of one decode step.
+        seed: trace-generation seed.
+        recorder: a `repro.obs.Recorder` to record into (a fresh one is
+            created when None). Pass ``False`` to run with recording
+            DISABLED — the overhead benchmark's baseline; the returned
+            recorder is then None.
+        timings: optional dict; when given, ``timings["replay_wall_s"]``
+            is set to the REAL wall-clock seconds of the replay loop
+            alone (model build + AOT compile excluded) — the overhead
+            benchmark compares recorded vs unrecorded on this number so
+            compile-time noise cannot masquerade as recorder cost.
+    """
+    import contextlib
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.obs import Recorder, recording
+    from repro.planner import (
+        EngineSpec,
+        ResidualCalibration,
+        WorkloadPlanner,
+        calibrate_host_profile,
+    )
+    from repro.serving import (
+        Autoscaler,
+        FakeClock,
+        LoadTracker,
+        ServingEngine,
+        install_clock,
+    )
+    from repro.sharding.plan import default_plan
+    from repro.traffic.generator import (
+        FlashCrowd,
+        LabelProfile,
+        TrafficPattern,
+        generate_trace,
+    )
+
+    cfg = _dc.replace(get_reduced_config(arch), param_dtype="float32",
+                      activ_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    host = calibrate_host_profile()
+    spec = EngineSpec(plan=default_plan(), n_slots=8, s_max=32)
+
+    def engine_factory(sp, label):
+        return ServingEngine(model, params, n_slots=sp.n_slots,
+                             s_max=sp.s_max)
+
+    duration_s = 24.0
+    base_rate = n_requests / duration_s
+    pattern = TrafficPattern(
+        duration_s=duration_s, base_rate=base_rate,
+        labels={"phi": LabelProfile(weight=2.0),
+                "gen": LabelProfile(weight=1.0)},
+        diurnal_period_s=duration_s / 2,
+        flash_crowds=(FlashCrowd(t_start=duration_s / 3,
+                                 duration_s=duration_s / 6,
+                                 multiplier=3.0, label="phi"),),
+        seed=seed)
+
+    if recorder is False:
+        rec = None
+    else:
+        rec = recorder if recorder is not None else Recorder()
+    clock = FakeClock(tick=1e-6)
+    restore = install_clock(clock)
+    try:
+        with (recording(rec) if rec is not None
+              else contextlib.nullcontext()):
+            cluster = ServingCluster()
+            calibration = ResidualCalibration(alpha=0.3)
+            planner = WorkloadPlanner(cluster, engine_factory,
+                                      specs=[spec], profiles=[host],
+                                      dwell=0, calibration=calibration,
+                                      clock=clock)
+            for label in ("phi", "gen"):
+                planner.bounds[label] = (1, 4)
+                planner.set_slo_target(label, 50 * step_time_s,
+                                       2 * step_time_s)
+            scaler = Autoscaler(cluster,
+                                lambda label: engine_factory(spec, label),
+                                planner=planner,
+                                tracker=LoadTracker(alpha=0.5),
+                                async_spawn=False, clock=clock)
+            planner.execute(planner.plan({}), async_spawn=False)  # floors
+            planner.attach_calibrated_profiles()
+            trace = generate_trace(pattern)
+            # real wall clock on purpose: this module is not registered
+            # for clock injection, so `wall` is untouched by install_clock
+            import time as wall
+            t_loop = wall.perf_counter()
+            stats = replay_trace(trace, cluster, scaler, clock,
+                                 vocab_size=cfg.vocab_size,
+                                 step_time_s=step_time_s, tick_s=1.0,
+                                 window_ticks=4, seed=1)
+            if timings is not None:
+                timings["replay_wall_s"] = wall.perf_counter() - t_loop
+    finally:
+        restore()
+    return stats, rec, planner
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """CLI: replay a generated trace with the flight recorder on.
+
+        PYTHONPATH=src python -m repro.traffic.replay \\
+            --requests 2000 --trace-out run.trace.json
+
+    ``--trace-out`` dumps a Chrome ``trace_event`` JSON of the whole
+    simulated run — open it in Perfetto (https://ui.perfetto.dev) or
+    chrome://tracing. ``--slo-out`` dumps the `repro.obs.SLOLedger`
+    accounting (windowed per-label attainment + pause attribution).
+    """
+    import argparse
+    import json
+
+    parser = argparse.ArgumentParser(
+        description="recorded serving replay on a simulated clock")
+    parser.add_argument("--requests", type=int, default=2000,
+                        help="approximate trace size (default 2000)")
+    parser.add_argument("--step-time-s", type=float, default=4e-3,
+                        help="simulated decode-step duration")
+    parser.add_argument("--arch", default="minitron_4b")
+    parser.add_argument("--seed", type=int, default=11)
+    parser.add_argument("--trace-out", default="",
+                        help="write a Perfetto-loadable Chrome "
+                             "trace_event JSON here")
+    parser.add_argument("--slo-out", default="",
+                        help="write the SLO/downtime ledger JSON here")
+    args = parser.parse_args(argv)
+
+    stats, rec, planner = recorded_replay(
+        args.requests, arch=args.arch, step_time_s=args.step_time_s,
+        seed=args.seed)
+    print(f"replayed {stats.submitted} requests "
+          f"({stats.completed} completed, {stats.dropped} dropped) over "
+          f"{stats.duration_s:.1f} simulated seconds in {stats.steps} steps")
+    print(f"recorded {rec.bus.emitted} events "
+          f"({rec.bus.dropped} dropped), {rec.trace.added} spans")
+    if args.trace_out:
+        doc = rec.export_chrome(args.trace_out)
+        print(f"wrote {args.trace_out}: "
+              f"{sum(1 for e in doc['traceEvents'] if e['ph'] == 'X')} "
+              "trace events (open in Perfetto / chrome://tracing)")
+    if args.slo_out:
+        from repro.obs import SLOLedger
+        ledger = SLOLedger.from_policy(planner).consume(rec.events())
+        with open(args.slo_out, "w") as f:
+            json.dump(ledger.as_dict(), f, indent=1)
+        print(f"wrote {args.slo_out}: attainment "
+              f"{ledger.attainment_overall()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -324,12 +324,23 @@ N_THREADS = 4
 PER_THREAD = 10
 
 
-def test_stress_concurrent_submit_reconfigure_spawn(fp32_model):
+@pytest.fixture
+def flight_recorder():
+    """Record the test body; always uninstalls, even on failure."""
+    from repro.obs import Recorder, recording
+    with recording(Recorder()) as rec:
+        yield rec
+
+
+def test_stress_concurrent_submit_reconfigure_spawn(fp32_model,
+                                                    flight_recorder):
     """N submitter threads race against reconfigure_async (twice — the
     second supersedes the first), spawn_engine_async, and the serving
     loop. Invariants: no request is ever routed to an engine inside its
     blocking swap window, nothing is dropped or rejected, every ticket
-    terminates, and every DowntimeReport finalizes."""
+    terminates, and every DowntimeReport finalizes — and the recorded
+    trace PROVES the routing invariant: no route span interleaves any
+    commit window."""
     cfg, model, params = fp32_model
     cluster = ServingCluster()
     cluster.register("e0", make_engine(model, params, n_slots=2))
@@ -395,3 +406,21 @@ def test_stress_concurrent_submit_reconfigure_spawn(fp32_model):
         assert set(report.metrics_before) == set(METRIC_KEYS)
         assert set(report.metrics_after) == set(METRIC_KEYS)
         assert report.downtime_s < report.prepare_s or report.prepare_s == 0.0
+    # 5. the trace proves invariant (2) span-by-span: routing and swap
+    #    commits serialize on the cluster lock, so no route span may
+    #    strictly overlap ANY commit span (swap or spawn) — not merely
+    #    "no route chose a mid-swap engine", but "no routing decision
+    #    was even being made while a commit window was open"
+    from repro.obs import overlaps
+    commits = [s for s in flight_recorder.trace.spans()
+               if s.name in ("swap.commit", "spawn.commit")]
+    routes = flight_recorder.trace.spans("route")
+    assert len([s for s in commits if s.name == "swap.commit"]) >= 1
+    assert len([s for s in commits if s.name == "spawn.commit"]) >= 1
+    assert len(routes) >= N_THREADS * PER_THREAD
+    clashes = [(r, c) for c in commits for r in routes if overlaps(r, c)]
+    assert clashes == []
+    # the ticket lifecycle landed on the bus, terminal states included
+    states = {e.kind for e in flight_recorder.events("ticket")}
+    assert {"ticket.preparing", "ticket.ready", "ticket.swapped",
+            "ticket.cancelled"} <= states

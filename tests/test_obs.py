@@ -1,0 +1,348 @@
+"""Flight-recorder tests: ring retention, sketch accuracy, simulated-
+clock determinism, and the recorded-replay acceptance cross-checks —
+trace spans vs `MigrationRecord` pause totals (ms-exact), `SLOLedger`
+attainment vs `ReplayStats.attainment` from the very same run, and the
+incremental `metrics_by_label` vs a from-scratch full scan.
+
+The recorded-replay fixtures are module-scoped: one full-stack replay
+(`repro.traffic.replay.recorded_replay`) feeds every cross-check; the
+determinism test pays for the second run itself.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+from conftest import make_engine, make_request
+
+from repro.obs import (
+    EventBus,
+    Histogram,
+    Recorder,
+    SLOLedger,
+    Span,
+    TraceBuffer,
+    meets_slo,
+    overlaps,
+    recording,
+    validate_chrome,
+)
+from repro.obs import events as obs_events
+from repro.serving import ServingCluster
+from repro.serving.engine import METRIC_KEYS, compute_metrics
+
+#: fixture replay size — big enough to trigger autoscaler migrations,
+#: small enough that the module stays a minor slice of the suite
+N_REQ = int(os.environ.get("OBS_TEST_REQUESTS", "400"))
+
+
+# ---------------------------------------------------------------------------
+# rings: bounded, counted, oldest-out
+# ---------------------------------------------------------------------------
+
+
+def test_event_bus_overflow_drops_oldest_and_counts():
+    bus = EventBus(capacity=8)
+    for i in range(20):
+        bus.emit("unit.tick", rid=i, ts=float(i))
+    assert len(bus) == 8
+    assert bus.emitted == 20
+    assert bus.dropped == 12                      # observable, not silent
+    kept = bus.events()
+    assert [e.rid for e in kept] == list(range(12, 20))   # oldest gone
+    assert [e.seq for e in kept] == list(range(12, 20))   # seq == emit order
+    assert all(a.ts <= b.ts for a, b in zip(kept, kept[1:]))
+
+
+def test_event_bus_kind_prefix_filter():
+    bus = EventBus()
+    bus.emit("request.submit")
+    bus.emit("request.complete")
+    bus.emit("requestor")                         # prefix, not substring
+    bus.emit("cluster.swap")
+    assert len(bus.events("request")) == 2
+    assert len(bus.events("request.submit")) == 1
+    assert len(bus.events("cluster")) == 1
+
+
+def test_trace_buffer_overflow_drops_oldest_and_counts():
+    buf = TraceBuffer(capacity=4)
+    for i in range(10):
+        buf.add(Span("s", float(i), 0.5))
+    spans = buf.spans()
+    assert len(spans) == 4
+    assert buf.added == 10 and buf.dropped == 6
+    assert [s.ts for s in spans] == [6.0, 7.0, 8.0, 9.0]
+
+
+def test_rings_reject_nonpositive_capacity():
+    with pytest.raises(ValueError):
+        EventBus(capacity=0)
+    with pytest.raises(ValueError):
+        TraceBuffer(capacity=-1)
+
+
+# ---------------------------------------------------------------------------
+# histogram sketch: bounded error vs exact percentiles
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantiles_within_sketch_error():
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(mean=-4.0, sigma=1.0, size=20_000)   # latency-shaped
+    h = Histogram(growth=1.1)
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.percentile(xs, 100 * q))
+        # log-bucketed, growth 1.1: any in-bucket point is within half a
+        # bucket of the geometric midpoint -> ~5% relative error
+        assert abs(h.quantile(q) - exact) / exact < 0.06, q
+    # the mean is an exact running sum, not sketched
+    assert h.mean == pytest.approx(float(np.mean(xs)), rel=1e-9)
+
+
+def test_histogram_edge_values():
+    h = Histogram()
+    h.observe(0.0)                 # underflow bucket
+    h.observe(5.0)
+    assert h.quantile(0.0) == 0.0
+    assert h.quantile(1.0) == pytest.approx(5.0, rel=0.06)
+    h.observe(float("nan"))        # counted; quantiles propagate NaN
+    snap = h.snapshot()
+    assert snap["count"] == 3
+    assert math.isnan(h.quantile(0.5))   # np.percentile semantics
+
+
+# ---------------------------------------------------------------------------
+# recorder plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_recording_disabled_by_default_and_restores():
+    assert obs_events.RECORDER is None
+    with recording(Recorder()) as rec:
+        assert obs_events.RECORDER is rec
+        with recording() as inner:               # nests + auto-creates
+            assert obs_events.RECORDER is inner
+        assert obs_events.RECORDER is rec
+    assert obs_events.RECORDER is None
+
+
+def test_request_complete_events_fold_into_metrics():
+    rec = Recorder()
+    rec.emit("request.complete", rid=1, label="phi", ttft_s=0.1, tpot_s=0.01)
+    rec.emit("request.complete", rid=2, label="phi", ttft_s=0.3, tpot_s=0.02)
+    rec.emit("request.reject", rid=3, label="gen")
+    snap = rec.snapshot()["metrics"]
+    assert snap["counters"]["requests_completed{label=phi}"] == 2
+    assert snap["counters"]["requests_rejected{label=gen}"] == 1
+    assert snap["histograms"]["ttft_s{label=phi}"]["count"] == 2
+
+
+# ---------------------------------------------------------------------------
+# the recorded full-stack replay: one run, many cross-checks
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def recorded_run():
+    from repro.traffic.replay import recorded_replay
+    return recorded_replay(N_REQ, seed=7)
+
+
+def test_replay_records_the_request_lifecycle(recorded_run):
+    stats, rec, _ = recorded_run
+    assert rec.bus.dropped == 0 and rec.trace.dropped == 0
+    assert len(rec.events("request.submit")) == stats.submitted
+    assert len(rec.events("request.complete")) == stats.completed
+    assert stats.completed > 0
+    assert len(rec.events("planner.decision")) > 0
+    assert len(rec.trace.spans("route")) == stats.submitted
+
+
+def test_no_wall_clock_on_the_event_stream(recorded_run):
+    """Every timestamp sits in the FakeClock's epoch (starts at 1000 s),
+    nowhere near the wall clock's ~1.7e9 — recording reads the installed
+    clock, never `time.time` off the real module."""
+    stats, rec, _ = recorded_run
+    ts = [e.ts for e in rec.events()] + [s.ts for s in rec.trace.spans()]
+    assert ts
+    assert all(1_000.0 <= t < 1e6 for t in ts)
+
+
+def test_fake_clock_replays_are_bit_identical(recorded_run):
+    """Same trace seed + fresh recorder -> the identical event stream
+    and span list: the flight recorder is deterministic evidence, not a
+    heisen-log."""
+    from repro.traffic.replay import recorded_replay
+
+    stats_a, rec_a, _ = recorded_run
+    stats_b, rec_b, _ = recorded_replay(N_REQ, seed=7)
+
+    assert stats_b.completed == stats_a.completed
+    assert stats_b.duration_s == stats_a.duration_s
+
+    def freeze_events(rec):
+        return [(e.seq, e.ts, e.kind, e.engine, e.rid, e.label,
+                 json.dumps(e.data, sort_keys=True, default=repr))
+                for e in rec.events()]
+
+    def freeze_spans(rec):
+        return [(s.name, s.ts, s.dur, s.track, s.cat,
+                 json.dumps(s.args, sort_keys=True, default=repr))
+                for s in rec.trace.spans()]
+
+    assert freeze_events(rec_b) == freeze_events(rec_a)
+    assert freeze_spans(rec_b) == freeze_spans(rec_a)
+    # identical spans -> byte-identical Perfetto export
+    assert json.dumps(rec_b.export_chrome(), sort_keys=True) \
+        == json.dumps(rec_a.export_chrome(), sort_keys=True)
+
+
+def test_replay_migration_pauses_consistent(recorded_run):
+    """Whatever migrations the replay's planner chose to run, the trace
+    and the event stream must agree with the `MigrationRecord`s retained
+    on the cluster's DowntimeReports — ms-exact."""
+    _, rec, planner = recorded_run
+    records = [m for rep in planner.cluster.history for m in rep.migrations]
+    spans = rec.trace.spans("migration.pause")
+    span_pauses = sorted((s.args.get("rid", -1), s.dur) for s in spans)
+    rec_pauses = sorted((m.rid, m.pause_s) for m in records)
+    assert span_pauses == rec_pauses            # per-request, bit-exact
+    ev_total = sum(e.data["pause_s"] for e in rec.events("migration.pause"))
+    assert abs(ev_total - sum(m.pause_s for m in records)) * 1e3 < 1e-6
+
+
+def test_migration_pause_spans_match_records_ms_exact(fp32_model):
+    """Acceptance check: migration-pause spans reproduce the per-request
+    `MigrationRecord` pause totals exactly — the exported trace is the
+    downtime ledger, not an approximation of it. Driven directly so the
+    migrations are guaranteed, on both the `migrate_requests` and the
+    `retire_engine(mode="migrate")` paths."""
+    cfg, model, params = fp32_model
+    with recording(Recorder()) as rec:
+        cluster = ServingCluster()
+        cluster.register("e0", make_engine(model, params, n_slots=4))
+        rng = np.random.default_rng(5)
+        for rid in range(4):
+            cluster.submit(make_request(rng, cfg, rid, new=8))
+        for _ in range(3):              # decode a little: KV state exists
+            cluster.step()
+        cluster.register("e1", make_engine(model, params, n_slots=4))
+        moved = cluster.migrate_requests("e0", "e1", rids=[0, 1])
+        report = cluster.retire_engine("e1", mode="migrate")   # back to e0
+        records = list(moved) + list(report.migrations)
+        cluster.run()
+    assert len(records) >= 4, records
+
+    spans = rec.trace.spans("migration.pause")
+    span_pauses = sorted((s.args.get("rid", -1), s.dur) for s in spans)
+    rec_pauses = sorted((m.rid, m.pause_s) for m in records)
+    assert span_pauses == rec_pauses            # per-request, bit-exact
+    assert abs(sum(s.dur for s in spans)
+               - sum(m.pause_s for m in records)) * 1e3 < 1e-6   # ms-exact
+    # spans carry the destination so the trace answers "what happened
+    # to request R" without joining against the bus
+    assert all(s.args.get("dst") for s in spans)
+
+
+def test_slo_ledger_matches_replay_attainment(recorded_run):
+    """The ledger scores `request.complete` events with the replay
+    harness's own predicate, so per-label attainment from the event
+    stream must match `ReplayStats.attainment` from the same run."""
+    stats, rec, planner = recorded_run
+    ledger = SLOLedger.from_policy(planner).consume(rec.events())
+
+    assert set(ledger.attainment()) == set(stats.attainment)
+    for label, expected in stats.attainment.items():
+        assert ledger.attainment()[label] == pytest.approx(expected,
+                                                           abs=1e-12)
+    assert ledger.attainment_overall() == pytest.approx(
+        stats.attainment_overall, abs=1e-12)
+    assert sum(ledger.completed().values()) == stats.completed
+
+    # windowed series folds back to the aggregate, per label
+    for label in ledger.attainment():
+        wins = ledger.windows(label)
+        assert wins
+        ok = sum(w.ok for w in wins)
+        scored = sum(w.scored for w in wins)
+        assert ok / scored == pytest.approx(ledger.attainment()[label],
+                                            abs=1e-12)
+    # every pause cause observed in the run is attributed
+    pauses = ledger.pause_accounting()
+    assert set(pauses) == set(SLOLedger.CAUSES)
+    assert pauses["migration"]["count"] == len(
+        rec.events("migration.pause"))
+
+
+def test_chrome_export_is_perfetto_loadable(recorded_run):
+    _, rec, _ = recorded_run
+    doc = json.loads(json.dumps(rec.export_chrome()))    # JSON round-trip
+    n = validate_chrome(doc)
+    assert n == rec.trace.added - rec.trace.dropped
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert "route" in names
+    assert names <= {"route", "swap.commit", "spawn.commit",
+                     "migration.pause"}
+
+
+def test_meets_slo_predicate_matches_harness_semantics():
+    assert meets_slo(0.1, 0.01, (0.2, 0.02))
+    assert not meets_slo(0.3, 0.01, (0.2, 0.02))         # ttft over
+    assert not meets_slo(0.1, 0.03, (0.2, 0.02))         # tpot over
+    assert not meets_slo(math.inf, 0.01, (0.2, None))    # ttft must finish
+    assert meets_slo(0.1, math.nan, (0.2, 0.02))         # 1-token request
+    assert meets_slo(math.inf, math.inf, (None, None))   # unscored
+
+
+# ---------------------------------------------------------------------------
+# incremental metrics_by_label vs the full scan it replaced
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_by_label_matches_full_scan(fp32_model):
+    """`ServingCluster.metrics_by_label` now folds completions into
+    per-label `RequestAggregate`s incrementally; this cross-checks it
+    against the original recompute-from-every-Request scan."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+    cluster.register("e0", make_engine(model, params, n_slots=2),
+                     labels={"data-type": "phi"})
+    cluster.register("e1", make_engine(model, params, n_slots=2))
+
+    rng = np.random.default_rng(17)
+    for rid in range(12):
+        label = "phi" if rid % 3 else "gen"
+        cluster.submit(make_request(rng, cfg, rid, label, new=3))
+    cluster.run()
+
+    def full_scan():
+        per_label = {}
+        for name in cluster.engines():
+            for r in cluster.engine(name).done:
+                v = r.labels.get(ServingCluster.ROUTE_KEY, "*")
+                per_label.setdefault(v, []).append(r)
+        return {v: compute_metrics(rs) for v, rs in per_label.items()}
+
+    got = cluster.metrics_by_label()
+    expected = full_scan()
+    assert set(expected) <= set(got)       # + known-but-idle labels
+    for v, exp in expected.items():
+        assert set(got[v]) == set(METRIC_KEYS)
+        assert got[v]["completed"] == exp["completed"]
+        for key in ("ttft_mean_s", "tpot_mean_s"):
+            assert got[v][key] == pytest.approx(exp[key], rel=1e-9), (v, key)
+        for key in ("ttft_p99_s", "tpot_p99_s"):       # sketched: ~5% error
+            assert got[v][key] == pytest.approx(exp[key], rel=0.12), (v, key)
+
+    # drain resets the folds: later views only see later completions
+    drained = cluster.drain_completed()
+    assert len(drained) == 12
+    after = cluster.metrics_by_label()
+    assert all(m["completed"] == 0 for m in after.values())
+    cluster.submit(make_request(rng, cfg, 100, "gen", new=2))
+    cluster.run()
+    assert cluster.metrics_by_label()["gen"]["completed"] == 1
