@@ -2,7 +2,7 @@ PY ?= python
 
 .PHONY: test test-stress ci example lint bench-reconfig bench-elastic \
         bench-migration bench-overlap bench-planner bench-paged \
-        bench-scale bench-obs bench-json docs
+        bench-scale bench-obs bench-disagg bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,8 +48,11 @@ bench-scale:
 bench-obs:
 	PYTHONPATH=src:. $(PY) benchmarks/obs_overhead.py
 
+bench-disagg:
+	PYTHONPATH=src:. $(PY) benchmarks/disagg_serving.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs disagg
 
 docs:
 	$(PY) scripts/run_doc_examples.py

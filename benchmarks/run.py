@@ -31,6 +31,11 @@ artifact (see DESIGN.md §7 for the index):
                         autoscaler + migration + paged-KV stack, with
                         online estimator calibration (EWMA residual
                         correction) beating the analytical roofline
+  disagg_*            — prefill/decode disaggregated serving: the search
+                        picks a split (L40S prefill tier + A100 decode
+                        tier) over every unified config on a long-
+                        prompt mix, and first-token handoffs keep
+                        streams bitwise identical under a <50 ms pause
 
 Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_reconfig.json`` (reconfigure + migration),
@@ -39,11 +44,12 @@ Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract),
 ``benchmarks/BENCH_paged.json`` (paged-pool saturation contract),
 ``benchmarks/BENCH_scale.json`` (scale-replay + calibration contract),
-and ``benchmarks/BENCH_obs.json`` (flight-recorder overhead contract) —
+``benchmarks/BENCH_obs.json`` (flight-recorder overhead contract), and
+``benchmarks/BENCH_disagg.json`` (disaggregated-serving contract) —
 each mirrored to the repo root — so the perf trajectory is tracked
 across PRs. CI produces them via
 
-    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs
+    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs disagg
 
 (``--only`` substring-matches bench function names; no flag runs all.)
 """
@@ -88,6 +94,7 @@ ARTIFACT_FILES = {
     "paged": ("paged",),
     "scale": ("scale",),
     "obs": ("obs",),
+    "disagg": ("disagg",),
 }
 
 
@@ -310,6 +317,21 @@ def bench_obs_overhead() -> None:
     ARTIFACTS["obs"] = bench(emit=emit)
 
 
+def bench_disagg_serving() -> None:
+    """Prefill/decode disaggregated serving: the role-aware search picks
+    a disaggregated config (cheap prefill tier + A100 decode tier) that
+    meets the joint TTFT/TPOT targets where every unified config —
+    priced with the interference disaggregation removes — violates
+    them; execution hands requests off at the first-token boundary with
+    bitwise-identical streams and sub-budget pauses; the replay harness
+    drives the handoff path at trace scale with zero drops."""
+    try:
+        from benchmarks.disagg_serving import bench_disagg_serving as bench
+    except ImportError:
+        from disagg_serving import bench_disagg_serving as bench
+    ARTIFACTS["disagg"] = bench(emit=emit)
+
+
 def bench_roofline_table() -> None:
     """Summarize the dry-run records (single-pod mesh) — §Roofline."""
     d = Path("experiments/dryrun")
@@ -364,6 +386,7 @@ BENCHES = [
     bench_paged_batching,
     bench_scale_serving,
     bench_obs_overhead,
+    bench_disagg_serving,
     bench_kernel_latency,
     bench_roofline_table,
 ]

@@ -15,7 +15,13 @@ This script scans ``src/repro/serving`` and ``src/repro/obs`` for:
     ``CLOCKED_MODULE_NAMES`` (clock.py itself is exempt — it OWNS the
     real clock, aliased as ``_time``);
   * ``datetime.now`` / ``datetime.utcnow`` / ``time.time()`` style calls
-    anywhere in those trees outside clock.py.
+    anywhere in those trees outside clock.py;
+  * the migration/handoff hot path specifically: every module whose
+    source participates in the first-token handoff or the batched
+    migration pause (it mentions ``handoff`` or ``pause_s``) MUST be
+    registered, whether or not it imports ``time`` today — a pause
+    stamped off the wall clock would corrupt every simulated replay's
+    downtime/SLO ledger.
 
 Exit status 1 (CI fails) on any violation. Wired into scripts/ci.sh and
 ``make lint``.
@@ -35,6 +41,9 @@ IMPORT_RE = re.compile(r"^\s*(import\s+time\b|from\s+time\s+import\b)",
                        re.MULTILINE)
 DATETIME_RE = re.compile(
     r"\bdatetime\.(?:now|utcnow|today)\s*\(|\bdatetime\.datetime\b")
+# modules on the migration/handoff pause-stamping hot path: anything
+# mentioning the first-token handoff or a migration pause stamp
+HANDOFF_RE = re.compile(r"\bhandoff\b|\bpause_s\b")
 
 
 def clocked_modules() -> set:
@@ -70,6 +79,17 @@ def main() -> int:
                         "repro.serving.clock.CLOCKED_MODULE_NAMES — "
                         "install_clock would never swap it, so simulated "
                         "replays would silently read the wall clock")
+            # serving modules on the migration/handoff pause path must be
+            # registered even before they grow a 'time' import: their
+            # pause stamps feed the SLO ledger's downtime accounting
+            if d == "repro/serving" and HANDOFF_RE.search(text):
+                mod = module_name(path)
+                if mod not in registered:
+                    violations.append(
+                        f"{rel}: participates in the migration/handoff "
+                        f"pause path but {mod!r} is not in "
+                        "CLOCKED_MODULE_NAMES — its pause stamps would "
+                        "read the wall clock in simulated replays")
     if violations:
         print("clock-discipline violations:")
         for v in violations:

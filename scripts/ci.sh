@@ -17,6 +17,6 @@ echo "== docs: execute the embedded examples (they must not rot) =="
 python scripts/run_doc_examples.py
 
 echo "== serving benchmarks: perf-trajectory artifacts (BENCH_*.json) =="
-PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs
+PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs disagg
 
 echo "CI OK"

@@ -91,8 +91,12 @@ class SLOLedger:
             timestamp.
     """
 
-    #: pause causes the ledger accounts for, in reporting order
-    CAUSES = ("migration", "swap", "spawn", "retire", "queueing")
+    #: pause causes the ledger accounts for, in reporting order; a
+    #: ``migration.pause`` event with ``reason="handoff"`` (the
+    #: disaggregated first-token prefill→decode handoff) is accounted
+    #: under "handoff", every other migration pause under "migration" —
+    #: the two never double count
+    CAUSES = ("migration", "handoff", "swap", "spawn", "retire", "queueing")
 
     def __init__(self, targets: Optional[SLOTargets] = None,
                  window_s: float = 1.0, t0: Optional[float] = None):
@@ -106,6 +110,9 @@ class SLOLedger:
         self._ok: Dict[str, int] = {}
         self._scored: Dict[str, int] = {}
         self._completed: Dict[str, int] = {}
+        # completions by serving role at completion time (disaggregated
+        # serving: handoff requests complete on their decode engine)
+        self._by_role: Dict[str, int] = {}
         self.pauses: Dict[str, PauseAccount] = {
             c: PauseAccount() for c in self.CAUSES}
 
@@ -131,8 +138,10 @@ class SLOLedger:
         if kind == "request.complete":
             self._score(ev)
         elif kind == "migration.pause":
-            self.pauses["migration"].add(float(ev.data.get("pause_s", 0.0)),
-                                         ev.engine)
+            cause = ("handoff" if ev.data.get("reason") == "handoff"
+                     else "migration")
+            self.pauses[cause].add(float(ev.data.get("pause_s", 0.0)),
+                                   ev.engine)
         elif kind == "cluster.swap":
             self.pauses["swap"].add(float(ev.data.get("downtime_s", 0.0)),
                                     ev.engine)
@@ -150,6 +159,8 @@ class SLOLedger:
     def _score(self, ev: Event) -> None:
         label = ev.label or "*"
         self._completed[label] = self._completed.get(label, 0) + 1
+        role = str(ev.data.get("role", "unified") or "unified")
+        self._by_role[role] = self._by_role.get(role, 0) + 1
         targets = self.targets.get(label)
         if targets is None or (targets[0] is None and targets[1] is None):
             return
@@ -179,6 +190,13 @@ class SLOLedger:
     def completed(self) -> Dict[str, int]:
         return dict(self._completed)
 
+    def completed_by_role(self) -> Dict[str, int]:
+        """Completions by the serving role of the completing engine
+        (``"unified"`` unless disaggregated serving is active; a
+        handed-off request counts under ``"decode"`` — where it
+        finished)."""
+        return dict(self._by_role)
+
     def windows(self, label: Optional[str] = None) -> List[WindowAttainment]:
         """The windowed attainment series, time-ordered."""
         out = sorted(self._win.values(), key=lambda w: (w.window, w.label))
@@ -197,6 +215,7 @@ class SLOLedger:
             "attainment": self.attainment(),
             "attainment_overall": self.attainment_overall(),
             "completed": self.completed(),
+            "completed_by_role": self.completed_by_role(),
             "windows": [dataclasses.asdict(w) for w in self.windows()],
             "pauses": self.pause_accounting(),
         }

@@ -30,12 +30,15 @@ from repro.planner.estimator import (  # noqa: F401
     TrafficMix,
     calibrated_estimate,
     estimate,
+    estimate_disagg,
     features_from_engine,
     features_from_hlo,
+    prefill_interference,
 )
 from repro.planner.search import (  # noqa: F401
     Assignment,
     EngineSpec,
+    LabelAssignment,
     LabelDemand,
     ScoredCandidate,
     best_candidate,

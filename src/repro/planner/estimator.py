@@ -217,6 +217,112 @@ def estimate(features: CostFeatures, profile: DeviceProfile,
         breakdown=bd)
 
 
+def prefill_interference(est: CostEstimate, mix: TrafficMix, *,
+                         engines: int = 1) -> CostEstimate:
+    """Inflate a UNIFIED estimate with prefill/decode interference.
+
+    `estimate` prices decode capacity as if prefill were free: on a
+    unified engine every arriving prompt actually steals ``prefill_s``
+    of decode time, stalling the whole decode batch (continuous batching
+    admits at step boundaries). The engine spends a prefill *duty
+    fraction* ``d = rate × prefill_s / engines`` of its time not
+    decoding, so both served latencies stretch by ``1/(1-d)`` —
+    infinitely at ``d >= 1`` (prefill alone saturates the engine).
+
+    Applied by the search ONLY when role-split candidates are in play —
+    comparing unified against disaggregated configurations with the
+    interference the disaggregation removes priced in on one side only
+    would rig the comparison; with no disaggregated candidate the legacy
+    numbers are left untouched (bitwise — this function is not called).
+    """
+    duty = mix.rate * est.prefill_s / max(engines, 1)
+    if duty <= 0.0:
+        return est
+    factor = 1.0 / (1.0 - duty) if duty < 1.0 else math.inf
+    return dataclasses.replace(
+        est, tpot_s=est.tpot_s * factor, ttft_s=est.ttft_s * factor,
+        utilization=max(est.utilization, duty))
+
+
+def estimate_disagg(prefill_features: CostFeatures,
+                    decode_features: CostFeatures,
+                    mix: TrafficMix, *,
+                    prefill_profile: DeviceProfile,
+                    decode_profile: DeviceProfile,
+                    prefill_engines: int = 1,
+                    decode_engines: int = 1,
+                    handoff_s: float = 0.0) -> CostEstimate:
+    """Estimate a DISAGGREGATED configuration: ``prefill_engines``
+    role=prefill engines own TTFT, ``decode_engines`` role=decode
+    engines own TPOT, every request handed off at its first token.
+
+    The split is exactly what the ceilings become independent of each
+    other for: the prefill tier is an M/D/c-style queue on whole-prompt
+    prefills (``rho_p = rate × prefill_s / n_p``; TTFT =
+    ``prefill_s / (1 - rho_p) + handoff_s``, inf at saturation — no
+    decode interference, because the tier never decodes past token one),
+    and the decode tier prices TPOT exactly as `estimate` does
+    (``tpot = step_s``, ``rho_d`` over decode token throughput) with no
+    prefill stalls.
+
+    Args:
+        prefill_features / decode_features: per-role engine features
+            (different specs — e.g. prefill-heavy A100 vs decode L40S —
+            are the point).
+        mix: total traffic over the whole label (both tiers see it all).
+        prefill_profile / decode_profile: the device each tier runs on.
+        prefill_engines / decode_engines: tier sizes (>= 1 each — a
+            disaggregated config without both tiers is not one).
+        handoff_s: per-request first-token handoff pause added to TTFT
+            (the measured <50 ms budget; 0 ignores it).
+
+    Returns:
+        A `CostEstimate` for the joint config: ``ttft_s``/``prefill_s``
+        from the prefill tier, ``tpot_s``/``step_s``/``throughput`` from
+        the decode tier, ``utilization`` the max of the two tier loads,
+        ``fits`` only when BOTH tiers fit their profiles, ``mem_bytes``
+        the larger single-engine footprint, and ``bottleneck``/
+        ``breakdown`` from whichever tier is more loaded.
+    """
+    if prefill_engines < 1 or decode_engines < 1:
+        raise ValueError(
+            f"a disaggregated config needs >= 1 engine per role, got "
+            f"prefill={prefill_engines}, decode={decode_engines}")
+    # ---- prefill tier: whole-prompt service, no decode duty ----
+    pf = roofline_times(
+        prefill_features.flops_per_token * mix.prompt_len,
+        prefill_features.bytes, prefill_features.wire_bytes,
+        prefill_profile)
+    prefill_s = max(pf.values())
+    rho_p = mix.rate * prefill_s / prefill_engines
+    if rho_p < 1.0:
+        ttft_s = prefill_s / (1.0 - rho_p) + handoff_s
+    else:
+        ttft_s = math.inf
+    # ---- decode tier: pure decode, no prefill stalls ----
+    bd = roofline_times(decode_features.flops, decode_features.bytes,
+                        decode_features.wire_bytes, decode_profile)
+    step_s = max(bd.values())
+    conc = decode_features.concurrency(mix.prompt_len, mix.new_tokens)
+    throughput = conc / step_s * decode_engines
+    rho_d = mix.tok_rate / throughput if throughput > 0 else math.inf
+    # ---- joint view ----
+    loaded_pf = rho_p >= rho_d
+    bneck = (_CEILING_NAME[max(pf, key=pf.get)] if loaded_pf
+             else _CEILING_NAME[max(bd, key=bd.get)])
+    fits = (prefill_features.resident_bytes
+            <= prefill_profile.total_mem_bytes
+            and decode_features.resident_bytes
+            <= decode_profile.total_mem_bytes)
+    return CostEstimate(
+        step_s=step_s, tpot_s=step_s, prefill_s=prefill_s, ttft_s=ttft_s,
+        throughput_tok_s=throughput, utilization=max(rho_p, rho_d),
+        mem_bytes=max(prefill_features.resident_bytes,
+                      decode_features.resident_bytes),
+        fits=fits, bottleneck=bneck, breakdown=dict(pf if loaded_pf
+                                                    else bd))
+
+
 # ---------------------------------------------------------------------------
 # online calibration (observed TTFT/TPOT -> EWMA residual correction)
 # ---------------------------------------------------------------------------

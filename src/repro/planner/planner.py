@@ -40,6 +40,7 @@ from repro.planner.estimator import (
     CostFeatures,
     ResidualCalibration,
     estimate,
+    estimate_disagg,
     features_from_engine,
 )
 from repro.planner.search import (
@@ -72,6 +73,9 @@ class PlanAction:
         profile: the device profile the engine is placed on.
         mode: retirement mode (``"drain"`` / ``"migrate"``).
         reason: human-readable justification (telemetry).
+        role: the serving role the action targets (``"unified"`` /
+            ``"prefill"`` / ``"decode"`` — disaggregated configurations
+            spawn and retire per role-tier).
     """
 
     kind: str
@@ -82,6 +86,7 @@ class PlanAction:
     profile: Optional[DeviceProfile] = None
     mode: str = "drain"
     reason: str = ""
+    role: str = "unified"
 
 
 class WorkloadPlanner:
@@ -259,6 +264,32 @@ class WorkloadPlanner:
             est = self.calibration.apply(label, est)
         return est
 
+    def _disagg_estimate_fn(self, label: str, pf_feats: CostFeatures,
+                            de_feats: CostFeatures,
+                            pf_profile: DeviceProfile,
+                            de_profile: DeviceProfile, mix,
+                            n_prefill: int, n_decode: int) -> CostEstimate:
+        """The search's scorer for disaggregated (prefill-tier +
+        decode-tier) candidates — same calibration hook as the unified
+        estimator so both candidate families see corrected costs."""
+        est = estimate_disagg(pf_feats, de_feats, mix,
+                              prefill_profile=pf_profile,
+                              decode_profile=de_profile,
+                              prefill_engines=n_prefill,
+                              decode_engines=n_decode)
+        if self.calibration is not None:
+            est = self.calibration.apply(label, est)
+        return est
+
+    @property
+    def _disagg_specs(self) -> bool:
+        """True when the catalog can express disaggregation (at least
+        one prefill-role AND one decode-role spec) — gates the unified
+        interference pricing in the hysteresis comparison so legacy
+        catalogs score exactly as before."""
+        roles = {s.role for s in self.specs}
+        return "prefill" in roles and "decode" in roles
+
     def predicted_for(self, label: str, demand: LabelDemand, *,
                       calibrated: bool = True) -> Optional[CostEstimate]:
         """The planner's prediction for ``label``'s CURRENTLY deployed
@@ -349,7 +380,8 @@ class WorkloadPlanner:
             return self._engine_spec[name]
         eng = self.cluster.engine(name)
         return EngineSpec(plan=eng.plan, n_slots=eng.n_slots,
-                          s_max=eng.s_max)
+                          s_max=eng.s_max,
+                          role=getattr(eng, "role", "unified"))
 
     def _profile_of(self, name: str) -> DeviceProfile:
         return self._engine_profile.get(name, self.profiles[0])
@@ -377,6 +409,50 @@ class WorkloadPlanner:
             out[label] = (spec, profile, count)
         return out
 
+    def current_role_config(self) -> Dict[str, object]:
+        """The deployed configuration in `score_current`'s role-aware
+        shape: the legacy ``(spec, profile, count)`` triple for a label
+        whose engines are all unified, a role dict
+        ``{role: (spec, profile, count)}`` otherwise — with in-flight
+        spawn tickets counted per role (`pending_spawn_roles`)."""
+        pending = getattr(self.cluster, "pending_spawn_roles",
+                          lambda: {})()
+        out: Dict[str, object] = {}
+        labels = set(pending)
+        for name in self.cluster.engines():
+            lbl = self.cluster.engine(name).labels.get(
+                self.cluster.ROUTE_KEY)
+            if lbl:
+                labels.add(lbl)
+        for label in labels:
+            by_role: Dict[str, List[str]] = {}
+            for name in self._dedicated(label):
+                role = getattr(self.cluster.engine(name), "role",
+                               "unified")
+                by_role.setdefault(role, []).append(name)
+            counts: Dict[str, int] = {
+                r: len(names) for r, names in by_role.items()}
+            for role, n in pending.get(label, {}).items():
+                counts[role] = counts.get(role, 0) + n
+            if set(counts) <= {"unified"}:
+                names = by_role.get("unified", [])
+                spec = self._spec_of(names[0]) if names else self.specs[0]
+                profile = self._profile_of(names[0]) if names \
+                    else self.profiles[0]
+                out[label] = (spec, profile, counts.get("unified", 0))
+                continue
+            roles: Dict[str, Tuple[EngineSpec, DeviceProfile, int]] = {}
+            for role, n in counts.items():
+                names = by_role.get(role, [])
+                spec = self._spec_of(names[0]) if names else next(
+                    (s for s in self.specs if s.role == role),
+                    self.specs[0])
+                profile = self._profile_of(names[0]) if names \
+                    else self.profiles[0]
+                roles[role] = (spec, profile, n)
+            out[label] = roles
+        return out
+
     # ------------------------------------------------------------------
     # planning
     # ------------------------------------------------------------------
@@ -398,7 +474,8 @@ class WorkloadPlanner:
             bounds=merged_bounds, route_required=route_required,
             rho_max=self.rho_max,
             max_engines_per_label=self.max_engines_per_label,
-            estimate_fn=self._estimate_fn)
+            estimate_fn=self._estimate_fn,
+            disagg_estimate_fn=self._disagg_estimate_fn)
 
     def _switch_cost_s(self, n_events: int) -> float:
         """Estimated cost of executing ``n_events`` reconfigurations:
@@ -422,11 +499,13 @@ class WorkloadPlanner:
         merged_bounds = dict(self.bounds)
         merged_bounds.update(bounds or {})
         best = self.propose(demand, merged_bounds)
-        current = self.current_config()
+        current = self.current_role_config()
         cur_score = score_current(
             current, demand, self.slo_targets,
             features_fn=self.features_for, rho_max=self.rho_max,
-            estimate_fn=self._estimate_fn)
+            estimate_fn=self._estimate_fn,
+            disagg_estimate_fn=self._disagg_estimate_fn,
+            interference=self._disagg_specs)
         actions = self._diff(best, current, demand, merged_bounds)
         if not actions:
             self._emit_decision(demand, best, cur_score, [], "no-op")
@@ -488,63 +567,94 @@ class WorkloadPlanner:
                      for a in actions])
 
     def _diff(self, best: ScoredCandidate,
-              current: Mapping[str, Tuple[EngineSpec, DeviceProfile, int]],
+              current: Mapping[str, object],
               demand: Mapping[str, LabelDemand],
               bounds: Optional[Mapping[str, Bounds]] = None
               ) -> List[PlanAction]:
+        """Per-(label, role) diff between the winning candidate and the
+        deployed configuration. ``current`` values are either the legacy
+        unified triple or a role dict (see `current_role_config`); a
+        unified -> disaggregated transition therefore diffs as: spawn
+        the prefill tier, spawn the decode tier, retire the unified
+        engines — with spawns emitted BEFORE retires so new capacity is
+        in flight before old capacity starts draining."""
         bounds = dict(self.bounds if bounds is None else bounds)
-        actions: List[PlanAction] = []
+        spawns: List[PlanAction] = []
+        others: List[PlanAction] = []
         pending = self.cluster.pending_spawn_labels()
         labels = sorted(set(best.config) | set(current))
         for label in labels:
             want = best.config.get(label)
-            cur_spec, cur_prof, cur_n = current.get(
-                label, (None, None, 0))
-            want_n = want.count if want else 0
-            live = self._dedicated(label)
-            # count includes pending spawns; only live engines can be
+            want_roles = want.by_role() if want is not None else {}
+            cur_value = current.get(label)
+            if cur_value is None:
+                cur_roles: Dict[str, Tuple] = {}
+            elif isinstance(cur_value, Mapping):
+                cur_roles = {r: tuple(v) for r, v in cur_value.items()}
+            else:
+                cur_roles = {"unified": tuple(cur_value)}
+            live_by_role: Dict[str, List[str]] = {}
+            live_all = self._dedicated(label)
+            for name in live_all:
+                r = getattr(self.cluster.engine(name), "role", "unified")
+                live_by_role.setdefault(r, []).append(name)
+            cur_total = sum(v[2] for v in cur_roles.values())
+            # counts include pending spawns; only live engines can be
             # retired or reconfigured
-            if want_n > cur_n:
-                lo, _ = bounds.get(label, (0, None))
-                for _ in range(want_n - cur_n):
-                    why = (f"below floor: {cur_n} < min {lo}"
-                           if cur_n < lo else
-                           f"demand {demand.get(label, LabelDemand(0.0)).rate:.2f} req/s "
-                           f"needs {want_n} x {want.profile.name}")
-                    actions.append(PlanAction(
-                        "spawn", label, spec=want.spec,
-                        profile=want.profile, reason=why))
-            elif want_n < cur_n:
-                excess = cur_n - want_n
-                # retire live engines only (pending tickets expire into
-                # capacity the next round re-evaluates)
-                for name in self._retire_order(live)[:excess]:
-                    mode = "migrate" if self._can_migrate(name, live) \
-                        else "drain"
-                    actions.append(PlanAction(
-                        "retire", label, engine=name, mode=mode,
-                        reason=f"demand needs only {want_n} engine(s)"))
-            elif want is not None and live and pending.get(label, 0) == 0:
-                # same count: reconfigure engines whose plan no longer
-                # matches the chosen spec. An engine whose DEPLOYED plan
-                # fails the label's route constraint is unroutable
-                # (fail-closed) — that reconfigure is mandatory, not a
-                # cost optimization.
-                required = self.cluster.required_for(
-                    {self.cluster.ROUTE_KEY: label})
-                for name in live:
-                    deployed = self.cluster.engine(name).plan
-                    if self._spec_of(name).plan == want.spec.plan \
-                            and (required is None
-                                 or plan_satisfies(deployed, required)):
-                        continue
-                    stale = required is not None \
-                        and not plan_satisfies(deployed, required)
-                    actions.append(PlanAction(
-                        "reconfigure", label, engine=name,
-                        spec=want.spec, profile=want.profile,
-                        reason="route constraint no longer satisfied"
-                               if stale else "plan variant changed"))
+            for role in sorted(set(want_roles) | set(cur_roles)):
+                wa = want_roles.get(role)
+                want_n = wa.count if wa is not None else 0
+                cur_n = cur_roles[role][2] if role in cur_roles else 0
+                live = live_by_role.get(role, [])
+                if want_n > cur_n:
+                    lo, _ = bounds.get(label, (0, None))
+                    for _ in range(want_n - cur_n):
+                        why = (f"below floor: {cur_total} < min {lo}"
+                               if cur_total < lo else
+                               f"demand {demand.get(label, LabelDemand(0.0)).rate:.2f} req/s "
+                               f"needs {want_n} x {wa.profile.name}"
+                               + ("" if role == "unified"
+                                  else f" ({role} tier)"))
+                        spawns.append(PlanAction(
+                            "spawn", label, spec=wa.spec,
+                            profile=wa.profile, reason=why, role=role))
+                elif want_n < cur_n:
+                    excess = cur_n - want_n
+                    # retire live engines only (pending tickets expire
+                    # into capacity the next round re-evaluates)
+                    for name in self._retire_order(live)[:excess]:
+                        mode = "migrate" \
+                            if self._can_migrate(name, live_all) \
+                            else "drain"
+                        others.append(PlanAction(
+                            "retire", label, engine=name, mode=mode,
+                            role=role,
+                            reason=f"demand needs only {want_n} "
+                                   f"{role} engine(s)"))
+                elif wa is not None and live \
+                        and pending.get(label, 0) == 0:
+                    # same count: reconfigure engines whose plan no
+                    # longer matches the chosen spec. An engine whose
+                    # DEPLOYED plan fails the label's route constraint
+                    # is unroutable (fail-closed) — that reconfigure is
+                    # mandatory, not a cost optimization.
+                    required = self.cluster.required_for(
+                        {self.cluster.ROUTE_KEY: label})
+                    for name in live:
+                        deployed = self.cluster.engine(name).plan
+                        if self._spec_of(name).plan == wa.spec.plan \
+                                and (required is None
+                                     or plan_satisfies(deployed,
+                                                       required)):
+                            continue
+                        stale = required is not None \
+                            and not plan_satisfies(deployed, required)
+                        others.append(PlanAction(
+                            "reconfigure", label, engine=name,
+                            spec=wa.spec, profile=wa.profile, role=role,
+                            reason="route constraint no longer satisfied"
+                                   if stale else "plan variant changed"))
+        actions = spawns + others
         for label in best.infeasible:
             actions.append(PlanAction(
                 "hold", label,
@@ -606,8 +716,13 @@ class WorkloadPlanner:
                 kw = dict(
                     plan=a.spec.plan,
                     labels={self.cluster.ROUTE_KEY: a.label},
-                    prefill_lengths=self.cluster.label_prompt_lengths(
-                        a.label))
+                    # decode-role engines never prefill a prompt — no
+                    # point AOT-compiling prefill lengths for them
+                    prefill_lengths=(
+                        () if a.spec.role == "decode"
+                        else self.cluster.label_prompt_lengths(a.label)))
+                if a.spec.role != "unified":
+                    kw["role"] = a.spec.role
                 if async_spawn:
                     res = self.cluster.spawn_engine_async(name, engine,
                                                           **kw)
@@ -636,7 +751,8 @@ class WorkloadPlanner:
             rec = obs_events.RECORDER
             if rec is not None:
                 rec.emit("planner.execute", engine=a.engine, label=a.label,
-                         action=a.kind, mode=a.mode, reason=a.reason)
+                         action=a.kind, mode=a.mode, reason=a.reason,
+                         role=a.role)
         if any(a.kind != "hold" for a in actions):
             self._since_exec = 0
             self._last_exec_t = self.clock.time()

@@ -34,6 +34,8 @@ from repro.planner.estimator import (
     CostFeatures,
     TrafficMix,
     estimate,
+    estimate_disagg,
+    prefill_interference,
 )
 from repro.sharding.plan import (
     ShardingPlan,
@@ -49,6 +51,13 @@ Bounds = Tuple[int, Optional[int]]
 EstimateFn = Callable[[str, CostFeatures, DeviceProfile, TrafficMix, int],
                       CostEstimate]
 
+# (label, prefill_features, decode_features, prefill_profile,
+#  decode_profile, mix, prefill_engines, decode_engines) -> CostEstimate,
+# the disaggregated-configuration scorer (see `estimate_disagg`).
+DisaggEstimateFn = Callable[
+    [str, CostFeatures, CostFeatures, DeviceProfile, DeviceProfile,
+     TrafficMix, int, int], CostEstimate]
+
 
 def _analytical(label: str, feats: CostFeatures, profile: DeviceProfile,
                 mix: TrafficMix, engines: int) -> CostEstimate:
@@ -56,15 +65,41 @@ def _analytical(label: str, feats: CostFeatures, profile: DeviceProfile,
     return estimate(feats, profile, mix, engines=engines)
 
 
+def _analytical_disagg(label: str, pf_feats: CostFeatures,
+                       de_feats: CostFeatures, pf_profile: DeviceProfile,
+                       de_profile: DeviceProfile, mix: TrafficMix,
+                       n_prefill: int, n_decode: int) -> CostEstimate:
+    """The default `DisaggEstimateFn`: `estimate_disagg`, label-blind,
+    no handoff surcharge (the measured pause is < 50 ms — negligible
+    against second-scale TTFT targets; a calibrated planner can price
+    it via its own closure)."""
+    return estimate_disagg(pf_feats, de_feats, mix,
+                           prefill_profile=pf_profile,
+                           decode_profile=de_profile,
+                           prefill_engines=n_prefill,
+                           decode_engines=n_decode)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """One engine shape a candidate may instantiate: a plan variant plus
-    the KV-pool sizing. Hashable — the planner caches compiled-HLO cost
-    features per spec."""
+    the KV-pool sizing and its serving role. Hashable — the planner
+    caches compiled-HLO cost features per spec.
+
+    ``role``: ``"unified"`` specs are complete configurations on their
+    own; ``"prefill"``/``"decode"`` specs only ever appear PAIRED in a
+    disaggregated candidate (one tier each) — the search never proposes
+    a bare prefill or decode tier.
+    """
 
     plan: ShardingPlan
     n_slots: int = 4
     s_max: int = 128
+    role: str = "unified"
+
+    def __post_init__(self):
+        if self.role not in ("unified", "prefill", "decode"):
+            raise ValueError(f"unknown spec role {self.role!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,27 +107,80 @@ class LabelDemand:
     """Forecast demand for one label.
 
     Attributes:
-        rate: arrivals per second.
+        rate: arrivals per second (the steady inflow).
         prompt_len: mean prompt length, tokens.
         new_tokens: mean generation length, tokens.
+        queued: backlog — requests already waiting (queued or resident)
+            that the rate forecast cannot see. During a flash crowd the
+            EWMA rate converges to the arrival rate only after the burst;
+            the backlog is what must ALSO drain through the capacity the
+            planner sizes, or it drains at SLO-violating latency.
+        drain_s: the horizon over which the planner wants the backlog
+            gone; the backlog enters the effective rate as
+            ``queued / drain_s`` extra arrivals per second.
     """
 
     rate: float
     prompt_len: float = 64.0
     new_tokens: float = 16.0
+    queued: float = 0.0
+    drain_s: float = 10.0
+
+    @property
+    def effective_rate(self) -> float:
+        """Arrivals/s the capacity must actually absorb: the steady rate
+        plus the backlog amortized over the drain horizon."""
+        return self.rate + self.queued / max(self.drain_s, 1e-9)
 
     def mix(self) -> TrafficMix:
         return TrafficMix(prompt_len=self.prompt_len,
-                          new_tokens=self.new_tokens, rate=self.rate)
+                          new_tokens=self.new_tokens,
+                          rate=self.effective_rate)
 
 
 @dataclasses.dataclass(frozen=True)
 class Assignment:
-    """One label's slice of a candidate configuration."""
+    """One (label, role)-slice of a candidate configuration."""
 
     spec: EngineSpec
     profile: DeviceProfile
     count: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelAssignment:
+    """One label's full slice of a candidate configuration: one
+    `Assignment` for a unified label, one per role (prefill + decode)
+    for a disaggregated one.
+
+    Compatibility surface: ``count`` (total engines), ``spec`` /
+    ``profile`` (the first — only, when unified — assignment's), so
+    every pre-disaggregation consumer of ``config[label].count`` /
+    ``.profile.name`` keeps reading the numbers it always did.
+    """
+
+    assignments: Tuple[Assignment, ...]
+
+    @property
+    def count(self) -> int:
+        return sum(a.count for a in self.assignments)
+
+    @property
+    def spec(self) -> EngineSpec:
+        return self.assignments[0].spec
+
+    @property
+    def profile(self) -> DeviceProfile:
+        return self.assignments[0].profile
+
+    @property
+    def disaggregated(self) -> bool:
+        return any(a.spec.role != "unified" for a in self.assignments)
+
+    def by_role(self) -> Dict[str, Assignment]:
+        """Role -> assignment (``{"unified": a}`` or
+        ``{"prefill": ap, "decode": ad}``)."""
+        return {a.spec.role: a for a in self.assignments}
 
 
 @dataclasses.dataclass
@@ -105,7 +193,7 @@ class ScoredCandidate:
     weight), then ``-headroom`` (prefer spare capacity among equals).
     """
 
-    config: Dict[str, Assignment]
+    config: Dict[str, LabelAssignment]
     violations: float
     cost: float
     headroom: float
@@ -119,7 +207,9 @@ class ScoredCandidate:
 def demand_from_tracker(tracker, cluster, *, tick_s: float = 1.0,
                         new_tokens: float = 16.0,
                         default_prompt_len: float = 64.0,
-                        min_rate: float = 0.0
+                        min_rate: float = 0.0,
+                        min_depth: float = 0.5,
+                        drain_s: float = 10.0
                         ) -> Dict[str, LabelDemand]:
     """Derive the per-label demand forecast from a `LoadTracker`.
 
@@ -131,13 +221,22 @@ def demand_from_tracker(tracker, cluster, *, tick_s: float = 1.0,
     The ``"*"`` unlabeled bucket never owns capacity and is excluded,
     matching the autoscaler's convention.
 
+    The forecast is rate AND backlog: the tracker's queue-depth EWMA
+    (`LoadTracker.depth` — queued + resident requests) feeds
+    ``LabelDemand.queued``, so during a flash crowd the planner sizes
+    for the arrival rate PLUS the backlog draining over ``drain_s``
+    seconds, instead of sizing for the steady rate while the queue
+    drains at whatever latency the old capacity produces.
+
     ``min_rate``: rates at or below this floor (per second) forecast as
     ZERO demand — an EWMA decays geometrically and never quite reaches
     0, so without a floor a burst's tail would hold its last engine
     forever (the planner's analogue of `ElasticPolicy.retire_rate`).
+    ``min_depth`` is the same floor for the backlog EWMA (requests).
     """
     if tick_s <= 0:
         raise ValueError(f"tick_s must be positive, got {tick_s}")
+    depth_fn = getattr(tracker, "depth", None)
     out: Dict[str, LabelDemand] = {}
     for label in tracker.labels():
         if label == "*":
@@ -148,8 +247,12 @@ def demand_from_tracker(tracker, cluster, *, tick_s: float = 1.0,
         rate = tracker.rate(label) / tick_s
         if rate <= min_rate:
             rate = 0.0
+        queued = float(depth_fn(label)) if depth_fn is not None else 0.0
+        if queued <= min_depth:
+            queued = 0.0
         out[label] = LabelDemand(rate=rate, prompt_len=prompt,
-                                 new_tokens=new_tokens)
+                                 new_tokens=new_tokens,
+                                 queued=queued, drain_s=drain_s)
     return out
 
 
@@ -212,6 +315,7 @@ def best_candidate(
     rho_max: float = 0.85,
     max_engines_per_label: int = 4,
     estimate_fn: Optional[EstimateFn] = None,
+    disagg_estimate_fn: Optional[DisaggEstimateFn] = None,
 ) -> ScoredCandidate:
     """Pick the best configuration for the forecast demand.
 
@@ -219,11 +323,22 @@ def best_candidate(
         demand: per-label `LabelDemand` (the forecast).
         targets: per-label ``(max_ttft_s, max_tpot_s)`` service-level
             targets (missing label / None entry == no target).
-        specs: candidate `EngineSpec` plan/sizing variants.
+        specs: candidate `EngineSpec` plan/sizing variants. When BOTH a
+            ``role="prefill"`` and a ``role="decode"`` spec survive a
+            label's route pruning, disaggregated candidates (one tier
+            each, every prefill×decode pairing over the profile catalog)
+            are enumerated alongside the unified ones — and the unified
+            ones are then priced WITH prefill/decode interference
+            (`prefill_interference`), since that is exactly the cost
+            disaggregation removes. With no role-tagged specs (the
+            default catalogs) the enumeration and every number are
+            unchanged.
         profiles: candidate `DeviceProfile`s (the heterogeneous pool).
         features_fn: spec -> `CostFeatures` (the planner's cached
             compiled-HLO extraction; the search itself never compiles).
-        bounds: per-label intent-pinned (min, max) engine counts.
+        bounds: per-label intent-pinned (min, max) engine counts — a
+            disaggregated candidate's TOTAL engine count (both tiers)
+            honors them.
         default_bounds: bounds for labels not pinned.
         route_required: per-label route-constraint plans (fail-closed
             spec pruning).
@@ -238,19 +353,24 @@ def best_candidate(
             its per-label `ResidualCalibration` factors, so learned
             residuals move the SAME lexicographic objective the
             analytical search uses.
+        disagg_estimate_fn: the disaggregated-configuration scorer
+            (default: `estimate_disagg`, no handoff surcharge).
 
     Returns:
-        The best `ScoredCandidate`. Labels with demand but no legally
-        servable spec are listed in ``infeasible`` (fail-closed: the
-        planner surfaces them instead of proposing a non-compliant
-        engine) and receive no assignment.
+        The best `ScoredCandidate`; ``config`` values are
+        `LabelAssignment`s (one assignment for a unified label, a
+        prefill + decode pair for a disaggregated one). Labels with
+        demand but no legally servable spec are listed in
+        ``infeasible`` (fail-closed: the planner surfaces them instead
+        of proposing a non-compliant engine) and receive no assignment.
     """
     bounds = dict(bounds or {})
     route_required = dict(route_required or {})
     est_fn = estimate_fn or _analytical
+    dis_fn = disagg_estimate_fn or _analytical_disagg
     labels = sorted(set(demand) | set(bounds))
 
-    config: Dict[str, Assignment] = {}
+    config: Dict[str, LabelAssignment] = {}
     per_label: Dict[str, CostEstimate] = {}
     infeasible: List[str] = []
     violations = 0
@@ -261,34 +381,74 @@ def best_candidate(
         d = demand.get(label, LabelDemand(rate=0.0))
         lo_hi = bounds.get(label, default_bounds)
         cands = eligible_specs(specs, route_required.get(label))
-        if not cands:
-            if d.rate > 0 or lo_hi[0] > 0:
+        unified = [s for s in cands if s.role == "unified"]
+        prefills = [s for s in cands if s.role == "prefill"]
+        decodes = [s for s in cands if s.role == "decode"]
+        # disaggregation is only on the table when both tiers survived
+        # pruning; only then do unified candidates pay the interference
+        # they actually suffer (pricing it in with nothing to compare
+        # against would silently shift every legacy number)
+        disagg = bool(prefills and decodes)
+        if not unified and not disagg:
+            if d.effective_rate > 0 or lo_hi[0] > 0:
                 infeasible.append(label)
             continue
         ttft_t, tpot_t = targets.get(label, (None, None))
         best: Optional[Tuple[Tuple[float, float, float],
-                             Assignment, CostEstimate]] = None
-        for spec in cands:
+                             LabelAssignment, CostEstimate]] = None
+        for spec in unified:
             feats = features_fn(spec)
             for profile in profiles:
                 for count in _count_range(lo_hi, max_engines_per_label):
                     if count == 0:
                         # legal only when nothing demands capacity
-                        if d.rate > 0:
+                        if d.effective_rate > 0:
                             continue
-                        a = Assignment(spec, profile, 0)
+                        a = LabelAssignment(
+                            (Assignment(spec, profile, 0),))
                         key = (0.0, 0.0, 0.0)
                         if best is None or key < best[0]:
                             best = (key, a, est_fn(label, feats, profile,
                                                    d.mix(), 1))
                         continue
                     est = est_fn(label, feats, profile, d.mix(), count)
+                    if disagg:
+                        est = prefill_interference(est, d.mix(),
+                                                   engines=count)
                     viol = _violation(est, (ttft_t, tpot_t), rho_max)
                     c = count * profile.cost_rate * profile.n_devices
                     hr = max(0.0, 1.0 - est.utilization)
                     key = (viol, c, -hr)
                     if best is None or key < best[0]:
-                        best = (key, Assignment(spec, profile, count), est)
+                        best = (key, LabelAssignment(
+                            (Assignment(spec, profile, count),)), est)
+        if disagg and d.effective_rate > 0:
+            counts = _count_range(lo_hi, max_engines_per_label)
+            total_max = max(counts) if len(counts) else 0
+            total_min = max(lo_hi[0], 2)   # one engine per tier, minimum
+            for sp in prefills:
+                pf_feats = features_fn(sp)
+                for sd in decodes:
+                    de_feats = features_fn(sd)
+                    for pp in profiles:
+                        for pd in profiles:
+                            for n_p in range(1, total_max):
+                                for n_d in range(1, total_max - n_p + 1):
+                                    if n_p + n_d < total_min:
+                                        continue
+                                    est = dis_fn(label, pf_feats, de_feats,
+                                                 pp, pd, d.mix(), n_p, n_d)
+                                    viol = _violation(
+                                        est, (ttft_t, tpot_t), rho_max)
+                                    c = (n_p * pp.cost_rate * pp.n_devices
+                                         + n_d * pd.cost_rate
+                                         * pd.n_devices)
+                                    hr = max(0.0, 1.0 - est.utilization)
+                                    key = (viol, c, -hr)
+                                    if best is None or key < best[0]:
+                                        best = (key, LabelAssignment((
+                                            Assignment(sp, pp, n_p),
+                                            Assignment(sd, pd, n_d))), est)
         if best is None:
             infeasible.append(label)
             continue
@@ -305,40 +465,81 @@ def best_candidate(
 
 
 def score_current(
-    current: Mapping[str, Tuple[EngineSpec, DeviceProfile, int]],
+    current: Mapping[str, object],
     demand: Mapping[str, LabelDemand],
     targets: Mapping[str, Tuple[Optional[float], Optional[float]]],
     *,
     features_fn: Callable[[EngineSpec], CostFeatures],
     rho_max: float = 0.85,
     estimate_fn: Optional[EstimateFn] = None,
+    disagg_estimate_fn: Optional[DisaggEstimateFn] = None,
+    interference: bool = False,
 ) -> ScoredCandidate:
     """Score the configuration that is ALREADY deployed, with the same
     objective `best_candidate` uses — the hysteresis comparison's other
     half (pass the same ``estimate_fn`` so both sides see the same
-    calibrated costs)."""
+    calibrated costs).
+
+    ``current`` values are either the legacy unified triple
+    ``(spec, profile, count)`` or — for a disaggregated deployment — a
+    role dict ``{"prefill": (spec, profile, count),
+    "decode": (spec, profile, count)}`` (either role may be absent; a
+    lone tier is graded like missing capacity since it cannot serve
+    alone). Pass ``interference=True`` when the proposal side enumerated
+    disaggregated candidates, so unified deployments pay the same
+    prefill/decode interference `best_candidate` priced in — the
+    hysteresis comparison must not compare an interference-free current
+    against an interference-priced proposal.
+    """
     est_fn = estimate_fn or _analytical
-    config: Dict[str, Assignment] = {}
+    dis_fn = disagg_estimate_fn or _analytical_disagg
+    config: Dict[str, LabelAssignment] = {}
     per_label: Dict[str, CostEstimate] = {}
     violations = 0.0
     cost = 0.0
     headroom = 0.0
     # labels with demand but NO deployed capacity at all are violations
-    # of the deployed config (demand.rate > 0 and nothing serves it);
-    # graded like total overload so the comparison scale matches
-    # best_candidate's
+    # of the deployed config (demand.effective_rate > 0 and nothing
+    # serves it); graded like total overload so the comparison scale
+    # matches best_candidate's
     for label, d in demand.items():
-        if label not in current and d.rate > 0:
+        if label not in current and d.effective_rate > 0:
             violations += 2.0 + 9.0
-    for label, (spec, profile, count) in current.items():
+    for label, value in current.items():
         d = demand.get(label, LabelDemand(rate=0.0))
-        a = Assignment(spec, profile, count)
+        if isinstance(value, Mapping):
+            roles = {r: tuple(v) for r, v in value.items()}
+            pf = roles.get("prefill")
+            de = roles.get("decode")
+            config[label] = LabelAssignment(tuple(
+                Assignment(s, p, n) for s, p, n in roles.values()))
+            if (pf is None or de is None or pf[2] == 0 or de[2] == 0):
+                # a lone tier can't serve: prefill-only never decodes,
+                # decode-only never admits — missing capacity
+                if d.effective_rate > 0:
+                    violations += 2.0 + 9.0
+                cost += sum(n * p.cost_rate * p.n_devices
+                            for _, p, n in roles.values())
+                continue
+            est = dis_fn(label, features_fn(pf[0]), features_fn(de[0]),
+                         pf[1], de[1], d.mix(), pf[2], de[2])
+            per_label[label] = est
+            violations += _violation(est, targets.get(label, (None, None)),
+                                     rho_max)
+            cost += (pf[2] * pf[1].cost_rate * pf[1].n_devices
+                     + de[2] * de[1].cost_rate * de[1].n_devices)
+            headroom += max(0.0, 1.0 - est.utilization)
+            continue
+        spec, profile, count = value
+        a = LabelAssignment((Assignment(spec, profile, count),))
         config[label] = a
         if count == 0:
-            if d.rate > 0:
+            if d.effective_rate > 0:
                 violations += 2.0 + 9.0
             continue
         est = est_fn(label, features_fn(spec), profile, d.mix(), count)
+        if interference:
+            est = prefill_interference(est, d.mix(), engines=count)
         per_label[label] = est
         violations += _violation(est, targets.get(label, (None, None)),
                                  rho_max)

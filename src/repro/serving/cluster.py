@@ -268,6 +268,7 @@ class ServingCluster:
     def register(self, name: str, engine: ServingEngine, *,
                  plan: Optional[ShardingPlan] = None,
                  labels: Optional[Dict[str, str]] = None,
+                 role: Optional[str] = None,
                  verify_hlo: bool = True) -> None:
         """Add an engine to the routing pool (no AOT warm-up — see
         `spawn_engine` for the elastic path that never JITs while serving).
@@ -278,6 +279,15 @@ class ServingCluster:
             plan: if given, installed as ``engine.plan`` (routing reads the
                 live engine, so this is the plan the router checks).
             labels: merged into ``engine.labels`` (tenancy restriction).
+            role: if given, installed as ``engine.role`` —
+                ``"prefill"``/``"decode"`` engines participate in the
+                cluster's disaggregated first-token handoff (see `step`):
+                new requests route only to prefill-capable engines
+                (``role != "decode"``), and every request resident on a
+                prefill-role engine is handed to a decode-role engine at
+                its first-token boundary via the batched migration path.
+                Non-unified engines get their migration ops pre-warmed
+                here so the first handoff never compiles.
             verify_hlo: check the engine's *compiled HLO* against any
                 already-installed route constraint it would serve under
                 (see `verify_engine_hlo`) — the declared plan alone is a
@@ -287,9 +297,9 @@ class ServingCluster:
 
         Raises:
             ValueError: if ``name`` is already registered (or reserved by
-                an in-flight `spawn_engine_async`), or (fail-closed) the
-                compiled HLO violates an applicable route constraint —
-                the engine is NOT registered in that case.
+                an in-flight `spawn_engine_async`), ``role`` is unknown,
+                or (fail-closed) the compiled HLO violates an applicable
+                route constraint — the engine is NOT registered then.
         """
         with self._lock:
             self._drop_dead_spawns()
@@ -299,6 +309,8 @@ class ServingCluster:
                 engine.plan = plan
             if labels:
                 engine.labels.update(labels)
+            if role is not None:
+                engine.role = role         # validates fail-closed
             # insert + verify atomically: the router must never observe
             # (and queue onto) an engine whose registration is about to
             # be rolled back fail-closed
@@ -310,6 +322,11 @@ class ServingCluster:
                 except ValueError:
                     del self._entries[name]
                     raise
+        if engine.role != "unified":
+            # PREPARE-equivalent for the handoff path: warm the pool
+            # surgery ops now, off the serving path, so the first
+            # first-token handoff pays no compile inside its pause
+            engine.warm_migration()
 
     def verify_engine_hlo(self, name: str, *, hlo_text: Optional[str] = None,
                           mesh_shape: Optional[Sequence[int]] = None,
@@ -527,11 +544,16 @@ class ServingCluster:
         contradict, the engine's plan must satisfy every route
         constraint matching the request's labels (the ``data-type``
         constraint AND any selector/predicate constraints, merged), and
-        the engine must not be draining."""
+        the engine must not be draining. A ``role="decode"`` engine is
+        never eligible for a NEW request — it has no routed prefill
+        duty; it receives in-flight work only through the first-token
+        handoff / migration paths (fail-closed: with only decode
+        engines for a label, routing rejects rather than mis-placing)."""
         required = self.required_for(dict(req.labels))
         with self._lock:
             return [e.name for e in self._entries.values()
-                    if self._entry_eligible(e, req.labels, required)]
+                    if self._entry_eligible(e, req.labels, required)
+                    and e.engine.role != "decode"]
 
     def engines_for_label(self, value: str) -> List[str]:
         """Non-draining engines that could serve traffic labeled
@@ -645,16 +667,109 @@ class ServingCluster:
 
         A step is the SAFE BOUNDARY of the concurrent-PREPARE state
         machine: any pending swap whose background compile has finished
-        (ticket READY) is committed here, before the engines step."""
+        (ticket READY) is committed here, before the engines step. It is
+        also the handoff boundary of disaggregated serving: after the
+        engines step, every request resident on a ``role="prefill"``
+        engine (all are past their first token — prefill emits it at
+        admission) is handed to a decode-role engine through the batched
+        migration path (`_handoff_ready`)."""
         self._commit_ready()
         n = 0
         with self._step_lock:     # a commit never lands mid-decode
             for e in list(self._entries.values()):
                 if not e.engine.paused:
                     n += e.engine.step()
+        self._handoff_ready()
         with self._lock:
             self._reap_drained()
         return n
+
+    def handoff_ready(self) -> List[MigrationRecord]:
+        """Public handoff hook: move every handoff-eligible request from
+        prefill-role engines onto decode-role engines now (``step()``
+        already does this each step — call directly only when driving
+        engines without the cluster step loop). Returns the per-request
+        `MigrationRecord`s (``reason="handoff"``)."""
+        return self._handoff_ready()
+
+    def _handoff_ready(self) -> List[MigrationRecord]:
+        """First-token handoff sweep (disaggregated serving): collect
+        decoding residents of every ``role="prefill"`` engine — each
+        already holds its first token, stamped by prefill at admission —
+        pick the least-loaded eligible ``role="decode"`` destination per
+        request, and move each (src, dst) cohort with ONE batched
+        migration (`migrate_many` semantics via `_migrate_locked`, so
+        the pre-warmed cohort gather keeps the pause compile-free and
+        streams stay bitwise identical).
+
+        Never lossy, never truncating: a request no decode engine can
+        legally hold (route constraints, lanes, KV memory, or a
+        sequence extent beyond the destination's ``s_max``) simply
+        stays and finishes decoding on the prefill engine — fail-closed
+        placement beats a truncated stream. Draining prefill engines
+        still hand off (it accelerates their drain)."""
+        with self._lock:
+            sources = [e for e in self._entries.values()
+                       if e.engine.role == "prefill"
+                       and any(r is not None for r in e.engine.slot_req)]
+            if not sources:
+                return []
+            decodes = [e for e in self._entries.values()
+                       if e.engine.role == "decode"
+                       and not e.draining and not e.quarantined
+                       and not e.engine.paused]
+            if not decodes:
+                return []
+            # capacity bookkeeping mirrors `_relocate_for_retirement`:
+            # lanes AND token-granular memory per destination, debited
+            # as requests are assigned (imports may spend the paged
+            # watermark, so budget the full free page list)
+            free = {e.name: e.engine.free_slots for e in decodes}
+            free_tok = {e.name: (e.engine.pool.free_pages
+                                 * e.engine.page_size
+                                 if e.engine.paged else e.engine.free_tokens)
+                        for e in decodes}
+            extra = {e.name: 0 for e in decodes}
+            cohorts: Dict[Tuple[str, str], List[int]] = {}
+            for se in sources:
+                eng = se.engine
+                for i, req in enumerate(eng.slot_req):
+                    if req is None:
+                        continue
+                    pos = int(eng.slot_pos[i])
+                    need = needed_capacity(req, "decoding", pos, eng.s_max)
+                    required = self.required_for(dict(req.labels))
+                    cands = [e for e in decodes
+                             if self._entry_eligible(e, req.labels,
+                                                     required)
+                             and need <= e.engine.s_max
+                             and free[e.name] > 0
+                             and free_tok[e.name]
+                             >= e.engine.admission_tokens(need)]
+                    if not cands:
+                        continue           # decodes in place, fail-closed
+                    dst = min(cands,
+                              key=lambda e: e.engine.load + extra[e.name])
+                    cohorts.setdefault((se.name, dst.name),
+                                       []).append(req.rid)
+                    extra[dst.name] += 1
+                    free[dst.name] -= 1
+                    free_tok[dst.name] -= dst.engine.admission_tokens(need)
+            records: List[MigrationRecord] = []
+            for (src, dst), rids in cohorts.items():
+                try:
+                    records.extend(self._migrate_locked(src, dst, rids,
+                                                        reason="handoff"))
+                except (MigrationError, RoutingError):
+                    continue       # kept/restored on the prefill engine
+            if records:
+                rec = obs_events.RECORDER
+                if rec is not None:
+                    rec.emit("cluster.handoff", moved=len(records),
+                             pause_max_s=max(m.pause_s for m in records),
+                             bytes_moved=sum(m.bytes_moved
+                                             for m in records))
+            return records
 
     def run(self, max_steps: int = 10_000, *,
             wait_pending: bool = False) -> None:
@@ -733,12 +848,24 @@ class ServingCluster:
             done = e.engine.done
             if e.metrics_seen >= len(done):
                 continue
+            role = e.engine.role
             for r in done[e.metrics_seen:]:
                 v = r.labels.get(self.ROUTE_KEY, "*")
                 agg = self._label_folds.get(v)
                 if agg is None:
                     agg = self._label_folds[v] = RequestAggregate()
                 agg.observe(r.ttft, r.tpot)
+                # disaggregated serving: completions on role-tagged
+                # engines additionally aggregate under a "role:<role>"
+                # pseudo-label so `metrics_by_label` surfaces per-role
+                # TTFT/TPOT (unified engines add no extra keys — the
+                # legacy label universe is unchanged)
+                if role != "unified":
+                    rv = f"role:{role}"
+                    ragg = self._label_folds.get(rv)
+                    if ragg is None:
+                        ragg = self._label_folds[rv] = RequestAggregate()
+                    ragg.observe(r.ttft, r.tpot)
             e.metrics_seen = len(done)
 
     def metrics_by_label(self, extra_labels: Sequence[str] = ()
@@ -838,9 +965,16 @@ class ServingCluster:
         slot-padding-waste signal (a slot-granular engine full of short
         requests reads low; a paged engine's right-sized reservations
         read high). Engines with nothing resident report 0.0 and weigh
-        nothing in the aggregate."""
+        nothing in the aggregate.
+
+        Only ROUTABLE capacity is reported: draining (retired-but-
+        unreaped) and quarantined engines are excluded from the map and
+        the aggregate — their residual allocations are not capacity the
+        autoscaler can rebalance onto, and a stale entry here would
+        poison the rebalance-over-spawn decision."""
         with self._lock:
-            entries = list(self._entries.values())
+            entries = [e for e in self._entries.values()
+                       if not e.draining and not e.quarantined]
         out: Dict[str, float] = {}
         used = alloc = 0
         for e in entries:
@@ -1202,7 +1336,8 @@ class ServingCluster:
                      prefill_lengths: Sequence[int],
                      prefill_buckets: bool,
                      inline: bool,
-                     warm: Optional[Any] = None) -> PrepareTicket:
+                     warm: Optional[Any] = None,
+                     role: Optional[str] = None) -> PrepareTicket:
         with self._lock:
             self._drop_dead_spawns()
             if name in self._entries or name in self._pending_spawns:
@@ -1211,6 +1346,8 @@ class ServingCluster:
                 engine.plan = plan
             if labels:
                 engine.labels.update(labels)
+            if role is not None:
+                engine.role = role         # validates fail-closed
             ticket = PrepareTicket(name, "spawn", engine.plan,
                                    engine_obj=engine)
             self._pending_spawns[name] = ticket
@@ -1290,6 +1427,12 @@ class ServingCluster:
                 del self._pending_spawns[name]
                 self.history.append(report)
                 ticket._committed(report)
+                # disaggregated roles: warm the pool-surgery ops now
+                # (AFTER swap_plan, which invalidates the warm flag),
+                # outside the measured downtime, so the engine's first
+                # handoff never compiles
+                if engine.role != "unified":
+                    engine.warm_migration()
                 # new capacity takes its share of the backlog at once
                 if engine.labels.get(self.ROUTE_KEY):
                     self.redistribute_queued(engine.labels[self.ROUTE_KEY])
@@ -1304,6 +1447,7 @@ class ServingCluster:
                            prefill_lengths: Sequence[int] = (),
                            prefill_buckets: bool = False,
                            warm: Optional[Any] = None,
+                           role: Optional[str] = None,
                            ) -> PrepareTicket:
         """Bring a NEW engine online WITHOUT blocking the caller: its
         PREPARE-phase AOT compile runs on the background `PrepareWorker`
@@ -1313,7 +1457,8 @@ class ServingCluster:
         reserved name is listed by `pending_spawns`.
 
         Args: as `spawn_engine`; ``warm`` as in `reconfigure_async` (the
-        out-of-process compile-cache warmer for CPU-only hosts).
+        out-of-process compile-cache warmer for CPU-only hosts);
+        ``role`` as in `register`.
 
         Returns:
             The `PrepareTicket` (``kind="spawn"``); ``ticket.result()``
@@ -1325,13 +1470,15 @@ class ServingCluster:
         return self._stage_spawn(
             name, engine, plan=plan, labels=labels,
             prefill_lengths=prefill_lengths,
-            prefill_buckets=prefill_buckets, inline=False, warm=warm)
+            prefill_buckets=prefill_buckets, inline=False, warm=warm,
+            role=role)
 
     def spawn_engine(self, name: str, engine: ServingEngine, *,
                      plan: Optional[ShardingPlan] = None,
                      labels: Optional[Dict[str, str]] = None,
                      prefill_lengths: Sequence[int] = (),
                      prefill_buckets: bool = False,
+                     role: Optional[str] = None,
                      ) -> DowntimeReport:
         """Bring a NEW engine online through the PREPARE-phase AOT path.
 
@@ -1354,6 +1501,9 @@ class ServingCluster:
                 `label_prompt_lengths` of the label being scaled).
             prefill_buckets: also AOT-compile the padded-bucket prefill
                 ladder (unseen lengths never JIT either).
+            role: if given, installed as ``engine.role`` before the
+                engine joins the pool (see `register` — a non-unified
+                engine joins with its handoff migration ops pre-warmed).
 
         Returns:
             A `DowntimeReport` with ``event="spawn"`` (``metrics_before``
@@ -1369,7 +1519,7 @@ class ServingCluster:
         ticket = self._stage_spawn(
             name, engine, plan=plan, labels=labels,
             prefill_lengths=prefill_lengths,
-            prefill_buckets=prefill_buckets, inline=True)
+            prefill_buckets=prefill_buckets, inline=True, role=role)
         if ticket.state == FAILED:         # PREPARE raised: propagate as-is
             with self._lock:
                 if self._pending_spawns.get(name) is ticket:
@@ -1413,8 +1563,29 @@ class ServingCluster:
                 out[v] = out.get(v, 0) + 1
             return out
 
+    def pending_spawn_roles(self) -> Dict[str, Dict[str, int]]:
+        """In-flight spawn capacity per label, split by engine role:
+        ``{label: {role: count}}`` over `spawn_engine_async` tickets
+        still compiling. The role-aware `WorkloadPlanner` counts a
+        pending prefill spawn as existing prefill capacity (and so on),
+        so a slow compile cannot trigger duplicate role spawns."""
+        with self._lock:
+            self._drop_dead_spawns()
+            out: Dict[str, Dict[str, int]] = {}
+            for t in self._pending_spawns.values():
+                if t.done():
+                    continue
+                eng = t._engine_obj
+                labels = getattr(eng, "labels", {}) or {}
+                v = labels.get(self.ROUTE_KEY, "*")
+                role = getattr(eng, "role", "unified")
+                by_role = out.setdefault(v, {})
+                by_role[role] = by_role.get(role, 0) + 1
+            return out
+
     def migrate_requests(self, src: str, dst: str,
-                         rids: Optional[Sequence[int]] = None
+                         rids: Optional[Sequence[int]] = None, *,
+                         reason: str = ""
                          ) -> List[MigrationRecord]:
         """Live-migrate in-flight requests from ``src`` to ``dst``:
         export each request's per-slot state (KV slices, decode position,
@@ -1436,7 +1607,12 @@ class ServingCluster:
                 fast path).
             dst: destination engine (must not be draining).
             rids: requests to move; every resident + queued request on
-                ``src`` when omitted.
+                ``src`` when omitted. An explicitly empty batch is a
+                no-op: no pause span, no downtime, no engine touched.
+            reason: stamped on each `MigrationRecord` and its
+                ``migration.pause`` event (``"handoff"`` for the
+                first-token prefill→decode handoff — the SLO ledger
+                buckets pause time by it).
 
         Returns:
             One `MigrationRecord` per moved request (pause measured
@@ -1456,10 +1632,11 @@ class ServingCluster:
         if src == dst:
             raise ValueError("source and destination are the same engine")
         with self._lock:
-            return self._migrate_locked(src, dst, rids)
+            return self._migrate_locked(src, dst, rids, reason=reason)
 
     def _migrate_locked(self, src: str, dst: str,
-                        rids: Optional[Sequence[int]]
+                        rids: Optional[Sequence[int]], *,
+                        reason: str = ""
                         ) -> List[MigrationRecord]:
         se, de = self._entries[src], self._entries[dst]
         if de.draining:
@@ -1468,6 +1645,12 @@ class ServingCluster:
         if rids is None:
             rids = [r.rid for r in se.engine.slot_req if r is not None] \
                 + [r.rid for r in se.engine.queue]
+        if not rids:
+            # empty cohort (nothing in flight, or every candidate was
+            # filtered upstream): a migration that moves nothing must
+            # cost nothing — no warm-up, no drain barrier, no pause
+            # span, downtime identically 0
+            return []
         if len(set(rids)) != len(rids):
             raise ValueError(f"duplicate rids in migration batch: {rids}")
         # ---- pre-flight: validate the WHOLE batch before moving anything
@@ -1490,6 +1673,20 @@ class ServingCluster:
                 raise RoutingError(
                     f"engine {dst!r} may not serve request {rid} "
                     f"(labels={req.labels}, constraint={required!r}) — "
+                    "failing closed, nothing moved")
+            # role discipline: a decode-role engine cannot prefill, so a
+            # queued (not-yet-prefilled) request may never land on one;
+            # a decoding request on a prefill-role engine would only be
+            # handed straight off again — both refused, nothing moved
+            if phase == "queued" and de.engine.role == "decode":
+                raise RoutingError(
+                    f"request {rid} is still queued (needs prefill) but "
+                    f"{dst!r} has role='decode' — failing closed, "
+                    "nothing moved")
+            if phase == "decoding" and de.engine.role == "prefill":
+                raise RoutingError(
+                    f"request {rid} is decoding but {dst!r} has "
+                    "role='prefill' (it would be handed off again) — "
                     "failing closed, nothing moved")
             need = needed_capacity(req, phase, pos, se.engine.s_max)
             if need > de.engine.s_max:
@@ -1525,7 +1722,7 @@ class ServingCluster:
             # one batched device_put for the whole pair (per-request
             # pauses amortize the shared transfer; see migrate_many)
             return migrate_many(se.engine, de.engine, rids, src=src,
-                                dst=dst)
+                                dst=dst, reason=reason)
 
     def _relocate_for_retirement(self, entry: _EngineEntry
                                  ) -> List[MigrationRecord]:
@@ -1560,11 +1757,18 @@ class ServingCluster:
                      and self._entry_eligible(e, req.labels, required)
                      and need <= e.engine.s_max]
             if phase == "decoding":
+                # role discipline mirrors `_migrate_locked`'s preflight:
+                # a decoding request never relocates onto a prefill-role
+                # engine (it would only be handed off again)
                 cands = [e for e in cands
-                         if not e.engine.paused and free[e.name] > 0
+                         if e.engine.role != "prefill"
+                         and not e.engine.paused and free[e.name] > 0
                          and free_tok[e.name]
                          >= e.engine.admission_tokens(need)]
             else:
+                # a queued request still needs prefill — never a
+                # decode-role destination
+                cands = [e for e in cands if e.engine.role != "decode"]
                 running = [e for e in cands if not e.engine.paused]
                 cands = running or cands
             if not cands:

@@ -164,7 +164,16 @@ class ServingEngine:
         watermark: free pages admissions must leave behind (headroom
             for migration imports, which may spend it); allocated ON TOP
             of ``kv_tokens``, so the admission budget is unaffected.
+        role: serving role under disaggregated prefill/decode placement:
+            ``"unified"`` (default — serves a request end to end),
+            ``"prefill"`` (receives new requests; the cluster hands each
+            one off to a decode engine at its first-token boundary) or
+            ``"decode"`` (never routed new requests; receives in-flight
+            work via migration). The engine itself serves identically in
+            every role — the role only steers cluster routing/handoff.
     """
+
+    ROLES = ("unified", "prefill", "decode")
 
     # cap on the prompt-length fallback set `aot_executables` compiles for:
     # a long-lived engine sees unboundedly many distinct lengths, but only
@@ -179,7 +188,8 @@ class ServingEngine:
                  plan: Optional[ShardingPlan] = None,
                  labels: Optional[Dict[str, str]] = None,
                  paged: Optional[bool] = None, page_size: int = 16,
-                 kv_tokens: Optional[int] = None, watermark: int = 0):
+                 kv_tokens: Optional[int] = None, watermark: int = 0,
+                 role: str = "unified"):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -188,6 +198,7 @@ class ServingEngine:
         self.vocab = model.cfg.vocab_size
         self.plan = plan or default_plan()
         self.labels = dict(labels or {})
+        self.role = role
         # display name for flight-recorder events/spans; the cluster
         # sets it to the registered engine name
         self.obs_name = ""
@@ -250,6 +261,20 @@ class ServingEngine:
         # selection: a background PREPARE may commit (swap_plan) from a
         # control thread while step()/_admit() pick executables
         self._exec_lock = threading.Lock()
+
+    @property
+    def role(self) -> str:
+        """Disaggregation role (``"unified"``/``"prefill"``/``"decode"``);
+        assignment validates fail-closed — an engine with a mistyped role
+        would silently fall out of (or into) the routing pool."""
+        return self._role
+
+    @role.setter
+    def role(self, value: str) -> None:
+        if value not in self.ROLES:
+            raise ValueError(f"unknown engine role {value!r} "
+                             f"(expected one of {self.ROLES})")
+        self._role = value
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -522,17 +547,23 @@ class ServingEngine:
     # -- token-granular capacity / fragmentation accounting ------------
     @property
     def kv_token_capacity(self) -> int:
-        """Total KV tokens this engine can hold for admissions."""
+        """Total KV tokens this engine can hold for admissions. Never
+        negative: a pool whose watermark swallows every page (or a
+        zero-page pool) reports 0 capacity, not a negative number that
+        would poison the autoscaler's aggregate capacity sums."""
         if self.paged:
-            return (self.pool.n_pages - self.pool.watermark) * self.page_size
+            return max(self.pool.n_pages - self.pool.watermark, 0) \
+                * self.page_size
         return self.n_slots * self.s_max
 
     @property
     def free_tokens(self) -> int:
         """KV tokens still available to admissions (paged: admittable
-        pages x page size; slot-granular: free slots x ``s_max``)."""
+        pages x page size; slot-granular: free slots x ``s_max``).
+        Clamped to >= 0 — the rebalance-over-spawn decision sums this
+        across peers and a negative entry would hide real capacity."""
         if self.paged:
-            return self.pool.admittable_pages * self.page_size
+            return max(self.pool.admittable_pages, 0) * self.page_size
         return self.free_slots * self.s_max
 
     @property
@@ -642,7 +673,8 @@ class ServingEngine:
             if rec is not None:
                 rec.emit("request.admit", engine=self.obs_name, rid=req.rid,
                          label=req.labels.get("data-type", ""),
-                         queue_wait_s=req.t_first - req.t_submit)
+                         queue_wait_s=req.t_first - req.t_submit,
+                         role=self.role)
             if self.paged:
                 # scatter the single-sequence cache into the reserved
                 # pages; the scratch-padded table tail absorbs bucket
@@ -925,7 +957,8 @@ class ServingEngine:
                              rid=req.rid,
                              label=req.labels.get("data-type", ""),
                              ttft_s=req.ttft, tpot_s=req.tpot,
-                             tokens_out=len(req.tokens_out))
+                             tokens_out=len(req.tokens_out),
+                             role=self.role)
         self.steps += 1
         if rec is not None and self.steps % rec.decode_stride == 0:
             rec.emit("engine.decode", engine=self.obs_name,

@@ -71,10 +71,11 @@ def _record_migration(record: "MigrationRecord") -> None:
     end = obs_events.now()
     rec.emit("migration.pause", engine=record.src, rid=record.rid,
              pause_s=record.pause_s, dst=record.dst, phase=record.phase,
-             bytes_moved=record.bytes_moved, batch=record.batch)
+             bytes_moved=record.bytes_moved, batch=record.batch,
+             reason=record.reason)
     rec.span_at("migration.pause", end - record.pause_s, record.pause_s,
                 track=record.src or "migration", cat="migration",
-                rid=record.rid, dst=record.dst)
+                rid=record.rid, dst=record.dst, reason=record.reason)
 
 
 class MigrationError(RuntimeError):
@@ -142,6 +143,10 @@ class MigrationRecord:
         bytes_moved: KV bytes transferred (0 for queued requests).
         batch: decoding requests that shared this record's device_put
             (1 == an unbatched transfer).
+        reason: why the request moved — ``""`` for an operator-initiated
+            migration/retirement, ``"handoff"`` for the cluster's
+            first-token prefill→decode handoff (the SLO ledger buckets
+            pause time by this).
     """
 
     rid: int
@@ -151,6 +156,7 @@ class MigrationRecord:
     pause_s: float
     bytes_moved: int
     batch: int = 1
+    reason: str = ""
 
 
 # ---------------------------------------------------------------------------
@@ -292,7 +298,8 @@ def required_capacity(snapshot: SlotSnapshot) -> int:
 
 
 def migrate_one(src_engine, dst_engine, rid: int, *,
-                src: str = "", dst: str = "") -> MigrationRecord:
+                src: str = "", dst: str = "",
+                reason: str = "") -> MigrationRecord:
     """Export `rid` from ``src_engine`` and import it into ``dst_engine``,
     restoring it to the source if the import fails closed.
 
@@ -319,13 +326,14 @@ def migrate_one(src_engine, dst_engine, rid: int, *,
         raise
     record = MigrationRecord(rid=rid, src=src, dst=dst, phase=snap.phase,
                              pause_s=time.perf_counter() - t0,
-                             bytes_moved=moved)
+                             bytes_moved=moved, reason=reason)
     _record_migration(record)
     return record
 
 
 def migrate_many(src_engine, dst_engine, rids: Sequence[int], *,
-                 src: str = "", dst: str = "") -> List[MigrationRecord]:
+                 src: str = "", dst: str = "",
+                 reason: str = "") -> List[MigrationRecord]:
     """Move a batch of requests between one engine pair with ONE
     `jax.device_put` for all of their KV state, instead of one per
     request (`ServingCluster.migrate_requests` calls this).
@@ -353,6 +361,12 @@ def migrate_many(src_engine, dst_engine, rids: Sequence[int], *,
             export; earlier exports are restored).
         MigrationError: an import failed closed (see above).
     """
+    # Empty cohort (every candidate filtered out upstream, e.g. by route
+    # predicates): nothing pauses, nothing moves — return before any
+    # warm-up or telemetry so no degenerate batch record or pause span
+    # is ever emitted for a migration that did not happen.
+    if not rids:
+        return []
     # Warm everything that can compile BEFORE the first export, while the
     # requests are still live and serving: the destination layout/axes
     # lookups and — for cohorts of 2+ — the per-request batched gather
@@ -446,7 +460,8 @@ def migrate_many(src_engine, dst_engine, rids: Sequence[int], *,
             pause_s=t_export[snap.rid] + decode_share
             + (time.perf_counter() - t0),
             bytes_moved=moved,
-            batch=len(decoding) if snap.phase == "decoding" else 1)
+            batch=len(decoding) if snap.phase == "decoding" else 1,
+            reason=reason)
         _record_migration(record)
         records.append(record)
     return records

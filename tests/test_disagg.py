@@ -1,0 +1,476 @@
+"""Disaggregated prefill/decode serving: role-tagged engines, the
+router's decode-exclusion, the first-token handoff through the batched
+migration path (bitwise stream identity), per-role accounting, the
+backlog-aware demand forecast, the capacity-view contracts the
+autoscaler's rebalance decision depends on, and the planner-level
+choice between disaggregated and unified configurations.
+"""
+import math
+
+import numpy as np
+import pytest
+from conftest import baseline_streams as _baseline_streams
+from conftest import make_engine as _mk
+from conftest import make_request
+
+from repro.obs import Recorder, SLOLedger, recording
+from repro.planner import (
+    EngineSpec,
+    LabelDemand,
+    TrafficMix,
+    WorkloadPlanner,
+    best_candidate,
+    calibrate_host_profile,
+    estimate,
+    estimate_disagg,
+    features_from_engine,
+    prefill_interference,
+    score_current,
+)
+from repro.planner.search import demand_from_tracker
+from repro.serving import Request, RoutingError, ServingCluster
+from repro.serving.kvpool import PagedKVPool
+from repro.sharding import default_plan
+
+
+# ---------------------------------------------------------------------------
+# roles + routing
+# ---------------------------------------------------------------------------
+
+
+def test_engine_role_validation(fp32_model):
+    _, model, params = fp32_model
+    eng = _mk(model, params, role="prefill")
+    assert eng.role == "prefill"
+    with pytest.raises(ValueError):
+        eng.role = "verifier"
+    with pytest.raises(ValueError):
+        _mk(model, params, role="Prefill")
+    with pytest.raises(ValueError):
+        EngineSpec(plan=default_plan(), role="draft")
+
+
+def test_decode_engines_never_take_new_requests(fp32_model):
+    """The router excludes decode-role engines from NEW admissions; a
+    label served only by decode engines fails closed."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(0)
+    cluster = ServingCluster()
+    cluster.register("dc", _mk(model, params), role="decode")
+    with pytest.raises(RoutingError):
+        cluster.submit(make_request(rng, cfg, 0))
+    assert [r.rid for r in cluster.rejected] == [0]
+    cluster.register("pf", _mk(model, params), role="prefill")
+    assert cluster.submit(make_request(rng, cfg, 1)) == "pf"
+
+
+def test_handoff_streams_bitwise_identical_with_accounting(fp32_model):
+    """THE TENTPOLE PROPERTY: requests admitted to a prefill engine are
+    handed off at first token to the decode engine and their streams are
+    bitwise identical to the unified oracle — with the handoff showing
+    up as first-class obs spans/events, a dedicated SLO-ledger pause
+    cause (never double-counted as plain migration), per-role completion
+    counts, and per-role metrics_by_label entries."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 7, 6, 8)]
+    expect = _baseline_streams(model, params, prompts, new=8)
+
+    with recording(Recorder()) as rec:
+        cluster = ServingCluster()
+        cluster.register("pf", _mk(model, params, n_slots=4),
+                         role="prefill")
+        cluster.register("dc", _mk(model, params, n_slots=4),
+                         role="decode")
+        reqs = [Request(i, p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            assert cluster.submit(r) == "pf"
+        cluster.step()                        # prefill + first token
+        # the handoff ran inside step(): every request now decodes on dc
+        assert cluster.engine("pf").load == 0
+        assert cluster.engine("dc").load == 4
+        cluster.run()
+
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+    # events: migration.pause carries reason="handoff"; the cluster
+    # emits one cohort-level cluster.handoff summary
+    pauses = rec.events("migration.pause")
+    assert pauses and all(e.data["reason"] == "handoff" for e in pauses)
+    (cohort,) = rec.events("cluster.handoff")
+    assert cohort.data["moved"] == 4
+    assert any(s.name == "migration.pause" for s in rec.trace.spans())
+
+    # ledger: pauses land under "handoff", not "migration"
+    ledger = SLOLedger().consume(rec.events())
+    acct = ledger.pause_accounting()
+    assert acct["handoff"]["count"] == len(pauses)
+    assert acct["migration"]["count"] == 0
+    assert acct["handoff"]["total_s"] == pytest.approx(
+        sum(e.data["pause_s"] for e in pauses))
+    # completions happened on the decode tier
+    assert ledger.completed_by_role() == {"decode": 4}
+    # per-role metrics surface in the cluster's label folds
+    m = cluster.metrics_by_label()
+    assert m["role:decode"]["completed"] == 4
+    assert "role:prefill" not in m        # prefill tier completed nothing
+
+
+def test_handoff_respects_decode_capacity(fp32_model):
+    """With a decode tier too small for the whole cohort, only what fits
+    moves; the rest keep decoding on the prefill engine (never dropped,
+    never truncated)."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+               for _ in range(4)]
+    expect = _baseline_streams(model, params, prompts, new=8)
+    cluster = ServingCluster()
+    cluster.register("pf", _mk(model, params, n_slots=4), role="prefill")
+    cluster.register("dc", _mk(model, params, n_slots=2), role="decode")
+    reqs = [Request(i, p, max_new_tokens=8) for i, p in enumerate(prompts)]
+    for r in reqs:
+        cluster.submit(r)
+    cluster.step()
+    assert cluster.engine("dc").load == 2     # only the free slots moved
+    assert cluster.engine("pf").load == 2
+    cluster.run()
+    assert {r.rid: list(r.tokens_out) for r in reqs} == expect
+
+
+# ---------------------------------------------------------------------------
+# capacity-view contracts (autoscaler rebalance-over-spawn inputs)
+# ---------------------------------------------------------------------------
+
+
+def test_free_tokens_never_negative_after_watermark_dip(fp32_model):
+    """A migration import may spend the watermark headroom; the engine's
+    admission-capacity views must clamp at zero instead of going
+    negative and hiding peer capacity from the rebalance sum."""
+    _, model, params = fp32_model
+    eng = _mk(model, params, n_slots=4, s_max=32, page_size=8)
+    eng.pool.watermark = 2
+    pages = eng.pool.alloc(eng.pool.free_pages - 1, reserve=True)
+    assert eng.pool.free_pages < eng.pool.watermark
+    assert eng.free_tokens == 0
+    assert eng.kv_token_capacity >= 0
+    eng.pool.free(pages)
+    assert eng.free_tokens > 0
+
+
+def test_kv_token_capacity_clamps_degenerate_watermark():
+    """The pool itself rejects watermark >= n_pages, but the engine-side
+    contract is pinned independently: capacity is never negative."""
+    pool = PagedKVPool(page_size=8, n_pages=4, watermark=3)
+    assert (pool.n_pages - pool.watermark) * pool.page_size >= 0
+    assert pool.admittable_pages >= 0
+    with pytest.raises(ValueError):
+        PagedKVPool(page_size=8, n_pages=4, watermark=4)
+
+
+def test_cluster_kv_utilization_excludes_draining(fp32_model):
+    """Retired-but-unreaped (draining) engines are not routable capacity
+    — their residual allocations must not poison the cluster aggregate
+    the autoscaler's rebalance-over-spawn decision reads."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(3)
+    cluster = ServingCluster()
+    cluster.register("a", _mk(model, params, n_slots=2, page_size=8))
+    cluster.register("b", _mk(model, params, n_slots=2, page_size=8))
+    cluster.submit(make_request(rng, cfg, 0, new=8))
+    cluster.step()                            # resident on one engine
+    cluster.retire_engine("a", mode="drain")
+    util = cluster.kv_utilization()
+    assert "a" not in util
+    assert set(util) == {"b", "*"}
+    cluster.run()
+
+
+# ---------------------------------------------------------------------------
+# backlog-aware forecast (flash-crowd regression)
+# ---------------------------------------------------------------------------
+
+
+class _StubTracker:
+    def __init__(self, rates, depths):
+        self._rates, self._depths = rates, depths
+
+    def labels(self):
+        return sorted(set(self._rates) | set(self._depths))
+
+    def rate(self, label):
+        return self._rates.get(label, 0.0)
+
+    def depth(self, label):
+        return self._depths.get(label, 0.0)
+
+
+def test_demand_folds_queue_backlog(fp32_model):
+    """SATELLITE (flash crowd): the forecast is rate AND backlog — a
+    deep queue raises the effective sizing rate even when the arrival
+    EWMA alone looks steady."""
+    cluster = ServingCluster()
+    steady = demand_from_tracker(
+        _StubTracker({"phi": 2.0}, {"phi": 0.0}), cluster)
+    crowd = demand_from_tracker(
+        _StubTracker({"phi": 2.0}, {"phi": 40.0}), cluster, drain_s=10.0)
+    assert steady["phi"].queued == 0.0
+    assert steady["phi"].effective_rate == pytest.approx(2.0)
+    assert crowd["phi"].queued == 40.0
+    assert crowd["phi"].effective_rate == pytest.approx(2.0 + 4.0)
+    # the mix the estimator scores uses the effective rate
+    assert crowd["phi"].mix().rate == pytest.approx(6.0)
+    # sub-floor depth EWMA tails forecast as zero backlog
+    tail = demand_from_tracker(
+        _StubTracker({"phi": 2.0}, {"phi": 0.3}), cluster)
+    assert tail["phi"].queued == 0.0
+
+
+def test_flash_crowd_scales_capacity(fp32_model):
+    """The regression: a flash crowd (steady arrivals, deep backlog)
+    must size MORE capacity than the same arrival rate with an empty
+    queue — before the fix the planner sized for the steady rate while
+    the backlog drained at whatever latency old capacity produced."""
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    host = calibrate_host_profile()
+    spec = EngineSpec(plan=default_plan())
+    idle = estimate(feats, host)
+    rate = 0.5 * idle.throughput_tok_s / 16.0      # one engine at rho=.5
+    queued = 10.0 * rate                           # backlog worth 10 s
+    calm = best_candidate(
+        {"phi": LabelDemand(rate=rate)}, {}, specs=[spec],
+        profiles=[host], features_fn=lambda s: feats)
+    crowd = best_candidate(
+        {"phi": LabelDemand(rate=rate, queued=queued, drain_s=10.0)}, {},
+        specs=[spec], profiles=[host], features_fn=lambda s: feats)
+    assert calm.config["phi"].count == 1
+    assert crowd.config["phi"].count > calm.config["phi"].count
+
+
+# ---------------------------------------------------------------------------
+# disaggregated configuration search
+# ---------------------------------------------------------------------------
+
+
+def _role_specs():
+    return [EngineSpec(plan=default_plan(), n_slots=2, s_max=32),
+            EngineSpec(plan=default_plan(), n_slots=2, s_max=32,
+                       role="prefill"),
+            EngineSpec(plan=default_plan(), n_slots=2, s_max=32,
+                       role="decode")]
+
+
+def _prefill_bound_profile(feats):
+    """A compute-poor / bandwidth-rich device: the decode step is a
+    compute-roofline 100 us while memory streaming is negligible, so a
+    512-token prefill costs ~256 decode steps — the regime (long prompts
+    on compute-bound hardware) where prefill/decode interference
+    dominates a unified deployment and disaggregation pays."""
+    from repro.planner import DeviceProfile
+    return DeviceProfile(name="pfbound", peak_flops=feats.flops / 1e-4,
+                         hbm_bw=feats.bytes / 1e-6, mem_bytes=1e15,
+                         link_bw=1e15)
+
+
+def _long_mix_demand(feats, profile):
+    """A long-prompt + long-decode mix on ``profile`` whose prefill duty
+    is 1.2 engine-seconds/second: at 6 unified engines the interference
+    still inflates TPOT by 1/(1-0.2) = 1.25x (violating a 1.15x target),
+    while a 2-prefill + 1-decode split runs both tiers below 0.85."""
+    mix = TrafficMix(prompt_len=512, new_tokens=256, rate=0.0)
+    p = estimate(feats, profile, mix).prefill_s
+    rate = 1.2 / p
+    return LabelDemand(rate=rate, prompt_len=512, new_tokens=256), p
+
+
+def test_search_chooses_disagg_for_long_mix(fp32_model):
+    """ACCEPTANCE: on a long-prompt/long-decode mix with a tight TPOT
+    target, the search picks a disaggregated (prefill + decode tier)
+    configuration and meets the joint targets where every affordable
+    unified configuration violates them."""
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    prof = _prefill_bound_profile(feats)
+    d, p = _long_mix_demand(feats, prof)
+    targets = {"phi": (8.0 * p, 1.15 * estimate(feats, prof).tpot_s)}
+    best = best_candidate(
+        {"phi": d}, targets, specs=_role_specs(), profiles=[prof],
+        features_fn=lambda s: feats, max_engines_per_label=6)
+    assert best.config["phi"].disaggregated
+    assert best.violations == 0
+    roles = best.config["phi"].by_role()
+    assert set(roles) == {"prefill", "decode"}
+    assert roles["prefill"].count >= 1 and roles["decode"].count >= 1
+    # priced WITH the interference disaggregation removes, even the
+    # biggest affordable unified deployment violates the TPOT target —
+    # the win is structural, not a count the enumeration missed
+    for count in range(1, 7):
+        uni = score_current(
+            {"phi": (_role_specs()[0], prof, count)}, {"phi": d},
+            targets, features_fn=lambda s: feats, interference=True)
+        assert uni.violations > 0, f"unified x{count} should violate"
+
+
+def test_search_falls_back_to_unified_for_easy_mix(fp32_model):
+    """Disaggregation costs >= 2 engines; an easy mix one unified engine
+    serves stays unified (cost term of the lexicographic objective)."""
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    host = calibrate_host_profile()
+    idle = estimate(feats, host)
+    d = LabelDemand(rate=0.05 * idle.throughput_tok_s / 16.0)
+    best = best_candidate(
+        {"phi": d}, {}, specs=_role_specs(), profiles=[host],
+        features_fn=lambda s: feats, max_engines_per_label=6)
+    assert not best.config["phi"].disaggregated
+    assert best.config["phi"].count == 1
+    assert best.violations == 0
+
+
+def test_legacy_search_numbers_unchanged_without_role_specs(fp32_model):
+    """With no role-tagged spec in the catalog, interference pricing is
+    never applied: scores are bitwise what the pre-disaggregation search
+    produced."""
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    host = calibrate_host_profile()
+    spec = EngineSpec(plan=default_plan())
+    d = LabelDemand(rate=0.5 * estimate(feats, host).throughput_tok_s
+                    / 16.0, prompt_len=64.0)
+    best = best_candidate({"phi": d}, {}, specs=[spec], profiles=[host],
+                          features_fn=lambda s: feats)
+    raw = estimate(feats, host, d.mix(),
+                   engines=best.config["phi"].count)
+    assert best.per_label["phi"].tpot_s == raw.tpot_s
+    assert best.per_label["phi"].ttft_s == raw.ttft_s
+
+
+def test_estimate_disagg_tiers_are_independent(fp32_model):
+    """The disaggregated estimate's TTFT moves with the prefill tier
+    only and its TPOT with the decode tier only."""
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    host = calibrate_host_profile()
+    mix = TrafficMix(prompt_len=256, new_tokens=64,
+                     rate=0.4 / estimate(feats, host,
+                                         TrafficMix(prompt_len=256)
+                                         ).prefill_s)
+    one = estimate_disagg(feats, feats, mix, prefill_profile=host,
+                          decode_profile=host)
+    more_pf = estimate_disagg(feats, feats, mix, prefill_profile=host,
+                              decode_profile=host, prefill_engines=2)
+    more_de = estimate_disagg(feats, feats, mix, prefill_profile=host,
+                              decode_profile=host, decode_engines=2)
+    assert more_pf.ttft_s < one.ttft_s
+    assert more_pf.tpot_s == one.tpot_s
+    assert more_de.tpot_s == one.tpot_s         # tpot is the roofline step
+    assert more_de.throughput_tok_s == pytest.approx(
+        2.0 * one.throughput_tok_s)
+    with pytest.raises(ValueError):
+        estimate_disagg(feats, feats, mix, prefill_profile=host,
+                        decode_profile=host, prefill_engines=0)
+    # the handoff surcharge lands on TTFT only
+    surcharged = estimate_disagg(feats, feats, mix, prefill_profile=host,
+                                 decode_profile=host, handoff_s=0.05)
+    assert surcharged.ttft_s == pytest.approx(one.ttft_s + 0.05)
+    assert surcharged.tpot_s == one.tpot_s
+
+
+def test_prefill_interference_saturates(fp32_model):
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    host = calibrate_host_profile()
+    mix = TrafficMix(prompt_len=256, new_tokens=64, rate=0.0)
+    est = estimate(feats, host, mix)
+    assert prefill_interference(est, mix) == est     # zero duty: untouched
+    loaded = TrafficMix(prompt_len=256, new_tokens=64,
+                        rate=0.5 / est.prefill_s)
+    inflated = prefill_interference(est, loaded)
+    assert inflated.tpot_s == pytest.approx(est.tpot_s * 2.0)
+    swamped = TrafficMix(prompt_len=256, new_tokens=64,
+                         rate=2.0 / est.prefill_s)
+    assert math.isinf(prefill_interference(est, swamped).tpot_s)
+
+
+def test_score_current_role_dict_and_lone_tier(fp32_model):
+    """`score_current` prices a deployed disaggregated config with the
+    disagg estimator; a lone tier (prefill with no decode) is graded as
+    missing capacity — it cannot serve alone."""
+    _, model, params = fp32_model
+    feats = features_from_engine(_mk(model, params))
+    prof = _prefill_bound_profile(feats)
+    specs = _role_specs()
+    d, p = _long_mix_demand(feats, prof)
+    targets = {"phi": (8.0 * p, 1.15 * estimate(feats, prof).tpot_s)}
+    full = score_current(
+        {"phi": {"prefill": (specs[1], prof, 2),
+                 "decode": (specs[2], prof, 2)}},
+        {"phi": d}, targets, features_fn=lambda s: feats)
+    assert full.violations == 0
+    assert full.cost == pytest.approx(4 * prof.cost_rate * prof.n_devices)
+    assert full.config["phi"].disaggregated
+    lone = score_current(
+        {"phi": {"prefill": (specs[1], prof, 2)}},
+        {"phi": d}, targets, features_fn=lambda s: feats)
+    assert lone.violations >= 11.0
+    # the interference flag prices a unified deployment's duty in
+    plain = score_current({"phi": (specs[0], prof, 1)}, {"phi": d},
+                          targets, features_fn=lambda s: feats)
+    priced = score_current({"phi": (specs[0], prof, 1)}, {"phi": d},
+                           targets, features_fn=lambda s: feats,
+                           interference=True)
+    assert priced.per_label["phi"].tpot_s > plain.per_label["phi"].tpot_s
+
+
+# ---------------------------------------------------------------------------
+# planner end to end: choose, spawn with roles, serve through handoff
+# ---------------------------------------------------------------------------
+
+
+def test_planner_deploys_disagg_and_serves_through_handoff(fp32_model):
+    """ACCEPTANCE (planner end-to-end): the planner proposes a
+    disaggregated config for the long mix, its spawn actions carry role
+    assignments, execution registers role-tagged engines, and the
+    resulting cluster serves requests through the first-token handoff to
+    completion."""
+    cfg, model, params = fp32_model
+    cluster = ServingCluster()
+
+    def factory(spec, label):
+        return _mk(model, params, n_slots=spec.n_slots, s_max=spec.s_max)
+
+    feats = features_from_engine(_mk(model, params))
+    prof = _prefill_bound_profile(feats)
+    planner = WorkloadPlanner(cluster, factory, specs=_role_specs(),
+                              profiles=[prof], dwell=0,
+                              max_engines_per_label=6)
+    d, p = _long_mix_demand(feats, prof)
+    planner.set_slo_target("phi", 8.0 * p,
+                           1.15 * estimate(feats, prof).tpot_s)
+    actions = planner.plan({"phi": d})
+    spawn_roles = sorted(a.role for a in actions if a.kind == "spawn")
+    assert "prefill" in spawn_roles and "decode" in spawn_roles
+    planner.execute(actions, async_spawn=False)
+    roles = {n: cluster.engine(n).role for n in cluster.engines()}
+    assert "prefill" in roles.values() and "decode" in roles.values()
+
+    # a second planning round against the same demand holds still — the
+    # deployed role config is recognized as current capacity
+    assert planner.plan({"phi": d}) == []
+
+    rng = np.random.default_rng(7)
+    reqs = [make_request(rng, cfg, rid, "phi", new=6) for rid in range(4)]
+    placed = [cluster.submit(r) for r in reqs]
+    assert all(roles[name] == "prefill" for name in placed)
+    cluster.run()
+    assert all(len(r.tokens_out) == 6 for r in reqs)
+    # what fit the decode tier handed off; the overflow decoded in place
+    # on its prefill engine (capacity-constrained handoff never blocks)
+    m = cluster.metrics_by_label()
+    by_role = {r: m.get(f"role:{r}", {}).get("completed", 0)
+               for r in ("prefill", "decode")}
+    assert by_role["decode"] >= 2
+    assert by_role["prefill"] + by_role["decode"] == 4

@@ -479,3 +479,106 @@ def test_spawn_engine_verifies_aot_compiled_hlo(fp32_model):
                                   labels={"data-type": "phi"})
     assert report.event == "spawn"
     assert "phi-0" in cluster.engines_for_label("phi")
+
+
+# ---------------------------------------------------------------------------
+# empty cohorts + role-phase preflight + cross-s_max handoff
+# ---------------------------------------------------------------------------
+
+
+def test_empty_cohort_is_a_true_noop(fp32_model):
+    """SATELLITE: migrating an empty cohort — an idle source, an
+    explicit empty rid list, or a migrate-mode retirement with nothing
+    to move — reports no records and zero downtime, and emits NO pause
+    span or migration event (a degenerate batch record would poison the
+    per-migration pause statistics)."""
+    from repro.obs import Recorder, recording
+
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(30)
+    with recording(Recorder()) as rec:
+        cluster = ServingCluster()
+        cluster.register("a", _mk(model, params))
+        cluster.register("b", _mk(model, params))
+        assert cluster.migrate_requests("a", "b") == []      # idle source
+        assert cluster.migrate_requests("a", "b", rids=[]) == []
+        req = _req(rng, cfg, 0)
+        cluster.engine("a").submit(req)
+        cluster.step()
+        # busy source, explicit empty cohort: still a no-op
+        assert cluster.migrate_requests("a", "b", rids=[]) == []
+        report = cluster.retire_engine("b", mode="migrate")  # idle engine
+        assert report.downtime_s == 0.0
+        assert report.migrations == ()
+        cluster.run()
+        assert len(req.tokens_out) == req.max_new_tokens
+    assert rec.events("migration.pause") == []
+    assert [s for s in rec.trace.spans()
+            if s.name == "migration.pause"] == []
+
+
+def test_queued_request_to_decode_engine_fails_closed(fp32_model):
+    """A still-queued request needs a prefill; moving it onto a
+    decode-role engine (which never prefills) must refuse up front,
+    moving nothing."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(31)
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params, n_slots=1))
+    cluster.register("dc", _mk(model, params), role="decode")
+    reqs = [_req(rng, cfg, rid) for rid in range(2)]
+    for r in reqs:
+        cluster.engine("src").submit(r)
+    cluster.engine("src").step()             # rid 0 resident, rid 1 queued
+    with pytest.raises(RoutingError, match="decode"):
+        cluster.migrate_requests("src", "dc", rids=[1])
+    assert len(cluster.engine("src").queue) == 1    # nothing moved
+    cluster.run()
+    assert all(len(r.tokens_out) == r.max_new_tokens for r in reqs)
+
+
+def test_decoding_request_to_prefill_engine_fails_closed(fp32_model):
+    """A decoding request parked on a prefill-role engine would just be
+    handed off again — the migration preflight refuses the move."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(32)
+    cluster = ServingCluster()
+    cluster.register("src", _mk(model, params))
+    cluster.register("pf", _mk(model, params), role="prefill")
+    req = _req(rng, cfg, 0)
+    cluster.engine("src").submit(req)
+    cluster.engine("src").step()             # mid-decode
+    with pytest.raises(RoutingError, match="prefill"):
+        cluster.migrate_requests("src", "pf", rids=[0])
+    assert cluster.engine("src").load == 1          # nothing moved
+    cluster.run()
+    assert len(req.tokens_out) == req.max_new_tokens
+
+
+def test_cross_smax_handoff_never_truncates(fp32_model):
+    """SATELLITE: a prompt admitted to a prefill engine whose s_max
+    exceeds the decode tier's either refits (fits the target budget) or
+    decodes in place on the prefill engine — the stream is NEVER
+    truncated, and an explicit oversized cross-s_max migration fails
+    closed with the request restored."""
+    cfg, model, params = fp32_model
+    rng = np.random.default_rng(33)
+    prompt = rng.integers(2, cfg.vocab_size, size=8).astype(np.int32)
+    big = Request(0, prompt.copy(), max_new_tokens=20)    # needs 8+20+1
+    small = Request(1, prompt.copy(), max_new_tokens=4)   # refits into 16
+    cluster = ServingCluster()
+    cluster.register("pf", _mk(model, params, n_slots=4, s_max=48),
+                     role="prefill")
+    cluster.register("dc", _mk(model, params, n_slots=4, s_max=16),
+                     role="decode")
+    assert cluster.submit(big) == "pf"
+    assert cluster.submit(small) == "pf"
+    cluster.step()
+    assert cluster.engine("dc").load == 1    # small handed off
+    assert cluster.engine("pf").load == 1    # big stayed (would truncate)
+    with pytest.raises(MigrationError):
+        cluster.migrate_requests("pf", "dc", rids=[0])
+    assert cluster.engine("pf").load == 1    # restored, not dropped
+    cluster.run()
+    assert len(big.tokens_out) == 20         # full budget, on the source
+    assert len(small.tokens_out) == 4
