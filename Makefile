@@ -2,7 +2,7 @@ PY ?= python
 
 .PHONY: test test-stress ci example lint bench-reconfig bench-elastic \
         bench-migration bench-overlap bench-planner bench-paged \
-        bench-scale bench-obs bench-disagg bench-json docs
+        bench-scale bench-obs bench-disagg bench-watch bench-json docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -51,8 +51,11 @@ bench-obs:
 bench-disagg:
 	PYTHONPATH=src:. $(PY) benchmarks/disagg_serving.py
 
+bench-watch:
+	PYTHONPATH=src:. $(PY) benchmarks/watchtower.py
+
 bench-json:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs disagg
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --check --only reconfig migration elastic overlap planner paged scale obs disagg watch
 
 docs:
 	$(PY) scripts/run_doc_examples.py

@@ -36,6 +36,13 @@ artifact (see DESIGN.md §7 for the index):
                         tier) over every unified config on a long-
                         prompt mix, and first-token handoffs keep
                         streams bitwise identical under a <50 ms pause
+  watch_*             — Watchtower alerting: three injected degradations
+                        (flash crowd past capacity, slowed engine,
+                        poisoned calibration) each detected with finite
+                        SIMULATED-second latency, zero false alarms on
+                        the healthy baseline, critical-path attribution
+                        conserving measured TTFT/TPOT, byte-
+                        deterministic round-tripping debug bundles
 
 Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_reconfig.json`` (reconfigure + migration),
@@ -44,14 +51,19 @@ Machine-readable artifacts: the serving benchmarks also write
 ``benchmarks/BENCH_planner.json`` (planner-vs-threshold contract),
 ``benchmarks/BENCH_paged.json`` (paged-pool saturation contract),
 ``benchmarks/BENCH_scale.json`` (scale-replay + calibration contract),
-``benchmarks/BENCH_obs.json`` (flight-recorder overhead contract), and
-``benchmarks/BENCH_disagg.json`` (disaggregated-serving contract) —
+``benchmarks/BENCH_obs.json`` (flight-recorder overhead contract),
+``benchmarks/BENCH_disagg.json`` (disaggregated-serving contract), and
+``benchmarks/BENCH_watch.json`` (alerting + attribution contract) —
 each mirrored to the repo root — so the perf trajectory is tracked
 across PRs. CI produces them via
 
-    PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs disagg
+    PYTHONPATH=src:. python benchmarks/run.py --check --only reconfig migration elastic overlap planner paged scale obs disagg watch
 
-(``--only`` substring-matches bench function names; no flag runs all.)
+(``--only`` substring-matches bench function names; no flag runs all.
+``--check`` additionally gates the run against the COMMITTED
+``benchmarks/BENCH_*.json`` baselines: each artifact's curated metrics
+— see ``CHECK_TOLERANCES`` — must stay within per-metric tolerances of
+the baseline, and the process exits nonzero on any regression.)
 """
 from __future__ import annotations
 
@@ -95,7 +107,136 @@ ARTIFACT_FILES = {
     "scale": ("scale",),
     "obs": ("obs",),
     "disagg": ("disagg",),
+    "watch": ("watch",),
 }
+
+
+def _artifact_data(name: str):
+    """The JSON-able payload BENCH_<name>.json would hold right now
+    (None when the contributing benchmarks did not run)."""
+    keys = ARTIFACT_FILES[name]
+    if len(keys) == 1:
+        return ARTIFACTS.get(keys[0])
+    return {k: ARTIFACTS[k] for k in keys if k in ARTIFACTS} or None
+
+
+#: ``--check`` regression gates: artifact -> {dotted metric path ->
+#: tolerance}. Only SIMULATED/deterministic quantities and contract
+#: booleans are gated — wall-clock numbers vary run to run on shared
+#: boxes and would make the gate flaky. Tolerance kinds:
+#:   "truthy"        the new value must be truthy
+#:   "exact"         the new value must equal the committed baseline
+#:   ("le_rel", f)   new <= baseline * (1 + f)   (bounded worsening)
+#:   ("ge_rel", f)   new >= baseline * (1 - f)
+#:   ("le_abs", cap) new <= cap                  (fixed ceiling)
+#:   ("ge_abs", flo) new >= flo                  (fixed floor)
+CHECK_TOLERANCES = {
+    "obs": {
+        "contract.overhead_under_budget": "truthy",
+        "contract.trace_valid": "truthy",
+        "contract.identical_sim_results": "truthy",
+        "contract.no_event_drops": "truthy",
+        "requests": "exact",
+        "events_dropped": "exact",
+        "spans_dropped": "exact",
+    },
+    "watch": {
+        "contract.ok": "truthy",
+        "scenarios.healthy.n_alerts": "exact",
+        "scenarios.flash_crowd.detection_latency_s": ("le_rel", 0.5),
+        "scenarios.slowed_engine.detection_latency_s": ("le_rel", 0.5),
+        "scenarios.poisoned_calibration.detection_latency_s": ("le_rel", 0.5),
+        "attribution.conservation.ttft_max_rel_err": ("le_abs", 0.01),
+        "attribution.conservation.tpot_max_rel_err": ("le_abs", 0.01),
+        "bundles.byte_deterministic": "truthy",
+        "bundles.round_trip_ok": "truthy",
+    },
+    "scale": {
+        "contract.hundred_k_plus": "truthy",
+        "contract.zero_dropped": "truthy",
+        "contract.reports_finalized": "truthy",
+        "contract.calibrated_beats_analytical": "truthy",
+        "completed": "exact",
+        "dropped": "exact",
+        "downtime_max_s": ("le_abs", 0.05),
+    },
+    "disagg": {
+        "selected_disagg": "truthy",
+        "streams_identical": "truthy",
+        "replay_dropped": "exact",
+        "replay_completed": "exact",
+        "replay_attainment": ("ge_rel", 0.0),
+    },
+    "paged": {
+        "throughput_gain": ("ge_abs", 1.0),
+    },
+    "elastic": {
+        "downtime_s_max": ("le_abs", 0.05),
+    },
+    "overlap": {
+        "downtime_s": ("le_abs", 0.05),
+    },
+    "reconfig": {
+        "reconfigure.downtime_s": ("le_abs", 0.05),
+    },
+}
+
+
+def _dig(d, path: str):
+    """``_dig({"a": {"b": 1}}, "a.b") == 1``; None on any missing hop."""
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def _rule_ok(rule, new, old):
+    """Apply one CHECK_TOLERANCES rule; returns ``(ok, detail)``."""
+    if rule == "truthy":
+        return bool(new), f"expected truthy, got {new!r}"
+    if rule == "exact":
+        return new == old, f"expected baseline {old!r}, got {new!r}"
+    kind, bound = rule
+    if not isinstance(new, (int, float)) or isinstance(new, bool):
+        return False, f"non-numeric value {new!r}"
+    if kind == "le_abs":
+        return new <= bound, f"{new} exceeds ceiling {bound}"
+    if kind == "ge_abs":
+        return new >= bound, f"{new} below floor {bound}"
+    if not isinstance(old, (int, float)) or isinstance(old, bool):
+        return False, f"non-numeric baseline {old!r}"
+    if kind == "le_rel":
+        return (new <= old * (1.0 + bound) + 1e-12,
+                f"{new} regressed past baseline {old} (+{bound:.0%})")
+    if kind == "ge_rel":
+        return (new >= old * (1.0 - bound) - 1e-12,
+                f"{new} regressed below baseline {old} (-{bound:.0%})")
+    raise ValueError(f"unknown tolerance rule {rule!r}")
+
+
+def _check_regressions(baselines: dict) -> list:
+    """Compare this run's artifacts against the committed baselines
+    snapshotted at startup; returns the list of failure strings."""
+    failures = []
+    for name, rules in CHECK_TOLERANCES.items():
+        produced = _artifact_data(name)
+        if produced is None:
+            continue                     # benchmark didn't run (--only)
+        base = baselines.get(name)
+        if base is None:
+            emit(f"_check_{name}", "skipped", "no committed baseline")
+            continue
+        bad = 0
+        for path, rule in rules.items():
+            ok, detail = _rule_ok(rule, _dig(produced, path),
+                                  _dig(base, path))
+            if not ok:
+                bad += 1
+                failures.append(f"{name}:{path}: {detail}")
+        emit(f"_check_{name}", "ok" if not bad else f"{bad} FAILED",
+             f"{len(rules)} gated metrics")
+    return failures
 
 
 def _write_artifacts() -> None:
@@ -103,11 +244,8 @@ def _write_artifacts() -> None:
     (partial runs write partial artifacts). Each artifact is mirrored to
     the REPO ROOT as well as benchmarks/, so the perf trajectory is
     visible at the top level of every PR diff."""
-    for name, keys in ARTIFACT_FILES.items():
-        if len(keys) == 1:
-            data = ARTIFACTS.get(keys[0])
-        else:
-            data = {k: ARTIFACTS[k] for k in keys if k in ARTIFACTS} or None
+    for name in ARTIFACT_FILES:
+        data = _artifact_data(name)
         if data is None:
             continue
         text = json.dumps(_jsonable(data), indent=2) + "\n"
@@ -332,6 +470,21 @@ def bench_disagg_serving() -> None:
     ARTIFACTS["disagg"] = bench(emit=emit)
 
 
+def bench_watchtower() -> None:
+    """Watchtower alerting + critical-path attribution: three injected
+    degradations (flash crowd past capacity, slowed engine, poisoned
+    calibration) must each raise the right alert with finite
+    SIMULATED-second detection latency, the healthy baseline must raise
+    none, per-request attribution must conserve measured TTFT/TPOT
+    within 1%, and captured debug bundles must be byte-deterministic
+    and round-trip their SLO accounting."""
+    try:
+        from benchmarks.watchtower import bench_watchtower as bench
+    except ImportError:
+        from watchtower import bench_watchtower as bench
+    ARTIFACTS["watch"] = bench(emit=emit)
+
+
 def bench_roofline_table() -> None:
     """Summarize the dry-run records (single-pod mesh) — §Roofline."""
     d = Path("experiments/dryrun")
@@ -387,6 +540,7 @@ BENCHES = [
     bench_scale_serving,
     bench_obs_overhead,
     bench_disagg_serving,
+    bench_watchtower,
     bench_kernel_latency,
     bench_roofline_table,
 ]
@@ -396,8 +550,24 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--only", nargs="*", default=None, metavar="SUBSTR",
                     help="run only benches whose function name contains "
-                         "any of these substrings (e.g. reconfig elastic)")
+                         "any of these substrings; current suites: "
+                         "table7 fig7 fig9 fig11 failure reconfig "
+                         "migration elastic overlap planner paged scale "
+                         "obs disagg watch kernel roofline")
+    ap.add_argument("--check", action="store_true",
+                    help="after running, gate this run's artifacts "
+                         "against the committed benchmarks/BENCH_*.json "
+                         "baselines (per-metric tolerances, see "
+                         "CHECK_TOLERANCES); exits 1 on any regression")
     args = ap.parse_args(argv)
+    baselines = {}
+    if args.check:
+        # snapshot the committed baselines BEFORE _write_artifacts
+        # overwrites them with this run's numbers
+        for name in CHECK_TOLERANCES:
+            p = ART_DIR / f"BENCH_{name}.json"
+            if p.exists():
+                baselines[name] = json.loads(p.read_text())
     benches = BENCHES if not args.only else [
         b for b in BENCHES
         if any(s in b.__name__ for s in args.only)]
@@ -407,6 +577,12 @@ def main(argv=None) -> None:
         b()
         emit(f"_bench_{b.__name__}_wall_s", round(time.time() - t0, 2))
     _write_artifacts()
+    if args.check:
+        failures = _check_regressions(baselines)
+        for f in failures:
+            print(f"CHECK FAIL: {f}")
+        if failures:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,12 @@ This script scans ``src/repro/serving`` and ``src/repro/obs`` for:
     migration pause (it mentions ``handoff`` or ``pause_s``) MUST be
     registered, whether or not it imports ``time`` today — a pause
     stamped off the wall clock would corrupt every simulated replay's
-    downtime/SLO ledger.
+    downtime/SLO ledger;
+  * the Watchtower layer specifically: ``repro/obs/lineage.py`` and
+    ``repro/obs/alerts.py`` MUST exist and be registered — attribution
+    timestamps and alert/burn-rate timestamps compared against
+    event-stream timestamps from a DIFFERENT clock would silently
+    corrupt detection latencies and conservation checks.
 
 Exit status 1 (CI fails) on any violation. Wired into scripts/ci.sh and
 ``make lint``.
@@ -44,6 +49,15 @@ DATETIME_RE = re.compile(
 # modules on the migration/handoff pause-stamping hot path: anything
 # mentioning the first-token handoff or a migration pause stamp
 HANDOFF_RE = re.compile(r"\bhandoff\b|\bpause_s\b")
+#: modules that must BOTH exist and be clock-registered: the Watchtower
+#: layer stamps attribution/alert times that are compared against
+#: event-stream timestamps, so a missing registration (or a renamed
+#: file silently dropping out of the scan) is a correctness bug
+REQUIRED_CLOCKED = (
+    "repro/obs/events.py",
+    "repro/obs/lineage.py",
+    "repro/obs/alerts.py",
+)
 
 
 def clocked_modules() -> set:
@@ -60,6 +74,21 @@ def module_name(path: pathlib.Path) -> str:
 def main() -> int:
     registered = clocked_modules()
     violations = []
+    for rel in REQUIRED_CLOCKED:
+        path = SRC / rel
+        if not path.exists():
+            violations.append(
+                f"{rel}: required clock-disciplined module is missing "
+                "(the Watchtower layer depends on it)")
+            continue
+        mod = module_name(path)
+        if mod not in registered:
+            violations.append(
+                f"{rel}: {mod!r} must be registered in "
+                "repro.serving.clock.CLOCKED_MODULE_NAMES — its "
+                "timestamps are compared against event-stream "
+                "timestamps, so an unswapped clock silently corrupts "
+                "attribution and alert latencies in simulated replays")
     for d in SCANNED_DIRS:
         for path in sorted((SRC / d).rglob("*.py")):
             rel = path.relative_to(SRC).as_posix()

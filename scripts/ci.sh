@@ -17,6 +17,7 @@ echo "== docs: execute the embedded examples (they must not rot) =="
 python scripts/run_doc_examples.py
 
 echo "== serving benchmarks: perf-trajectory artifacts (BENCH_*.json) =="
-PYTHONPATH=src:. python benchmarks/run.py --only reconfig migration elastic overlap planner paged scale obs disagg
+echo "==   --check gates curated metrics against the committed baselines =="
+PYTHONPATH=src:. python benchmarks/run.py --check --only reconfig migration elastic overlap planner paged scale obs disagg watch
 
 echo "CI OK"

@@ -14,6 +14,15 @@ Four pieces behind one handle (`Recorder`):
                 windowed per-label attainment and an exact "who paid
                 this pause" breakdown.
 
+Plus the Watchtower layer on top (PR 10):
+
+    lineage.py  per-request critical-path attribution — `RequestLineage`
+                decomposes measured TTFT/TPOT into named components with
+                a conservation check and Chrome flow events;
+    alerts.py   `AlertEvaluator` — multi-window SLO burn-rate rules,
+                estimator-drift alarms, liveness watchdogs, and
+                deterministic debug bundles on every fired alert.
+
 Recording is opt-in and zero-overhead when off: the serving stack
 guards every hook with ``RECORDER is None``. Enable with::
 
@@ -24,6 +33,14 @@ guards every hook with ``RECORDER is None``. Enable with::
 
 See docs/observability.md for the event taxonomy and span hierarchy.
 """
+from repro.obs.alerts import (
+    Alert,
+    AlertEvaluator,
+    BurnRateRule,
+    bundle_events,
+    load_bundle,
+    replay_ledger,
+)
 from repro.obs.events import (
     Event,
     EventBus,
@@ -40,6 +57,12 @@ from repro.obs.metrics import (
     MetricsRegistry,
     RequestAggregate,
 )
+from repro.obs.lineage import (
+    TPOT_COMPONENTS,
+    TTFT_COMPONENTS,
+    RequestLineage,
+    RequestTimeline,
+)
 from repro.obs.slo import PauseAccount, SLOLedger, WindowAttainment, meets_slo
 from repro.obs.trace import (
     Span,
@@ -50,8 +73,12 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "Alert", "AlertEvaluator", "BurnRateRule", "bundle_events",
+    "load_bundle", "replay_ledger",
     "Event", "EventBus", "Recorder", "get_recorder", "install_recorder",
     "now", "recording",
+    "RequestLineage", "RequestTimeline",
+    "TTFT_COMPONENTS", "TPOT_COMPONENTS",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "RequestAggregate",
     "PauseAccount", "SLOLedger", "WindowAttainment", "meets_slo",
     "Span", "TraceBuffer", "export_chrome", "overlaps", "validate_chrome",

@@ -205,10 +205,12 @@ class Recorder:
         self.trace.add(Span(name, ts, max(0.0, dur), track, cat, args))
 
     # -- export --------------------------------------------------------
-    def export_chrome(self, path: Optional[str] = None) -> Dict[str, Any]:
+    def export_chrome(self, path: Optional[str] = None,
+                      flows: Any = ()) -> Dict[str, Any]:
         """Chrome ``trace_event`` JSON of every recorded span (load in
-        Perfetto / chrome://tracing)."""
-        return export_chrome(self.trace.spans(), path)
+        Perfetto / chrome://tracing); pass `RequestLineage.chrome_flows`
+        output as ``flows`` to stitch cross-engine request paths."""
+        return export_chrome(self.trace.spans(), path, flows=flows)
 
     def snapshot(self) -> Dict[str, Any]:
         """One JSON-able status dict: metrics + recorder health."""

@@ -99,7 +99,8 @@ class TraceBuffer:
 
 
 def export_chrome(spans: Sequence[Span],
-                  path: Optional[str] = None) -> Dict[str, Any]:
+                  path: Optional[str] = None,
+                  flows: Sequence[Dict[str, Any]] = ()) -> Dict[str, Any]:
     """Render spans as a Chrome ``trace_event`` JSON document.
 
     Tracks are assigned ``tid``s in sorted-name order (deterministic:
@@ -109,11 +110,17 @@ def export_chrome(spans: Sequence[Span],
     Args:
         spans: the spans to export (any order; emitted as-is).
         path: when given, the document is also written there.
+        flows: flow-event specs — dicts with ``name``, ``id``, ``ph``
+            (``"s"`` start / ``"f"`` finish), ``track``, ``ts``
+            (seconds) — e.g. `repro.obs.lineage.RequestLineage
+            .chrome_flows`; Perfetto draws them as arrows between
+            lanes (a request's cross-engine handoff/migration path).
 
     Returns:
         The trace document (``{"traceEvents": [...], ...}``).
     """
-    tids = {t: i + 1 for i, t in enumerate(sorted({s.track for s in spans}))}
+    tracks = {s.track for s in spans} | {f["track"] for f in flows}
+    tids = {t: i + 1 for i, t in enumerate(sorted(tracks))}
     events: List[Dict[str, Any]] = [
         {"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
          "args": {"name": track}}
@@ -123,6 +130,13 @@ def export_chrome(spans: Sequence[Span],
                        "ts": s.ts * 1e6, "dur": s.dur * 1e6,
                        "pid": 1, "tid": tids[s.track],
                        "args": dict(s.args)})
+    for f in flows:
+        ev = {"name": f["name"], "cat": "flow", "ph": f["ph"],
+              "id": int(f["id"]), "ts": float(f["ts"]) * 1e6,
+              "pid": 1, "tid": tids[f["track"]]}
+        if f["ph"] == "f":
+            ev["bp"] = "e"     # bind to the enclosing slice's end
+        events.append(ev)
     doc = {"traceEvents": events, "displayTimeUnit": "ms"}
     if path is not None:
         with open(path, "w") as f:
@@ -152,4 +166,9 @@ def validate_chrome(doc: Dict[str, Any]) -> int:
                 raise ValueError(f"complete event needs numeric ts/dur: {ev}")
             if ev["dur"] < 0:
                 raise ValueError(f"negative duration: {ev}")
+        elif ev["ph"] in ("s", "t", "f"):
+            if "id" not in ev:
+                raise ValueError(f"flow event missing 'id': {ev}")
+            if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < 0:
+                raise ValueError(f"flow event needs numeric ts: {ev}")
     return n

@@ -765,3 +765,17 @@ class WorkloadPlanner:
         its tick loop so events/trajectory are recorded uniformly.)"""
         return self.execute(self.plan(self.forecast(tracker)),
                             async_spawn=async_spawn)
+
+    def mandatory_fix(self, label: str, reason: str = "") -> None:
+        """Watchtower hook: a fired alert (SLO burn, estimator drift,
+        starvation) overrides hold-still hysteresis so the NEXT planning
+        round may act immediately — the dwell-round and dwell-clock
+        gates are cleared. The plan itself is unchanged: if the search
+        already considers the current configuration best, nothing
+        executes (an alert is evidence the envelope broke, not an order
+        to thrash)."""
+        self._since_exec = max(self._since_exec, self.dwell + 1)
+        self._last_exec_t = None
+        rec = obs_events.RECORDER
+        if rec is not None:
+            rec.emit("planner.mandatory_fix", label=label, reason=reason)

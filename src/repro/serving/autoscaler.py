@@ -208,6 +208,14 @@ class ElasticPolicy:
         # conflict and further spawns cannot help
         self._floor_probe: Dict[str, Tuple[int, int]] = {}
 
+    def clear_cooldown(self, label: str) -> None:
+        """Watchtower hook: drop ``label``'s post-action cooldown (and
+        its sustain counters' inertia) so the next `decide` may act
+        immediately. The decision rules themselves are unchanged —
+        clearing hysteresis never forces an action, it only stops the
+        policy from sitting out a confirmed incident."""
+        self._cooldown.pop(label, None)
+
     # -- helpers -------------------------------------------------------
     def _dedicated_idle(self, cluster: ServingCluster, label: str,
                         claimed: set) -> List[str]:
@@ -646,6 +654,21 @@ class Autoscaler:
                          action=d.kind, mode=d.mode, reason=d.reason,
                          mode_planner=self.planner is not None)
         return executed
+
+    def mandatory_fix(self, label: str, reason: str = "") -> None:
+        """Watchtower hook: a fired alert clears ``label``'s scaling
+        hysteresis — the policy cooldown and any spawn backoff — so the
+        next tick may react at once instead of waiting out timers meant
+        for steady-state flap damping. In planner mode the planner's own
+        dwell gates are cleared too (`WorkloadPlanner.mandatory_fix`)."""
+        if hasattr(self.policy, "clear_cooldown"):
+            self.policy.clear_cooldown(label)
+        self._spawn_backoff.pop(label, None)
+        if self.planner is not None:
+            self.planner.mandatory_fix(label, reason=reason)
+        rec = obs_events.RECORDER
+        if rec is not None:
+            rec.emit("scale.mandatory_fix", label=label, reason=reason)
 
     def _tick_planner(self) -> List[ScaleDecision]:
         """One planner-mode iteration: forecast -> plan -> execute, with

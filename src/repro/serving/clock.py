@@ -108,6 +108,8 @@ CLOCKED_MODULE_NAMES = (
     "repro.serving.migration",
     "repro.serving.prepare",
     "repro.obs.events",
+    "repro.obs.lineage",
+    "repro.obs.alerts",
 )
 
 

@@ -198,6 +198,9 @@ class ServingCluster:
     """
 
     ROUTE_KEY = "data-type"   # the label routing constraints key on
+    #: pseudo-label under which `metrics_by_label` surfaces the flight
+    #: recorder's ring health (drop counters) when recording is active
+    OBS_LABEL = "obs:recorder"
     # retention cap on completions of retired engines: under continuous
     # spawn/retire churn the raw request list would otherwise grow with
     # total traffic ever served; beyond the cap the oldest completions
@@ -887,9 +890,22 @@ class ServingCluster:
         with self._lock:
             self._fold_completions_locked()
             labels = self._known_labels(extra_labels) | set(self._label_folds)
-            return {v: (self._label_folds[v].metrics()
-                        if v in self._label_folds else compute_metrics([]))
-                    for v in labels}
+            out = {v: (self._label_folds[v].metrics()
+                       if v in self._label_folds else compute_metrics([]))
+                   for v in labels}
+        # recorder ring health rides along under a pseudo-label (same
+        # pattern as the "role:<role>" keys): silent event/span drops
+        # would corrupt attribution and the SLO ledger, so they must be
+        # visible wherever per-label metrics are consumed
+        rec = obs_events.RECORDER
+        if rec is not None:
+            out[self.OBS_LABEL] = dict(
+                compute_metrics([]),
+                events_emitted=float(rec.bus.emitted),
+                events_dropped=float(rec.bus.dropped),
+                spans_added=float(rec.trace.added),
+                spans_dropped=float(rec.trace.dropped))
+        return out
 
     def drain_completed(self) -> List[Request]:
         """Pop and return every retained completed request (live engines'

@@ -632,6 +632,13 @@ class ServingEngine:
             slot = self._free_slot()
             if slot is None:
                 return
+            # attribution stamps: NON-advancing reads on the recording
+            # clock (obs_events.now), so lineage's admission/prefill
+            # split never perturbs a simulated run — under a FakeClock
+            # both components are exactly 0 and queue wait carries the
+            # simulated story; under the wall clock they are real.
+            rec = obs_events.RECORDER
+            t_adm0 = obs_events.now() if rec is not None else 0.0
             pages: List[int] = []
             if self.paged:
                 head = self.queue[0]
@@ -665,15 +672,18 @@ class ServingEngine:
                 Sp = batch["tokens"].shape[1]
                 batch["positions"] = jnp.broadcast_to(
                     jnp.arange(Sp, dtype=jnp.int32)[None, None], (3, 1, Sp))
+            t_pre0 = obs_events.now() if rec is not None else 0.0
             logits, cache1 = prefill(self.params, batch)
             tok = int(jnp.argmax(logits[0, : self.vocab]))
+            t_pre1 = obs_events.now() if rec is not None else 0.0
             req.tokens_out.append(tok)
             req.t_first = time.time()
-            rec = obs_events.RECORDER
             if rec is not None:
                 rec.emit("request.admit", engine=self.obs_name, rid=req.rid,
                          label=req.labels.get("data-type", ""),
                          queue_wait_s=req.t_first - req.t_submit,
+                         admit_s=max(0.0, t_pre0 - t_adm0),
+                         prefill_s=max(0.0, t_pre1 - t_pre0),
                          role=self.role)
             if self.paged:
                 # scatter the single-sequence cache into the reserved

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import sys
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -169,7 +170,9 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
                  slo_targets: Optional[SLOTargets] = None,
                  steady_backlog: float = 1.0,
                  seed: int = 0,
-                 max_steps: Optional[int] = None) -> ReplayStats:
+                 max_steps: Optional[int] = None,
+                 alert_evaluator=None,
+                 step_time_fn=None) -> ReplayStats:
     """Replay ``trace`` through ``cluster``/``scaler`` on ``clock``.
 
     Args:
@@ -207,6 +210,15 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
         seed: PRNG seed for prompt-token materialization.
         max_steps: decode-step budget (a wedged replay raises instead
             of spinning); default scales with the trace.
+        alert_evaluator: optional `repro.obs.alerts.AlertEvaluator` —
+            polled at every control tick and fed each measurement
+            window's calibrated-prediction/measurement pair (the
+            estimator-drift signal). Purely observational: under a
+            FakeClock an evaluated replay is bit-identical to an
+            unevaluated one.
+        step_time_fn: optional ``t -> seconds`` override of
+            ``step_time_s`` (degradation injection: a slowed engine is
+            a step that starts taking longer at some simulated time).
 
     Returns:
         The `ReplayStats`; ``dropped`` counts fail-closed routing
@@ -321,6 +333,13 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
                 if pc is not None:
                     rec.calibrated_ttft_s = pc.ttft_s
                     rec.calibrated_tpot_s = pc.tpot_s
+                    if alert_evaluator is not None:
+                        alert_evaluator.observe_prediction(
+                            label,
+                            predicted_ttft_s=pc.ttft_s,
+                            predicted_tpot_s=pc.tpot_s,
+                            measured_ttft_s=rec.measured_ttft_s,
+                            measured_tpot_s=rec.measured_tpot_s)
                 if steady:
                     planner.observe_measurement(
                         label, d, measured_ttft_s=rec.measured_ttft_s,
@@ -348,7 +367,12 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
             # charge the step's cost FIRST: tokens (and their TTFT/TPOT
             # stamps) arrive at the END of the step window, and arrivals
             # inside the window wait for the next admission boundary
-            sync(t + step_time_s)
+            dt_step = step_time_s if step_time_fn is None \
+                else float(step_time_fn(t))
+            if dt_step <= 0:
+                raise ValueError(
+                    f"step_time_fn({t}) must be positive, got {dt_step}")
+            sync(t + dt_step)
             cluster.step()
             steps += 1
         else:
@@ -359,6 +383,8 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
             sync(max(t, min(jump, next_tick)))
         while t >= next_tick - 1e-9:
             scaler.tick(tick_s)
+            if alert_evaluator is not None:
+                alert_evaluator.poll()
             ticks += 1
             next_tick += tick_s
             peak_engines = max(peak_engines, len(cluster.engines()))
@@ -370,6 +396,8 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
 
     cluster.run()                     # reap draining engines
     measure(t)                        # final partial window
+    if alert_evaluator is not None:
+        alert_evaluator.poll()        # ingest the tail of the run
 
     per_label: Dict[str, Dict[str, float]] = {}
     attainment: Dict[str, float] = {}
@@ -410,7 +438,11 @@ def replay_trace(trace: List[TraceRequest], cluster: ServingCluster,
 
 def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
                     step_time_s: float = 4e-3, seed: int = 11,
-                    recorder=None, timings: Optional[Dict[str, float]] = None):
+                    recorder=None, timings: Optional[Dict[str, float]] = None,
+                    alert_evaluator_factory=None,
+                    step_time_fn=None,
+                    bounds: Tuple[int, int] = (1, 4),
+                    flash_multiplier: float = 3.0):
     """Build a compact full stack (planner + autoscaler + cluster on a
     `FakeClock`), replay a generated trace with the flight recorder ON,
     and return ``(stats, recorder, planner)``.
@@ -435,6 +467,18 @@ def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
             alone (model build + AOT compile excluded) — the overhead
             benchmark compares recorded vs unrecorded on this number so
             compile-time noise cannot masquerade as recorder cost.
+        alert_evaluator_factory: optional ``(recorder, planner, scaler)
+            -> AlertEvaluator`` callable; the result is polled through
+            the replay (see `replay_trace`). The factory sees the fully
+            built stack, so it can wire the evaluator's mandatory-fix
+            hooks and calibration; keep a reference in a closure to
+            inspect the alerts afterwards.
+        step_time_fn: forwarded to `replay_trace` (degradation
+            injection).
+        bounds: per-label (min, max) engine bounds — tighten the max to
+            build an over-capacity scenario the planner cannot absorb.
+        flash_multiplier: the built-in phi flash crowd's rate multiple
+            (t in [duration/3, duration/2)); raise it to overload.
     """
     import contextlib
     import dataclasses as _dc
@@ -485,7 +529,8 @@ def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
         diurnal_period_s=duration_s / 2,
         flash_crowds=(FlashCrowd(t_start=duration_s / 3,
                                  duration_s=duration_s / 6,
-                                 multiplier=3.0, label="phi"),),
+                                 multiplier=flash_multiplier,
+                                 label="phi"),),
         seed=seed)
 
     if recorder is False:
@@ -504,7 +549,7 @@ def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
                                       dwell=0, calibration=calibration,
                                       clock=clock)
             for label in ("phi", "gen"):
-                planner.bounds[label] = (1, 4)
+                planner.bounds[label] = tuple(bounds)
                 planner.set_slo_target(label, 50 * step_time_s,
                                        2 * step_time_s)
             scaler = Autoscaler(cluster,
@@ -515,6 +560,8 @@ def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
             planner.execute(planner.plan({}), async_spawn=False)  # floors
             planner.attach_calibrated_profiles()
             trace = generate_trace(pattern)
+            evaluator = (alert_evaluator_factory(rec, planner, scaler)
+                         if alert_evaluator_factory is not None else None)
             # real wall clock on purpose: this module is not registered
             # for clock injection, so `wall` is untouched by install_clock
             import time as wall
@@ -522,7 +569,9 @@ def recorded_replay(n_requests: int = 2000, *, arch: str = "minitron_4b",
             stats = replay_trace(trace, cluster, scaler, clock,
                                  vocab_size=cfg.vocab_size,
                                  step_time_s=step_time_s, tick_s=1.0,
-                                 window_ticks=4, seed=1)
+                                 window_ticks=4, seed=1,
+                                 alert_evaluator=evaluator,
+                                 step_time_fn=step_time_fn)
             if timings is not None:
                 timings["replay_wall_s"] = wall.perf_counter() - t_loop
     finally:
@@ -537,9 +586,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             --requests 2000 --trace-out run.trace.json
 
     ``--trace-out`` dumps a Chrome ``trace_event`` JSON of the whole
-    simulated run — open it in Perfetto (https://ui.perfetto.dev) or
-    chrome://tracing. ``--slo-out`` dumps the `repro.obs.SLOLedger`
-    accounting (windowed per-label attainment + pause attribution).
+    simulated run (with per-request cross-engine flow arrows) — open it
+    in Perfetto (https://ui.perfetto.dev) or chrome://tracing.
+    ``--slo-out`` dumps the `repro.obs.SLOLedger` accounting (windowed
+    per-label attainment + pause attribution). ``--alerts-out`` runs the
+    Watchtower `repro.obs.AlertEvaluator` through the replay and dumps
+    every fired alert; ``--bundle-dir`` additionally captures a debug
+    bundle per alert. Recorder ring drops are warned about always and
+    fail the run under ``--strict-obs`` (dropped events corrupt
+    attribution silently otherwise).
     """
     import argparse
     import json
@@ -557,21 +612,57 @@ def main(argv: Optional[List[str]] = None) -> int:
                              "trace_event JSON here")
     parser.add_argument("--slo-out", default="",
                         help="write the SLO/downtime ledger JSON here")
+    parser.add_argument("--alerts-out", default="",
+                        help="run the Watchtower AlertEvaluator and "
+                             "write fired alerts (JSON) here")
+    parser.add_argument("--bundle-dir", default="",
+                        help="capture a debug bundle per fired alert "
+                             "into this directory (implies alerting)")
+    parser.add_argument("--strict-obs", action="store_true",
+                        help="exit nonzero when the recorder dropped "
+                             "events or spans (ring overflow)")
     args = parser.parse_args(argv)
+
+    holder: Dict[str, object] = {}
+    factory = None
+    if args.alerts_out or args.bundle_dir:
+        from repro.obs import AlertEvaluator
+
+        def factory(rec_, planner_, scaler_):
+            ev = AlertEvaluator(
+                rec_, policy=planner_, calibration=planner_.calibration,
+                planner=planner_, scaler=scaler_,
+                bundle_dir=args.bundle_dir or None)
+            holder["evaluator"] = ev
+            return ev
 
     stats, rec, planner = recorded_replay(
         args.requests, arch=args.arch, step_time_s=args.step_time_s,
-        seed=args.seed)
+        seed=args.seed, alert_evaluator_factory=factory)
     print(f"replayed {stats.submitted} requests "
           f"({stats.completed} completed, {stats.dropped} dropped) over "
           f"{stats.duration_s:.1f} simulated seconds in {stats.steps} steps")
     print(f"recorded {rec.bus.emitted} events "
           f"({rec.bus.dropped} dropped), {rec.trace.added} spans")
+    obs_drops = rec.bus.dropped + rec.trace.dropped
+    if obs_drops:
+        print(f"WARNING: recorder dropped {rec.bus.dropped} events and "
+              f"{rec.trace.dropped} spans (ring overflow) — attribution "
+              "and SLO windows are incomplete; raise Recorder capacity",
+              file=sys.stderr)
+    if args.trace_out or args.slo_out:
+        from repro.obs import RequestLineage
+        lineage = RequestLineage.from_recorder(rec)
     if args.trace_out:
-        doc = rec.export_chrome(args.trace_out)
+        doc = rec.export_chrome(args.trace_out,
+                                flows=lineage.chrome_flows())
+        cons = lineage.conservation()
+        worst = max(cons["ttft_max_rel_err"], cons["tpot_max_rel_err"])
         print(f"wrote {args.trace_out}: "
               f"{sum(1 for e in doc['traceEvents'] if e['ph'] == 'X')} "
-              "trace events (open in Perfetto / chrome://tracing)")
+              "trace events (open in Perfetto / chrome://tracing); "
+              f"attributed {len(lineage)} requests, max conservation "
+              f"error {worst:.2e}")
     if args.slo_out:
         from repro.obs import SLOLedger
         ledger = SLOLedger.from_policy(planner).consume(rec.events())
@@ -579,6 +670,19 @@ def main(argv: Optional[List[str]] = None) -> int:
             json.dump(ledger.as_dict(), f, indent=1)
         print(f"wrote {args.slo_out}: attainment "
               f"{ledger.attainment_overall()}")
+    if args.alerts_out or args.bundle_dir:
+        evaluator = holder["evaluator"]
+        alerts = evaluator.as_dicts()
+        if args.alerts_out:
+            with open(args.alerts_out, "w") as f:
+                json.dump(alerts, f, indent=1, sort_keys=True)
+            print(f"wrote {args.alerts_out}: {len(alerts)} alerts")
+        for a in alerts:
+            print(f"  ALERT {a['name']} [{a['severity']}] "
+                  f"{a['label'] or a['engine']}: {a['message']}")
+    if args.strict_obs and obs_drops:
+        print("--strict-obs: failing on recorder drops", file=sys.stderr)
+        return 1
     return 0
 
 

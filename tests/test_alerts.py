@@ -1,0 +1,244 @@
+"""Unit tests for `repro.obs.alerts` — the Watchtower evaluator driven
+by synthetic event streams (the full-stack detection-latency contracts
+live in benchmarks/watchtower.py).
+
+Covers: multi-window burn-rate semantics (both windows must agree, no
+traffic is not a violation, re-fire after clearing), drop / stuck-
+PREPARE / starved-label watchdogs, estimator-drift warm-up gating and
+excursion dedup, fail-closed rule errors, mandatory-fix wiring, and
+debug-bundle determinism + round-trip.
+"""
+import dataclasses
+
+import pytest
+
+from repro.obs import (
+    Alert,
+    AlertEvaluator,
+    BurnRateRule,
+    Recorder,
+    bundle_events,
+    load_bundle,
+    replay_ledger,
+)
+
+TARGETS = {"phi": (0.1, None)}
+
+
+def _complete(rec, ts, ttft_s, label="phi", rid=0):
+    rec.bus.emit("request.complete", engine="e0", rid=rid, label=label,
+                 ts=ts, ttft_s=ttft_s, tpot_s=0.01, tokens_out=4)
+
+
+def _violations(rec, t0, t1, ttft_s=1.0, per_s=4):
+    for i in range(int((t1 - t0) * per_s)):
+        _complete(rec, t0 + i / per_s, ttft_s, rid=1000 + i)
+
+
+def test_burn_rate_needs_both_windows():
+    rec = Recorder()
+    ev = AlertEvaluator(rec, slo_targets=TARGETS,
+                        burn=BurnRateRule(goal=0.9, short_s=2.0,
+                                          long_s=8.0, factor=4.0))
+    # violations confined to the last 1s: short window burns hot, but
+    # the long window has 8s of mostly-good evidence -> no page
+    for i in range(28):
+        _complete(rec, 100.0 + i * 0.25, 0.01, rid=i)       # 7s healthy
+    _violations(rec, 107.0, 108.0)
+    assert ev.poll(t=108.0) == []
+    # sustained violations: both windows over budget -> one page
+    _violations(rec, 108.0, 112.0)
+    fired = ev.poll(t=112.0)
+    assert [a.name for a in fired] == ["slo.burn_rate"]
+    assert fired[0].label == "phi" and fired[0].severity == "page"
+    # same ongoing condition: no duplicate
+    assert ev.poll(t=112.5) == []
+
+
+def test_burn_rate_no_traffic_is_not_a_violation():
+    rec = Recorder()
+    ev = AlertEvaluator(rec, slo_targets=TARGETS)
+    assert ev.poll(t=50.0) == []                  # nothing scored: None
+    assert ev.alerts == []
+
+
+def test_burn_rate_refires_after_clearing():
+    rec = Recorder()
+    ev = AlertEvaluator(rec, slo_targets=TARGETS,
+                        burn=BurnRateRule(short_s=2.0, long_s=4.0))
+    _violations(rec, 100.0, 104.0)
+    assert len(ev.poll(t=104.0)) == 1
+    # incident ends; trailing windows go clean -> condition clears
+    for i in range(32):
+        _complete(rec, 104.0 + i * 0.25, 0.01, rid=2000 + i)
+    assert ev.poll(t=112.0) == []
+    # second incident -> fires again (new onset)
+    _violations(rec, 112.0, 116.0)
+    assert [a.name for a in ev.poll(t=116.0)] == ["slo.burn_rate"]
+    assert sum(a.name == "slo.burn_rate" for a in ev.alerts) == 2
+
+
+def test_drops_watchdog_fires_once():
+    rec = Recorder(capacity=4)
+    ev = AlertEvaluator(rec, slo_targets=TARGETS)
+    for i in range(10):
+        rec.bus.emit("request.submit", rid=i, label="phi", ts=float(i))
+    fired = ev.poll(t=10.0)
+    assert [a.name for a in fired] == ["obs.drops"]
+    assert fired[0].severity == "warn" and fired[0].value == 6.0
+    # the counter is monotone: the same degradation never re-pages
+    rec.bus.emit("request.submit", rid=99, label="phi", ts=11.0)
+    assert ev.poll(t=11.0) == []
+
+
+def test_stuck_prepare_watchdog():
+    rec = Recorder()
+    ev = AlertEvaluator(rec, slo_targets=TARGETS, stuck_prepare_s=10.0)
+    rec.bus.emit("ticket.preparing", engine="e1", ts=100.0)
+    assert ev.poll(t=105.0) == []                 # young ticket: fine
+    fired = ev.poll(t=111.0)
+    assert [a.name for a in fired] == ["prepare.stuck"]
+    assert fired[0].engine == "e1"
+    rec.bus.emit("ticket.swapped", engine="e1", ts=112.0)
+    assert ev.poll(t=130.0) == []                 # terminal: cleared
+
+
+def test_starved_label_watchdog_and_mandatory_fix():
+    calls = []
+
+    class Stub:
+        def mandatory_fix(self, label, reason=""):
+            calls.append((label, reason))
+
+    rec = Recorder()
+    ev = AlertEvaluator(rec, slo_targets=TARGETS, starve_s=10.0,
+                        planner=Stub(), scaler=Stub())
+    rec.bus.emit("request.submit", rid=1, label="phi", ts=100.0)
+    assert ev.poll(t=105.0) == []
+    fired = ev.poll(t=111.0)
+    assert [a.name for a in fired] == ["label.starved"]
+    # labeled page alerts drive BOTH mandatory-fix targets
+    assert calls == [("phi", "label.starved"), ("phi", "label.starved")]
+    # admission progress clears the condition
+    rec.bus.emit("request.admit", engine="e0", rid=1, label="phi",
+                 ts=112.0)
+    assert ev.poll(t=130.0) == []
+
+
+class _Cal:
+    """ResidualCalibration stand-in: fixed observation count + band."""
+
+    def __init__(self, n=5, ratio_cap=8.0):
+        self.n = n
+        self.ratio_cap = ratio_cap
+
+    def n_observations(self, label):
+        return self.n
+
+    def factors(self, label):
+        return (1.0, 1.0)
+
+
+def test_drift_respects_warmup_and_excursion_dedup():
+    rec = Recorder()
+    cold = AlertEvaluator(rec, slo_targets=TARGETS,
+                          calibration=_Cal(n=0))
+    assert cold.observe_prediction(
+        "phi", predicted_ttft_s=0.01, predicted_tpot_s=0.01,
+        measured_ttft_s=1.0, measured_tpot_s=1.0, t=1.0) is None
+
+    ev = AlertEvaluator(rec, slo_targets=TARGETS, calibration=_Cal())
+    assert ev.drift_band == 8.0                   # from ratio_cap
+    kw = dict(predicted_ttft_s=0.01, predicted_tpot_s=0.01,
+              measured_tpot_s=0.01)
+    a = ev.observe_prediction("phi", measured_ttft_s=0.5, t=2.0, **kw)
+    assert a is not None and a.name == "estimator.drift"
+    assert a.value == pytest.approx(50.0) and a.threshold == 8.0
+    # same excursion: deduplicated until the ratio returns to band
+    assert ev.observe_prediction("phi", measured_ttft_s=0.6, t=3.0,
+                                 **kw) is None
+    assert ev.observe_prediction("phi", measured_ttft_s=0.01, t=4.0,
+                                 **kw) is None    # back in band: clears
+    a2 = ev.observe_prediction("phi", measured_ttft_s=0.5, t=5.0, **kw)
+    assert a2 is not None                         # new excursion
+    # an under-prediction ratio (1/ratio) trips the same band
+    ev2 = AlertEvaluator(rec, slo_targets=TARGETS, calibration=_Cal())
+    a3 = ev2.observe_prediction(
+        "phi", predicted_ttft_s=1.0, predicted_tpot_s=1.0,
+        measured_ttft_s=0.05, measured_tpot_s=1.0, t=6.0)
+    assert a3 is not None and a3.value == pytest.approx(20.0)
+
+
+def test_drift_band_must_exceed_one():
+    with pytest.raises(ValueError):
+        AlertEvaluator(Recorder(), slo_targets=TARGETS, drift_band=1.0)
+
+
+def test_rule_crash_fails_closed_as_watchtower_error():
+    class Broken:
+        ratio_cap = 8.0
+
+        def n_observations(self, label):
+            raise RuntimeError("boom")
+
+    rec = Recorder()
+    ev = AlertEvaluator(rec, slo_targets=TARGETS, calibration=Broken())
+    a = ev.observe_prediction(
+        "phi", predicted_ttft_s=1.0, predicted_tpot_s=1.0,
+        measured_ttft_s=1.0, measured_tpot_s=1.0, t=1.0)
+    assert a is not None and a.name == "watchtower.error"
+    assert a.severity == "page" and "boom" in a.message
+
+
+def _bundled_evaluator(tmp_path, sub):
+    rec = Recorder()
+    _violations(rec, 100.0, 108.0)
+    ev = AlertEvaluator(rec, slo_targets=TARGETS,
+                        bundle_dir=str(tmp_path / sub))
+    fired = ev.poll(t=108.0)
+    assert len(fired) == 1 and fired[0].bundle
+    return rec, ev, fired[0]
+
+
+def test_bundles_are_byte_deterministic_and_round_trip(tmp_path):
+    rec, ev, alert = _bundled_evaluator(tmp_path, "a")
+    _, _, alert_b = _bundled_evaluator(tmp_path, "b")
+    with open(alert.bundle, "rb") as f:
+        blob_a = f.read()
+    with open(alert_b.bundle, "rb") as f:
+        blob_b = f.read()
+    assert blob_a == blob_b                       # identical runs
+    bundle = load_bundle(alert.bundle)
+    assert bundle["alert"]["name"] == "slo.burn_rate"
+    assert bundle_events(bundle) == list(rec.events())
+    # re-derived SLO accounting matches the live ledger's
+    led = replay_ledger(bundle)
+    assert led.attainment() == ev.ledger.attainment()
+    assert led.as_dict() == ev.ledger.as_dict()
+
+
+def test_load_bundle_rejects_foreign_json(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text('{"format": "something-else"}')
+    with pytest.raises(ValueError):
+        load_bundle(str(p))
+
+
+def test_bundle_capture_failure_does_not_lose_the_alert(tmp_path):
+    blocked = tmp_path / "blocked"
+    blocked.write_text("a file where a directory must go")
+    rec = Recorder()
+    _violations(rec, 100.0, 108.0)
+    ev = AlertEvaluator(rec, slo_targets=TARGETS,
+                        bundle_dir=str(blocked / "sub"))
+    fired = ev.poll(t=108.0)
+    assert len(fired) == 1
+    assert fired[0].bundle == ""
+    assert "bundle capture failed" in fired[0].message
+
+
+def test_as_dicts_and_alert_shape():
+    a = Alert("slo.burn_rate", "page", label="phi", t=1.0, value=10.0,
+              threshold=4.0, message="m")
+    d = dataclasses.asdict(a)
+    assert d["name"] == "slo.burn_rate" and d["bundle"] == ""

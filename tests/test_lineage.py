@@ -1,0 +1,193 @@
+"""Unit tests for `repro.obs.lineage` — per-request critical-path
+attribution assembled from synthetic event streams (no serving stack:
+the full-stack path is exercised by benchmarks/watchtower.py and the
+docs example).
+
+Covers: exact conservation on consistent streams, residual semantics
+(queue wait / decode compute), pre- vs post-admission handoff split,
+PREPARE-window overlap, partial-request exclusion, violation flagging,
+per-label critical-path aggregation, and Chrome flow stitching through
+`repro.obs.trace.export_chrome`.
+"""
+import json
+
+import pytest
+
+from repro.obs import (
+    Recorder,
+    RequestLineage,
+    TPOT_COMPONENTS,
+    TTFT_COMPONENTS,
+    validate_chrome,
+)
+from repro.obs.events import Event
+
+
+def _ev(seq, ts, kind, engine="e0", rid=0, label="phi", **data):
+    return Event(seq, ts, kind, engine, rid, label, data)
+
+
+def _basic_request(rid=7, t0=10.0, engine="e0"):
+    """A consistent submit/admit/complete triple: TTFT 0.5 (0.08
+    prefill + 0.02 admission + 0.4 queue), decode span 0.4 over 4
+    steps."""
+    return [
+        _ev(0, t0, "request.submit", engine, rid),
+        _ev(1, t0 + 0.5, "request.admit", engine, rid,
+            admit_s=0.02, prefill_s=0.08),
+        _ev(2, t0 + 0.9, "request.complete", engine, rid,
+            ttft_s=0.5, tpot_s=0.1, tokens_out=5),
+    ]
+
+
+def test_consistent_stream_conserves_exactly():
+    lin = RequestLineage.from_events(_basic_request())
+    assert len(lin) == 1 and not lin.partial_rids
+    tl = lin.get(7)
+    assert tl.ttft_parts["queue_wait"] == pytest.approx(0.4)
+    assert tl.ttft_parts["admission"] == pytest.approx(0.02)
+    assert tl.ttft_parts["prefill"] == pytest.approx(0.08)
+    assert sum(tl.ttft_parts.values()) == pytest.approx(tl.ttft_s)
+    assert tl.decode_steps == 4
+    assert tl.decode_span_s == pytest.approx(0.4)
+    assert tl.tpot_parts["decode"] == pytest.approx(0.4)
+    assert tl.ttft_error() < 1e-12 and tl.tpot_error() < 1e-12
+    assert tl.critical("ttft") == "queue_wait"
+    assert tl.critical("tpot") == "decode"
+    cons = lin.conservation()
+    assert cons["violations"] == []
+    assert cons["ttft_max_rel_err"] < 1e-12
+    assert set(tl.ttft_parts) == set(TTFT_COMPONENTS)
+    assert set(tl.tpot_parts) == set(TPOT_COMPONENTS)
+
+
+def test_post_admit_migration_pause_comes_out_of_decode():
+    events = _basic_request()
+    # a 0.05s migration pause mid-decode, landing the request on e1
+    events.insert(2, _ev(9, 10.7, "migration.pause", "e0", 7,
+                         pause_s=0.05, dst="e1", reason="retire"))
+    events[-1] = _ev(2, 10.9, "request.complete", "e1", 7,
+                     ttft_s=0.5, tpot_s=0.1, tokens_out=5)
+    tl = RequestLineage.from_events(events).get(7)
+    assert tl.tpot_parts["migration_pause"] == pytest.approx(0.05)
+    assert tl.tpot_parts["decode"] == pytest.approx(0.35)
+    assert tl.tpot_parts["handoff_pause"] == 0.0
+    assert tl.engines == ("e0", "e1")
+    assert tl.hops == ((pytest.approx(10.65), 10.7, "e0", "e1",
+                        "retire"),)
+    assert tl.tpot_error() < 1e-12
+
+
+def test_pre_admit_handoff_lands_in_ttft_not_decode():
+    rid, t0 = 3, 20.0
+    events = [
+        _ev(0, t0, "request.submit", "prefill0", rid),
+        # disaggregated first-token handoff BEFORE the decode admit
+        _ev(1, t0 + 0.3, "migration.pause", "prefill0", rid,
+            pause_s=0.04, dst="decode0", reason="handoff"),
+        _ev(2, t0 + 0.5, "request.admit", "decode0", rid),
+        _ev(3, t0 + 0.7, "request.complete", "decode0", rid,
+            ttft_s=0.5, tpot_s=0.1, tokens_out=3),
+    ]
+    tl = RequestLineage.from_events(events).get(rid)
+    assert tl.ttft_parts["handoff_pause"] == pytest.approx(0.04)
+    assert tl.ttft_parts["queue_wait"] == pytest.approx(0.46)
+    assert tl.tpot_parts["handoff_pause"] == 0.0      # never double
+    assert tl.engines == ("prefill0", "decode0")
+    assert tl.ttft_error() < 1e-12 and tl.tpot_error() < 1e-12
+
+
+def test_prepare_window_overlap_is_attributed():
+    events = _basic_request()
+    # a committed swap on the admitting engine, 0.1s of downtime fully
+    # inside the request's [submit, admit] interval
+    events.insert(1, _ev(9, 10.4, "cluster.swap", "e0", -1, "",
+                         downtime_s=0.1))
+    tl = RequestLineage.from_events(events).get(7)
+    assert tl.ttft_parts["prepare_wait"] == pytest.approx(0.1)
+    assert tl.ttft_parts["queue_wait"] == pytest.approx(0.3)
+    assert tl.ttft_error() < 1e-12
+    # a swap on a DIFFERENT engine attributes nothing
+    events[1] = _ev(9, 10.4, "cluster.swap", "other", -1, "",
+                    downtime_s=0.1)
+    tl = RequestLineage.from_events(events).get(7)
+    assert tl.ttft_parts["prepare_wait"] == 0.0
+
+
+def test_partial_requests_are_excluded_not_guessed():
+    events = _basic_request()
+    events.append(_ev(5, 11.0, "request.complete", "e0", 99,
+                      ttft_s=0.1, tpot_s=0.01, tokens_out=2))
+    lin = RequestLineage.from_events(events)
+    assert len(lin) == 1
+    assert lin.partial_rids == [99]
+    assert lin.get(99) is None
+    assert lin.conservation()["n_partial"] == 1
+
+
+def test_inconsistent_measurement_is_flagged():
+    events = _basic_request()
+    # engine claims a TTFT twice what the event stream supports
+    events[-1] = _ev(2, 10.9, "request.complete", "e0", 7,
+                     ttft_s=1.0, tpot_s=0.1, tokens_out=5)
+    cons = RequestLineage.from_events(events).conservation(eps=0.01)
+    assert cons["violations"] == [7]
+    assert cons["ttft_max_rel_err"] == pytest.approx(0.5)
+
+
+def test_critical_path_aggregates_per_label():
+    events = []
+    seq = 0
+    for i, (label, queue) in enumerate([("phi", 0.4), ("phi", 0.6),
+                                        ("gen", 0.01)]):
+        rid, t0 = 100 + i, 50.0 + i
+        events += [
+            _ev(seq, t0, "request.submit", "e0", rid, label),
+            _ev(seq + 1, t0 + queue + 0.08, "request.admit", "e0", rid,
+                label, prefill_s=0.08),
+            _ev(seq + 2, t0 + queue + 0.28, "request.complete", "e0",
+                rid, label, ttft_s=queue + 0.08, tpot_s=0.1,
+                tokens_out=3),
+        ]
+        seq += 3
+    cp = RequestLineage.from_events(events).critical_path()
+    assert cp["phi"]["n"] == 2 and cp["gen"]["n"] == 1
+    assert cp["phi"]["ttft"]["dominant_p99"] == "queue_wait"
+    assert cp["phi"]["ttft"]["p99"]["queue_wait"] == pytest.approx(0.6)
+    assert cp["gen"]["ttft"]["dominant_p99"] == "prefill"
+    assert cp["phi"]["tpot"]["dominant_p50"] == "decode"
+
+
+def test_chrome_flows_round_trip_through_export(tmp_path):
+    rec = Recorder()
+    with rec.span("decode", track="e0", rid=7) as _:
+        pass
+    with rec.span("decode", track="e1", rid=7) as _:
+        pass
+    events = _basic_request()
+    events.insert(2, _ev(9, 10.7, "migration.pause", "e0", 7,
+                         pause_s=0.05, dst="e1", reason="retire"))
+    events[-1] = _ev(2, 10.9, "request.complete", "e1", 7,
+                     ttft_s=0.5, tpot_s=0.1, tokens_out=5)
+    lin = RequestLineage.from_events(events)
+    flows = lin.chrome_flows()
+    assert [f["ph"] for f in flows] == ["s", "f"]
+    assert flows[0]["track"] == "e0" and flows[1]["track"] == "e1"
+    assert flows[0]["id"] == flows[1]["id"] == 7 * 16
+    path = tmp_path / "trace.json"
+    rec.export_chrome(str(path), flows=flows)
+    doc = json.loads(path.read_text())
+    assert validate_chrome(doc) > 0
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert {"s", "f"} <= phases
+
+
+def test_from_recorder_matches_from_events():
+    rec = Recorder()
+    for ev in _basic_request():
+        rec.bus.emit(ev.kind, engine=ev.engine, rid=ev.rid,
+                     label=ev.label, ts=ev.ts, **ev.data)
+    a = RequestLineage.from_recorder(rec)
+    b = RequestLineage.from_events(rec.events())
+    assert len(a) == len(b) == 1
+    assert a.get(7).ttft_parts == b.get(7).ttft_parts

@@ -1,0 +1,190 @@
+"""Edge-case tests for the flight recorder's metrics sketches and the
+SLO ledger's window accounting:
+
+  * `Histogram.quantile` — the documented ``sqrt(growth) - 1`` relative
+    error bound holds for arbitrary positive samples (property test via
+    the hypothesis shim), and the rank semantics match a sorted-list
+    oracle;
+  * zero / negative / sub-``min_value`` observations clamp into the
+    underflow bucket (reported as 0.0) without corrupting min/max/sum;
+  * NaN and inf contamination surface as NaN / inf quantiles instead of
+    silently vanishing;
+  * `SLOLedger` window boundaries — completions landing exactly on a
+    window edge score in the NEXT window, windows with no scored
+    completions never materialize (empty window == absent, attainment
+    NaN only via an explicit empty `WindowAttainment`), and
+    handoff-reason migration pauses are accounted under "handoff" and
+    NEVER double-counted under "migration".
+"""
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.obs import SLOLedger
+from repro.obs.events import Event
+from repro.obs.metrics import Histogram, MetricsRegistry, RequestAggregate
+from repro.obs.slo import WindowAttainment
+
+
+# ---------------------------------------------------------------------------
+# Histogram quantile error bound (property)
+
+
+@st.composite
+def _samples(draw):
+    """1..60 positive floats spanning ~9 decades (integers mapped —
+    the shim has no st.floats)."""
+    n = draw(st.integers(1, 60))
+    return [draw(st.integers(1, 10 ** 9)) * 1e-6 for _ in range(n)]
+
+
+@settings(max_examples=60)
+@given(values=_samples(), q_pct=st.integers(0, 100))
+def test_quantile_relative_error_bound(values, q_pct):
+    h = Histogram(growth=1.1)
+    for v in values:
+        h.observe(v)
+    q = q_pct / 100.0
+    est = h.quantile(q)
+    # the sketch's rank semantics: first bucket whose cumulative count
+    # reaches rank q*(n-1)+1 — the sorted-list element at that rank
+    rank = q * (len(values) - 1) + 1
+    truth = sorted(values)[math.ceil(rank) - 1]
+    bound = math.sqrt(h.growth) - 1.0
+    assert abs(est - truth) <= truth * (bound + 1e-9), (
+        f"q={q}: estimate {est} vs truth {truth} breaks the "
+        f"sqrt(growth)-1 = {bound:.4f} relative-error contract")
+
+
+@settings(max_examples=30)
+@given(values=_samples())
+def test_quantile_is_monotone_in_q(values):
+    h = Histogram()
+    for v in values:
+        h.observe(v)
+    qs = [h.quantile(i / 10.0) for i in range(11)]
+    assert qs == sorted(qs)
+    bound = math.sqrt(h.growth) - 1.0
+    assert h.quantile(1.0) == pytest.approx(h.max, rel=bound + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Underflow clamping and contamination
+
+
+def test_zero_and_negative_clamp_to_underflow_bucket():
+    h = Histogram(min_value=1e-9)
+    for v in (0.0, -5.0, 5e-10, -0.0):
+        h.observe(v)
+    # everything below min_value reports as 0.0 at every quantile
+    assert h.quantile(0.0) == 0.0
+    assert h.quantile(1.0) == 0.0
+    # ... but the exact extremes and the running sum are preserved
+    assert h.min == -5.0
+    assert h.max == 5e-10
+    assert h.count == 4
+    assert h.sum == pytest.approx(-5.0 + 5e-10)
+
+
+def test_underflow_mixes_with_regular_observations():
+    h = Histogram(min_value=1e-9)
+    for v in (0.0, -1.0, 0.5, 2.0):
+        h.observe(v)
+    assert h.quantile(0.0) == 0.0          # underflow owns the low ranks
+    assert h.quantile(1.0) == pytest.approx(2.0, rel=0.05)
+    snap = h.snapshot()
+    assert snap["count"] == 4 and snap["min"] == -1.0
+
+
+def test_empty_and_contaminated_sketches():
+    h = Histogram()
+    assert math.isnan(h.quantile(0.5))
+    assert math.isnan(h.mean)
+    h.observe(1.0)
+    h.observe(math.nan)
+    assert math.isnan(h.quantile(0.5))     # NaN propagates, like np
+    g = Histogram()
+    g.observe(1.0)
+    g.observe(math.inf)
+    assert g.quantile(1.0) == math.inf
+    with pytest.raises(ValueError):
+        g.quantile(1.5)
+    with pytest.raises(ValueError):
+        Histogram(growth=1.0)
+
+
+def test_request_aggregate_empty_matches_nan_shape():
+    agg = RequestAggregate()
+    m = agg.metrics()
+    assert m["completed"] == 0
+    assert all(math.isnan(m[k]) for k in
+               ("ttft_mean_s", "ttft_p99_s", "tpot_mean_s", "tpot_p99_s"))
+    agg.observe(0.1, 0.01)
+    m = agg.metrics()
+    assert m["completed"] == 1 and m["ttft_mean_s"] == pytest.approx(0.1)
+
+
+def test_registry_families_are_stable_and_sorted():
+    reg = MetricsRegistry()
+    c = reg.counter("done", label="phi")
+    assert reg.counter("done", label="phi") is c
+    reg.counter("done", label="gen").inc(2)
+    c.inc()
+    snap = reg.snapshot()
+    assert snap["counters"] == {"done{label=gen}": 2.0,
+                                "done{label=phi}": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# SLOLedger window boundaries + pause attribution
+
+
+def _complete(seq, ts, label, ttft_s, tpot_s=0.001):
+    return Event(seq, ts, "request.complete", "e0", seq, label,
+                 {"ttft_s": ttft_s, "tpot_s": tpot_s})
+
+
+def test_window_edge_scores_in_next_window():
+    led = SLOLedger({"phi": (0.1, None)}, window_s=1.0, t0=100.0)
+    led.observe(_complete(0, 100.0, "phi", 0.05))    # window 0 start
+    led.observe(_complete(1, 100.999, "phi", 0.05))  # still window 0
+    led.observe(_complete(2, 101.0, "phi", 0.5))     # EXACTLY the edge
+    ws = led.windows("phi")
+    assert [w.window for w in ws] == [0, 1]
+    assert ws[0].scored == 2 and ws[0].ok == 2
+    assert ws[1].scored == 1 and ws[1].ok == 0
+    assert ws[1].t_end == pytest.approx(102.0)
+
+
+def test_empty_windows_never_materialize():
+    led = SLOLedger({"phi": (0.1, None)}, window_s=1.0, t0=100.0)
+    led.observe(_complete(0, 100.5, "phi", 0.05))
+    led.observe(_complete(1, 105.5, "phi", 0.05))    # 4 silent windows
+    assert [w.window for w in led.windows("phi")] == [0, 5]
+    # unscored labels contribute completions but no windows at all
+    led.observe(_complete(2, 100.6, "unscored", 9.9))
+    assert led.windows("unscored") == []
+    assert led.completed()["unscored"] == 1
+    assert "unscored" not in led.attainment()
+    # an explicitly empty window reports NaN attainment, not a crash
+    assert math.isnan(WindowAttainment(0, 101.0, "phi", 0, 0).attainment)
+
+
+def test_handoff_and_migration_pauses_never_double_count():
+    led = SLOLedger(window_s=1.0, t0=0.0)
+    mk = lambda seq, reason: Event(
+        seq, 0.5, "migration.pause", "e0", seq, "phi",
+        {"pause_s": 0.01, "reason": reason})
+    led.observe(mk(0, "handoff"))
+    led.observe(mk(1, "retire"))
+    led.observe(mk(2, "handoff"))
+    led.observe(mk(3, ""))
+    acc = led.pause_accounting()
+    assert acc["handoff"]["count"] == 2
+    assert acc["migration"]["count"] == 2
+    assert acc["handoff"]["total_s"] == pytest.approx(0.02)
+    assert acc["migration"]["total_s"] == pytest.approx(0.02)
+    # every pause lands in exactly one cause: totals add up
+    total = sum(acc[c]["total_s"] for c in ("handoff", "migration"))
+    assert total == pytest.approx(0.04)
